@@ -1,0 +1,56 @@
+"""Kernel micro-bench: per-call time of the jnp reference paths (the kernels
+themselves run interpret-mode on CPU, so wall-times are structural only) and
+the block-pair schedule's FLOP savings (the number that matters on TPU)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.models.attention import _block_pairs
+
+
+def _time(f, *args, reps=3):
+    f(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> list:
+    rows = []
+    rng = np.random.default_rng(0)
+    B, S, H, K, hd = 1, 1024, 8, 2, 64
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)), jnp.float32)
+
+    fa = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v, causal=True))
+    rows.append(("attention_ref_1k", _time(fa, q, k, v), ""))
+
+    x = jnp.asarray(rng.normal(size=(8, 512, 1024)), jnp.bfloat16)
+    sc = jnp.ones((1024,), jnp.float32)
+    rn = jax.jit(lambda x, s: ref.rmsnorm_ref(x, s))
+    rows.append(("rmsnorm_ref_4M", _time(rn, x, sc), ""))
+
+    # block-pair schedule density: compiled attention FLOPs vs dense S^2
+    for S2, win in ((32768, None), (32768, 4096), (524288, 4096)):
+        nq = S2 // 512
+        pairs = len(_block_pairs(nq, nq, 512, 512, causal=True, window=win))
+        density = pairs / (nq * nq)
+        rows.append((f"attn_sched_S{S2}_win{win}", 0.0, f"density={density:.4f}"))
+    return rows
+
+
+def main() -> None:
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

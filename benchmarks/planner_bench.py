@@ -1,0 +1,66 @@
+"""Planner quality + speed: heuristic optimality gap vs the exact solver on
+small/medium instances, and runtime scaling (name,us_per_call,derived CSV)."""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import (Objective, exact_min_period, make_platform,
+                        make_workload, period, plan, run_heuristic)
+from repro.sim.generators import gen_instance
+
+
+def optimality_gaps(n_inst: int = 20, seed: int = 0) -> dict:
+    """Mean period gap (heuristic / exact - 1) on instances small enough for
+    the exact bitmask solver (n<=14, p<=9)."""
+    rng = np.random.default_rng(seed)
+    gaps = {c: [] for c in ("H1", "H2", "H3", "auto")}
+    for _ in range(n_inst):
+        n = int(rng.integers(4, 14))
+        p = int(rng.integers(3, 9))
+        wl = make_workload(rng.integers(1, 21, n).astype(float),
+                           rng.integers(1, 51, n + 1).astype(float))
+        pf = make_platform(rng.integers(1, 21, p).astype(float), 10.0)
+        opt = period(wl, pf, exact_min_period(wl, pf))
+        for code in ("H1", "H2", "H3"):
+            r = run_heuristic(code, wl, pf, 0.0)  # run to exhaustion
+            gaps[code].append(r.period / opt - 1)
+        a = plan(wl, pf, Objective("period"), mode="auto")
+        gaps["auto"].append(a.period / opt - 1)
+    return {c: float(np.mean(v)) for c, v in gaps.items()}
+
+
+def timing(reps: int = 10) -> list:
+    """us_per_call for each heuristic at the paper's largest size (n=40, p=100)."""
+    rows = []
+    wl, pf = gen_instance("E2", 40, 100, seed=1)
+    for code in ("H1", "H2", "H3", "H5", "H6"):
+        bound = 0.0 if code in ("H1", "H2", "H3") else 1e18
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            run_heuristic(code, wl, pf, bound)
+        us = (time.perf_counter() - t0) / reps * 1e6
+        rows.append((f"heuristic_{code}_n40_p100", us, ""))
+    t0 = time.perf_counter()
+    plan(wl, pf, Objective("period"), mode="auto")
+    rows.append(("planner_auto_n40_p100", (time.perf_counter() - t0) * 1e6, ""))
+    return rows
+
+
+def run() -> list:
+    rows = timing()
+    gaps = optimality_gaps()
+    for c, g in gaps.items():
+        rows.append((f"gap_vs_exact_{c}", 0.0, f"{g:.4f}"))
+    return rows
+
+
+def main() -> None:
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""Roofline analysis from the dry-run artifacts (deliverable g).
+
+Per (arch x shape x mesh) cell, derive the three roofline terms from the
+per-device partitioned HLO (loop-aware parse, see repro.launch.hlo_analysis):
+
+    compute    = perdev_dot_flops       / PEAK_FLOPS      (197 TF/s bf16/chip)
+    memory     = perdev_bytes_accessed  / HBM_BW          (819 GB/s)
+    collective = perdev_collective_bytes/ LINK_BW         (~50 GB/s/link ICI)
+
+(dividing per-device quantities by per-chip rates is identical to the spec's
+global/(chips x rate) form).  Also reported: the dominant term, the step-time
+bound max(terms), MODEL_FLOPS (analytic useful flops) and the usefulness
+ratio MODEL_FLOPS / HLO_FLOPs, and the roofline fraction
+compute_term / max(terms) (the score: 1.0 = compute-bound at peak).
+
+Reads results/dryrun/*.json; writes results/roofline.csv and prints a table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12        # bf16 per chip
+HBM_BW = 819e9             # bytes/s per chip
+LINK_BW = 50e9             # bytes/s per ICI link
+
+DRYRUN = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
+OUT = pathlib.Path(__file__).resolve().parent.parent / "results" / "roofline.csv"
+
+
+def analyze_record(rec: dict) -> dict:
+    chips = rec["devices"] if rec["mesh"] != "pod16x16" else 256
+    hlo = rec["hlo"]
+    compute = hlo["dot_flops"] / PEAK_FLOPS
+    memory = hlo["bytes_accessed"] / HBM_BW
+    collective = hlo["collective_bytes"] / LINK_BW
+    terms = {"compute": compute, "memory": memory, "collective": collective}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    model_flops = rec.get("model_flops", 0.0)
+    hlo_flops_global = hlo["dot_flops"] * chips
+    useful = model_flops / hlo_flops_global if hlo_flops_global else 0.0
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": compute, "memory_s": memory, "collective_s": collective,
+        "dominant": dominant, "bound_s": bound,
+        "roofline_frac": compute / bound if bound else 0.0,
+        "model_flops": model_flops, "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": useful,
+        "temp_gb": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 1e9,
+        "arg_gb": rec.get("memory", {}).get("argument_size_in_bytes", 0) / 1e9,
+    }
+
+
+def load_all(dryrun_dir=DRYRUN) -> list:
+    rows = []
+    for p in sorted(pathlib.Path(dryrun_dir).glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("ok"):
+            rows.append(analyze_record(rec))
+        else:
+            rows.append({"arch": rec.get("arch"), "shape": rec.get("shape"),
+                         "mesh": rec.get("mesh"), "dominant": "FAILED",
+                         "error": rec.get("error", "?")[:80]})
+    return rows
+
+
+def run() -> list:
+    rows = load_all()
+    header = ("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
+              "bound_s,roofline_frac,useful_ratio,temp_gb")
+    lines = [header]
+    out_rows = []
+    for r in rows:
+        if r.get("dominant") == "FAILED":
+            lines.append(f"{r['arch']},{r['shape']},{r['mesh']},,,,FAILED,,,,")
+            continue
+        lines.append(
+            f"{r['arch']},{r['shape']},{r['mesh']},{r['compute_s']:.4f},"
+            f"{r['memory_s']:.4f},{r['collective_s']:.4f},{r['dominant']},"
+            f"{r['bound_s']:.4f},{r['roofline_frac']:.3f},"
+            f"{r['useful_ratio']:.3f},{r['temp_gb']:.2f}")
+        out_rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
+                         f"frac={r['roofline_frac']:.3f};dom={r['dominant']}"))
+    OUT.parent.mkdir(parents=True, exist_ok=True)
+    OUT.write_text("\n".join(lines))
+    return out_rows
+
+
+def main() -> None:
+    rows = load_all()
+    print(f"{'arch':18s} {'shape':12s} {'mesh':12s} {'comp_s':>8s} {'mem_s':>8s} "
+          f"{'coll_s':>8s} {'dominant':>10s} {'frac':>6s} {'useful':>7s} {'tmpGB':>6s}")
+    for r in rows:
+        if r.get("dominant") == "FAILED":
+            print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:12s} "
+                  f"{'FAILED: ' + r.get('error', ''):s}")
+            continue
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:12s} "
+              f"{r['compute_s']:8.3f} {r['memory_s']:8.3f} {r['collective_s']:8.3f} "
+              f"{r['dominant']:>10s} {r['roofline_frac']:6.3f} "
+              f"{r['useful_ratio']:7.3f} {r['temp_gb']:6.1f}")
+    run()
+    print(f"\nwrote {OUT}")
+
+
+if __name__ == "__main__":
+    main()

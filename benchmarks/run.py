@@ -1,0 +1,38 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+Prints ``name,us_per_call,derived`` CSV rows."""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    sections = []
+
+    from benchmarks import kernel_bench, paper_sim, planner_bench, roofline
+
+    print("# paper_sim: Section 5 simulation study (Figures 2-7 + Table 1)")
+    out = paper_sim.run(full="--full" in sys.argv)
+    for c in out["claims"]:
+        print(f"paper_claim,{0.0},{c}")
+
+    print("# planner_bench: heuristic timing + optimality gaps")
+    for name, us, derived in planner_bench.run():
+        print(f"{name},{us:.1f},{derived}")
+
+    print("# kernel_bench: kernel reference timings + schedule density")
+    for name, us, derived in kernel_bench.run():
+        print(f"{name},{us:.1f},{derived}")
+
+    print("# roofline: per-cell terms from the dry-run (results/roofline.csv)")
+    try:
+        for name, us, derived in roofline.run():
+            print(f"{name},{us:.1f},{derived}")
+    except Exception:
+        print("roofline,0.0,SKIPPED (run repro.launch.dryrun --all first)")
+        traceback.print_exc()
+
+
+if __name__ == "__main__":
+    main()

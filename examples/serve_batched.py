@@ -1,0 +1,19 @@
+"""Batched serving example: continuous-batching decode over a request pool.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+import json
+
+from repro.launch.serve import serve_pool
+
+
+def main() -> None:
+    out = serve_pool(arch="qwen3-4b", smoke=True, n_requests=12, batch=4,
+                     prompt_len=16, max_new=24)
+    print(json.dumps(out, indent=2))
+    assert out["all_done"]
+
+
+if __name__ == "__main__":
+    main()

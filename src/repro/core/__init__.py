@@ -1,0 +1,30 @@
+"""Core paper library: Benoit/Rehn-Sonigo/Robert 2007, bi-criteria pipeline mapping."""
+
+from .workload import Workload, make_workload, uniform_workload
+from .platform import Platform, make_platform, homogeneous_platform, tpu_pod_platform
+from .metrics import (Mapping, period, latency, evaluate, interval_cycle_times,
+                      optimal_latency, single_processor_mapping,
+                      intervals_from_cuts, all_interval_partitions)
+from .heuristics import (HeuristicResult, run_heuristic, NAMES,
+                         FIXED_PERIOD_HEURISTICS, FIXED_LATENCY_HEURISTICS,
+                         sp_mono_p, explo3_mono, explo3_bi, sp_bi_p, sp_mono_l, sp_bi_l)
+from .exact import (brute_force, exact_min_period, dp_homogeneous_period,
+                    dp_speed_ordered, pareto_exact)
+from .pareto import pareto_front, tradeoff_curves, sweep_heuristic
+from .planner import Objective, StagePlan, plan, replan_for_straggler, InfeasiblePlan
+from .deal import DealPlan, plan_with_deal
+
+__all__ = [
+    "Workload", "make_workload", "uniform_workload",
+    "Platform", "make_platform", "homogeneous_platform", "tpu_pod_platform",
+    "Mapping", "period", "latency", "evaluate", "interval_cycle_times",
+    "optimal_latency", "single_processor_mapping", "intervals_from_cuts",
+    "all_interval_partitions",
+    "HeuristicResult", "run_heuristic", "NAMES",
+    "FIXED_PERIOD_HEURISTICS", "FIXED_LATENCY_HEURISTICS",
+    "sp_mono_p", "explo3_mono", "explo3_bi", "sp_bi_p", "sp_mono_l", "sp_bi_l",
+    "brute_force", "exact_min_period", "dp_homogeneous_period", "dp_speed_ordered",
+    "pareto_exact", "pareto_front", "tradeoff_curves", "sweep_heuristic",
+    "Objective", "StagePlan", "plan", "replan_for_straggler", "InfeasiblePlan",
+    "DealPlan", "plan_with_deal",
+]

@@ -1,0 +1,100 @@
+"""Deal-skeleton extension (the paper's Section-7 'natural extension').
+
+When a stage interval is both the period bottleneck and splitting is stuck
+(single stage, or no improving cut), the paper suggests nesting a *deal*
+(farm) skeleton: round-robin the tasks of that interval over a GROUP of
+processors.  With a group U processing every |U|-th task, the interval's
+cycle time becomes
+
+    cycle_deal = delta_in/b + w_I / sum_{u in U} s_u + delta_out/b
+
+under perfect dealing (each task goes to a processor proportionally often to
+its speed; the aggregate rate is the sum of speeds), while its LATENCY
+contribution uses the slowest group member (a task may land on it):
+
+    lat_deal = delta_in/b + w_I / min_{u in U} s_u
+
+``plan_with_deal`` runs the base planner, then greedily assigns remaining
+unused processors as replicas of the current bottleneck interval while the
+period improves.  In the TPU mapping this is data parallelism *within* a
+stage group — which the runtime already executes (DP inside a pod) — so the
+extension closes the loop between the paper's future work and what modern
+pipelines actually do.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .metrics import Mapping
+from .planner import Objective, StagePlan, plan
+from .platform import Platform
+from .workload import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class DealPlan:
+    """A stage plan where each interval may own a GROUP of processors."""
+
+    base: StagePlan
+    groups: tuple              # tuple[tuple[int, ...]] — processors per interval
+    period: float
+    latency: float
+
+    @property
+    def num_stages(self) -> int:
+        return self.base.num_stages
+
+
+def _deal_metrics(workload: Workload, platform: Platform, mapping: Mapping,
+                  groups) -> tuple:
+    w, delta, b, s = workload.w, workload.delta, platform.b, platform.s
+    per = 0.0
+    lat = 0.0
+    for (d, e), grp in zip(mapping.intervals, groups):
+        wsum = w[d - 1: e].sum()
+        rate = sum(s[u] for u in grp)
+        cyc = delta[d - 1] / b + wsum / rate + delta[e] / b
+        per = max(per, cyc)
+        lat += delta[d - 1] / b + wsum / min(s[u] for u in grp)
+    lat += delta[workload.n] / b
+    return float(per), float(lat)
+
+
+def plan_with_deal(workload: Workload, platform: Platform,
+                   objective: Optional[Objective] = None,
+                   mode: str = "auto") -> DealPlan:
+    """Base interval plan + greedy deal-replication of the bottleneck stage."""
+    objective = objective or Objective("period")
+    base = plan(workload, platform, objective, mode=mode)
+    used = set(base.mapping.alloc)
+    free = [int(u) for u in platform.sorted_indices() if int(u) not in used]
+    groups = [[u] for u in base.mapping.alloc]
+
+    per, lat = _deal_metrics(workload, platform, base.mapping, groups)
+    while free:
+        # find the bottleneck interval
+        cycles = []
+        for (d, e), grp in zip(base.mapping.intervals, groups):
+            wsum = workload.w[d - 1: e].sum()
+            rate = sum(platform.s[u] for u in grp)
+            cycles.append(workload.delta[d - 1] / platform.b + wsum / rate
+                          + workload.delta[e] / platform.b)
+        j = int(np.argmax(cycles))
+        cand = free[0]
+        trial = [list(g) for g in groups]
+        trial[j].append(cand)
+        new_per, new_lat = _deal_metrics(workload, platform, base.mapping, trial)
+        if new_per >= per - 1e-12:
+            break                      # bottleneck is communication-bound
+        if objective.minimize == "period" and objective.bound is not None \
+                and new_lat > objective.bound + 1e-12:
+            break
+        groups = trial
+        per, lat = new_per, new_lat
+        free.pop(0)
+    return DealPlan(base=base, groups=tuple(tuple(g) for g in groups),
+                    period=per, latency=lat)

@@ -1,0 +1,565 @@
+"""The paper's six polynomial bi-criteria heuristics (Section 4).
+
+All heuristics sort processors by non-increasing speed and start from the
+optimal-latency solution: every stage on the fastest processor.  They then
+repeatedly *split* the interval of the used processor with the largest cycle
+time, enrolling the next fastest unused processor(s).
+
+Fixed-period family (minimize latency under ``period <= P_fix``):
+  - ``sp_mono_p``  (H1)  greedy split, mono-criterion choice
+  - ``explo3_mono`` (H2) 3-way split, mono-criterion choice
+  - ``explo3_bi``  (H3)  3-way split, bi-criteria (min max dLat/dPer) choice
+  - ``sp_bi_p``    (H4)  binary search on authorized latency + bi-criteria split
+
+Fixed-latency family (minimize period under ``latency <= L_fix``):
+  - ``sp_mono_l``  (H5)  greedy split, mono-criterion choice
+  - ``sp_bi_l``    (H6)  bi-criteria choice
+
+Numbering follows the paper's Table 1 (H5/H6 share failure thresholds because
+both fail exactly when ``L_fix`` is below the optimal latency).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional
+
+import numpy as np
+
+from .metrics import Mapping, latency, period
+from .platform import Platform
+from .workload import Workload
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass
+class HeuristicResult:
+    """Outcome of one heuristic run."""
+
+    mapping: Optional[Mapping]
+    period: float
+    latency: float
+    feasible: bool          # constraint satisfied?
+    splits: int             # number of accepted splits
+    name: str
+
+    @classmethod
+    def failure(cls, name: str) -> "HeuristicResult":
+        return cls(None, math.inf, math.inf, False, 0, name)
+
+
+class _State:
+    """Mutable interval mapping state shared by all heuristics."""
+
+    force_reference = False  # class-wide switch: use generator candidate paths
+
+    def __init__(self, workload: Workload, platform: Platform):
+        self.wl = workload
+        self.pf = platform
+        self.order = platform.sorted_indices()   # processors, fastest first
+        self.next_idx = 1                        # next unused processor in `order`
+        fastest = int(self.order[0])
+        # items: list of [d, e, proc], 1-indexed inclusive intervals, chain order.
+        self.items: list = [[1, workload.n, fastest]]
+        self._prefix = workload.prefix_w()
+
+    # -- elementary quantities ------------------------------------------------
+    def interval_w(self, d: int, e: int) -> float:
+        return self._prefix[e] - self._prefix[d - 1]
+
+    def cycle(self, d: int, e: int, proc: int) -> float:
+        wl, pf = self.wl, self.pf
+        return wl.delta[d - 1] / pf.b + self.interval_w(d, e) / pf.s[proc] + wl.delta[e] / pf.b
+
+    def cycles(self) -> np.ndarray:
+        return np.array([self.cycle(d, e, u) for d, e, u in self.items])
+
+    def period(self) -> float:
+        return float(self.cycles().max())
+
+    def latency(self) -> float:
+        wl, pf = self.wl, self.pf
+        tot = sum(wl.delta[d - 1] / pf.b + self.interval_w(d, e) / pf.s[u] for d, e, u in self.items)
+        return float(tot + wl.delta[wl.n] / pf.b)
+
+    def latency_term(self, d: int, e: int, proc: int) -> float:
+        """This interval's contribution to Eq. (2) (input comm + compute)."""
+        return self.wl.delta[d - 1] / self.pf.b + self.interval_w(d, e) / self.pf.s[proc]
+
+    def worst_index(self) -> int:
+        return int(np.argmax(self.cycles()))
+
+    def peek_procs(self, k: int) -> Optional[list]:
+        """The next k fastest unused processors, or None if fewer remain."""
+        if self.next_idx + k > len(self.order):
+            return None
+        return [int(self.order[self.next_idx + i]) for i in range(k)]
+
+    def consume_procs(self, k: int) -> None:
+        self.next_idx += k
+
+    def replace(self, idx: int, parts: list) -> None:
+        self.items[idx : idx + 1] = [list(p) for p in parts]
+
+    def mapping(self) -> Mapping:
+        return Mapping(
+            intervals=tuple((d, e) for d, e, _ in self.items),
+            alloc=tuple(u for _, _, u in self.items),
+        )
+
+    def result(self, name: str, feasible: bool, splits: int) -> HeuristicResult:
+        return HeuristicResult(self.mapping(), self.period(), self.latency(), feasible, splits, name)
+
+
+# ---------------------------------------------------------------------------
+# Candidate enumeration
+# ---------------------------------------------------------------------------
+
+def _two_way_candidates(st: _State, idx: int, jp: int):
+    """All 2-way splits of item idx using new processor jp.
+
+    Yields (parts, new_cycles, d_latency): parts = [(d,c,pa),(c+1,e,pb)] for
+    every cut c and both placements, new_cycles their cycle times, d_latency
+    the global latency delta of applying the split.
+    """
+    d, e, j = st.items[idx]
+    base_lat_term = st.latency_term(d, e, j)
+    for c in range(d, e):
+        for pa, pb in ((j, jp), (jp, j)):
+            parts = [(d, c, pa), (c + 1, e, pb)]
+            cyc = [st.cycle(*p) for p in parts]
+            dlat = sum(st.latency_term(*p) for p in parts) - base_lat_term
+            yield parts, cyc, dlat
+
+
+def _three_way_candidates(st: _State, idx: int, jp: int, jpp: int):
+    """All 3-way splits of item idx over processors {j, jp, jpp} (all 6 perms).
+
+    Falls back to 2-way splits over the same processor choices when the
+    interval has only 2 stages (a 3-way split needs >= 3 stages).
+    """
+    import itertools
+
+    d, e, j = st.items[idx]
+    base_lat_term = st.latency_term(d, e, j)
+    if e - d + 1 >= 3:
+        for c1 in range(d, e - 1):
+            for c2 in range(c1 + 1, e):
+                spans = [(d, c1), (c1 + 1, c2), (c2 + 1, e)]
+                for perm in itertools.permutations((j, jp, jpp)):
+                    parts = [(s0, s1, u) for (s0, s1), u in zip(spans, perm)]
+                    cyc = [st.cycle(*p) for p in parts]
+                    dlat = sum(st.latency_term(*p) for p in parts) - base_lat_term
+                    yield parts, cyc, dlat
+    elif e - d + 1 == 2:
+        spans = [(d, d), (d + 1, e)]
+        for pa, pb in itertools.permutations((j, jp, jpp), 2):
+            parts = [(spans[0][0], spans[0][1], pa), (spans[1][0], spans[1][1], pb)]
+            cyc = [st.cycle(*p) for p in parts]
+            dlat = sum(st.latency_term(*p) for p in parts) - base_lat_term
+            yield parts, cyc, dlat
+
+
+def _pick_mono(candidates, old_cycle: float, lat_limit: float, cur_lat: float):
+    """Mono-criterion choice: min over candidates of max(new cycles), only among
+    strictly improving candidates (max new cycle < old cycle) whose resulting
+    latency respects lat_limit.  Ties broken by latency delta, then shape."""
+    best = None
+    best_key = None
+    for parts, cyc, dlat in candidates:
+        mx = max(cyc)
+        if mx >= old_cycle - _EPS:
+            continue
+        if cur_lat + dlat > lat_limit + _EPS:
+            continue
+        key = (mx, dlat, parts[0][1])
+        if best_key is None or key < best_key:
+            best, best_key = (parts, cyc, dlat), key
+    return best
+
+
+def _pick_bi(candidates, old_cycle: float, lat_limit: float, cur_lat: float):
+    """Bi-criteria choice: min over candidates of max_i dLatency/dPeriod(i)
+    (paper's ratio), among improving candidates respecting lat_limit."""
+    best = None
+    best_key = None
+    for parts, cyc, dlat in candidates:
+        mx = max(cyc)
+        if mx >= old_cycle - _EPS:
+            continue
+        if cur_lat + dlat > lat_limit + _EPS:
+            continue
+        # dPeriod(i) = old worst cycle - new cycle of processor i; all > 0 here.
+        ratio = max(dlat / max(old_cycle - c, _EPS) for c in cyc)
+        key = (ratio, mx, parts[0][1])
+        if best_key is None or key < best_key:
+            best, best_key = (parts, cyc, dlat), key
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Vectorized fast paths (numpy) — bit-identical to the generator versions,
+# asserted by tests/test_heuristics.py::test_fast_paths_match_reference.
+# ---------------------------------------------------------------------------
+
+def _best_split_2way_fast(st: _State, idx: int, jp: int, mode: str,
+                          old_cycle: float, lat_limit: float, cur_lat: float):
+    d, e, j = st.items[idx]
+    if e == d:
+        return None
+    pre, delta, b, s = st._prefix, st.wl.delta, st.pf.b, st.pf.s
+    C = np.arange(d, e)                       # cut points
+    W1 = pre[C] - pre[d - 1]
+    W2 = pre[e] - pre[C]
+    dIn, dMid, dOut = delta[d - 1] / b, delta[C] / b, delta[e] / b
+    inv_j, inv_p = 1.0 / s[j], 1.0 / s[jp]
+    # order A: first part on j, second on jp; order B: swapped.
+    cyc1A = dIn + W1 * inv_j + dMid
+    cyc2A = dMid + W2 * inv_p + dOut
+    cyc1B = dIn + W1 * inv_p + dMid
+    cyc2B = dMid + W2 * inv_j + dOut
+    dlatA = dMid + W2 * (inv_p - inv_j)
+    dlatB = dMid + W1 * (inv_p - inv_j)
+    cyc1 = np.concatenate([cyc1A, cyc1B])
+    cyc2 = np.concatenate([cyc2A, cyc2B])
+    dlat = np.concatenate([dlatA, dlatB])
+    cuts = np.concatenate([C, C])
+    order = np.concatenate([np.zeros(len(C)), np.ones(len(C))])
+    mx = np.maximum(cyc1, cyc2)
+    okay = (mx < old_cycle - _EPS) & (cur_lat + dlat <= lat_limit + _EPS)
+    if not okay.any():
+        return None
+    idxs = np.nonzero(okay)[0]
+    if mode == "mono":
+        keys = (mx[idxs], dlat[idxs], cuts[idxs], order[idxs])
+    else:
+        den1 = np.maximum(old_cycle - cyc1[idxs], _EPS)
+        den2 = np.maximum(old_cycle - cyc2[idxs], _EPS)
+        ratio = np.maximum(dlat[idxs] / den1, dlat[idxs] / den2)
+        keys = (ratio, mx[idxs], cuts[idxs], order[idxs])
+    best = idxs[np.lexsort(keys[::-1])[0]]
+    c = int(cuts[best])
+    if order[best] == 0:
+        parts = [(d, c, j), (c + 1, e, jp)]
+    else:
+        parts = [(d, c, jp), (c + 1, e, j)]
+    return parts, [float(cyc1[best]), float(cyc2[best])], float(dlat[best])
+
+
+_PERMS3 = [(0, 1, 2), (0, 2, 1), (1, 0, 2), (1, 2, 0), (2, 0, 1), (2, 1, 0)]
+
+
+def _best_split_3way_fast(st: _State, idx: int, jp: int, jpp: int, mode: str,
+                          old_cycle: float, lat_limit: float, cur_lat: float):
+    d, e, j = st.items[idx]
+    if e - d + 1 < 3:
+        # fall back to the generator for the 2-stage case (cheap)
+        cands = _three_way_candidates(st, idx, jp, jpp)
+        pick = _pick_mono if mode == "mono" else _pick_bi
+        return pick(cands, old_cycle, lat_limit, cur_lat)
+    pre, delta, b, s = st._prefix, st.wl.delta, st.pf.b, st.pf.s
+    procs = np.array([j, jp, jpp])
+    inv = 1.0 / s[procs]
+    c1, c2 = np.meshgrid(np.arange(d, e - 1), np.arange(d + 1, e), indexing="ij")
+    valid = c2 > c1
+    c1, c2 = c1[valid], c2[valid]
+    W = np.stack([pre[c1] - pre[d - 1], pre[c2] - pre[c1], pre[e] - pre[c2]])   # (3, K)
+    dI = np.stack([np.full_like(c1, delta[d - 1], dtype=float), delta[c1], delta[c2]]) / b
+    dO = np.stack([delta[c1], delta[c2], np.full_like(c1, delta[e], dtype=float)]) / b
+    base_term = delta[d - 1] / b + (pre[e] - pre[d - 1]) / s[j]
+    best_choice, best_key = None, None
+    for pi, perm in enumerate(_PERMS3):
+        invp = inv[list(perm)][:, None]                                          # (3, 1)
+        cyc = dI + W * invp + dO                                                # (3, K)
+        dlat = (dI + W * invp).sum(axis=0) - base_term
+        mx = cyc.max(axis=0)
+        okay = (mx < old_cycle - _EPS) & (cur_lat + dlat <= lat_limit + _EPS)
+        if not okay.any():
+            continue
+        ix = np.nonzero(okay)[0]
+        if mode == "mono":
+            keys = (mx[ix], dlat[ix], c1[ix].astype(float), c2[ix].astype(float))
+        else:
+            ratio = (dlat[ix] / np.maximum(old_cycle - cyc[:, ix], _EPS)).max(axis=0)
+            keys = (ratio, mx[ix], c1[ix].astype(float), c2[ix].astype(float))
+        o = ix[np.lexsort(keys[::-1])[0]]
+        key = tuple(float(k[np.lexsort(keys[::-1])[0]]) for k in keys) + (pi,)
+        if best_key is None or key < best_key:
+            u = [procs[q] for q in perm]
+            spans = [(d, int(c1[o])), (int(c1[o]) + 1, int(c2[o])), (int(c2[o]) + 1, e)]
+            parts = [(s0, s1, int(uu)) for (s0, s1), uu in zip(spans, u)]
+            cycv = [float(v) for v in cyc[:, o]]
+            best_choice, best_key = (parts, cycv, float(dlat[o])), key
+    return best_choice
+
+
+# ---------------------------------------------------------------------------
+# Generic splitting loop
+# ---------------------------------------------------------------------------
+
+def _splitting_loop(
+    st: _State,
+    *,
+    n_new_procs: int,
+    gen_candidates: Callable,
+    pick: Callable,
+    stop_when_period_leq: float = -math.inf,
+    lat_limit: float = math.inf,
+) -> int:
+    """Run the paper's splitting loop on state ``st``.
+
+    Repeatedly: if the current period already satisfies ``stop_when_period_leq``
+    stop; otherwise split the worst interval using the next ``n_new_procs``
+    fastest unused processors, choosing the candidate with ``pick``.  Stops
+    when stuck (no improving candidate / no processors / single-stage worst
+    interval).  Returns the number of accepted splits.
+
+    ``pick``/``gen_candidates`` identify the strategy; the loop dispatches to
+    the vectorized fast paths (identical results, see tests) unless
+    ``st.force_reference`` is set.
+    """
+    mode = "mono" if pick is _pick_mono else "bi"
+    fast = not getattr(st, "force_reference", False)
+    splits = 0
+    while True:
+        if st.period() <= stop_when_period_leq + _EPS:
+            break
+        idx = st.worst_index()
+        d, e, j = st.items[idx]
+        if e == d:  # single stage: cannot split
+            break
+        new_procs = st.peek_procs(n_new_procs)
+        if new_procs is None:
+            break
+        old_cycle = st.cycle(d, e, j)
+        cur_lat = st.latency()
+        if fast and n_new_procs == 1:
+            choice = _best_split_2way_fast(st, idx, new_procs[0], mode, old_cycle, lat_limit, cur_lat)
+        elif fast and n_new_procs == 2:
+            choice = _best_split_3way_fast(st, idx, new_procs[0], new_procs[1], mode,
+                                           old_cycle, lat_limit, cur_lat)
+        else:
+            choice = pick(gen_candidates(st, idx, *new_procs), old_cycle, lat_limit, cur_lat)
+        if choice is None:
+            break
+        parts, _, _ = choice
+        st.replace(idx, parts)
+        # Only consume the processors actually enrolled (a 3-way fallback on a
+        # 2-stage interval may use just one of the pair).
+        used = {u for _, _, u in parts} - {j}
+        st.consume_procs(n_new_procs if len(used) == n_new_procs else len(used))
+        splits += 1
+    return splits
+
+
+# ---------------------------------------------------------------------------
+# Fixed-period heuristics (minimize latency s.t. period <= P_fix)
+# ---------------------------------------------------------------------------
+
+def sp_mono_p(workload: Workload, platform: Platform, p_fix: float) -> HeuristicResult:
+    """H1 'Sp mono P': greedy mono-criterion splitting until period <= p_fix."""
+    st = _State(workload, platform)
+    splits = _splitting_loop(
+        st, n_new_procs=1, gen_candidates=_two_way_candidates, pick=_pick_mono,
+        stop_when_period_leq=p_fix,
+    )
+    return st.result("Sp mono P", st.period() <= p_fix + _EPS, splits)
+
+
+def explo3_mono(workload: Workload, platform: Platform, p_fix: float) -> HeuristicResult:
+    """H2 '3-Explo mono': 3-way exploration, mono-criterion choice."""
+    st = _State(workload, platform)
+    splits = _splitting_loop(
+        st, n_new_procs=2, gen_candidates=_three_way_candidates, pick=_pick_mono,
+        stop_when_period_leq=p_fix,
+    )
+    return st.result("3-Explo mono", st.period() <= p_fix + _EPS, splits)
+
+
+def explo3_bi(workload: Workload, platform: Platform, p_fix: float) -> HeuristicResult:
+    """H3 '3-Explo bi': 3-way exploration, bi-criteria (dLat/dPer) choice."""
+    st = _State(workload, platform)
+    splits = _splitting_loop(
+        st, n_new_procs=2, gen_candidates=_three_way_candidates, pick=_pick_bi,
+        stop_when_period_leq=p_fix,
+    )
+    return st.result("3-Explo bi", st.period() <= p_fix + _EPS, splits)
+
+
+def _bi_split_under_latency(workload: Workload, platform: Platform, p_fix: float,
+                            lat_limit: float) -> HeuristicResult:
+    st = _State(workload, platform)
+    splits = _splitting_loop(
+        st, n_new_procs=1, gen_candidates=_two_way_candidates, pick=_pick_bi,
+        stop_when_period_leq=p_fix, lat_limit=lat_limit,
+    )
+    feasible = st.period() <= p_fix + _EPS and st.latency() <= lat_limit + _EPS
+    return st.result("Sp bi P(inner)", feasible, splits)
+
+
+def sp_bi_p(workload: Workload, platform: Platform, p_fix: float,
+            iters: int = 40) -> HeuristicResult:
+    """H4 'Sp bi P': binary search over the authorized latency increase; at each
+    probe, bi-criteria splitting constrained to the authorized latency; keep the
+    smallest authorized latency that still yields ``period <= p_fix``."""
+    lat_opt = _State(workload, platform).latency()
+    # Upper bound: every stage its own interval on the slowest processor.
+    s_min = float(platform.s.min())
+    lat_ub = float(
+        workload.delta[:-1].sum() / platform.b
+        + workload.total_work / s_min
+        + workload.delta[-1] / platform.b
+    )
+    lo, hi = lat_opt, max(lat_ub, lat_opt)
+    best: Optional[HeuristicResult] = None
+    # Ensure feasibility at the upper end first.
+    probe = _bi_split_under_latency(workload, platform, p_fix, hi)
+    if probe.feasible:
+        best = probe
+    else:
+        return HeuristicResult(probe.mapping, probe.period, probe.latency, False, probe.splits, "Sp bi P")
+    for _ in range(iters):
+        mid = 0.5 * (lo + hi)
+        probe = _bi_split_under_latency(workload, platform, p_fix, mid)
+        if probe.feasible:
+            hi = mid
+            if probe.latency < best.latency - _EPS or (
+                abs(probe.latency - best.latency) <= _EPS and probe.period < best.period
+            ):
+                best = probe
+        else:
+            lo = mid
+    return HeuristicResult(best.mapping, best.period, best.latency, True, best.splits, "Sp bi P")
+
+
+# ---------------------------------------------------------------------------
+# Fixed-latency heuristics (minimize period s.t. latency <= L_fix)
+# ---------------------------------------------------------------------------
+
+def sp_mono_l(workload: Workload, platform: Platform, l_fix: float) -> HeuristicResult:
+    """H5 'Sp mono L': greedy mono-criterion splitting while latency <= l_fix."""
+    st = _State(workload, platform)
+    if st.latency() > l_fix + _EPS:
+        return HeuristicResult.failure("Sp mono L")
+    splits = _splitting_loop(
+        st, n_new_procs=1, gen_candidates=_two_way_candidates, pick=_pick_mono,
+        lat_limit=l_fix,
+    )
+    return st.result("Sp mono L", True, splits)
+
+
+def sp_bi_l(workload: Workload, platform: Platform, l_fix: float) -> HeuristicResult:
+    """H6 'Sp bi L': bi-criteria splitting while latency <= l_fix."""
+    st = _State(workload, platform)
+    if st.latency() > l_fix + _EPS:
+        return HeuristicResult.failure("Sp bi L")
+    splits = _splitting_loop(
+        st, n_new_procs=1, gen_candidates=_two_way_candidates, pick=_pick_bi,
+        lat_limit=l_fix,
+    )
+    return st.result("Sp bi L", True, splits)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+FIXED_PERIOD_HEURISTICS = {
+    "H1": sp_mono_p,
+    "H2": explo3_mono,
+    "H3": explo3_bi,
+    "H4": sp_bi_p,
+}
+
+FIXED_LATENCY_HEURISTICS = {
+    "H5": sp_mono_l,
+    "H6": sp_bi_l,
+}
+
+NAMES = {
+    "H1": "Sp mono P",
+    "H2": "3-Explo mono",
+    "H3": "3-Explo bi",
+    "H4": "Sp bi P",
+    "H5": "Sp mono L",
+    "H6": "Sp bi L",
+}
+
+
+def split_trajectory(code: str, workload: Workload, platform: Platform) -> list:
+    """Run a fixed-period heuristic to exhaustion (bound -inf) and return the
+    (period, latency) trajectory: the state after 0, 1, 2, ... accepted splits.
+
+    Because the split choices of H1/H2/H3 do not depend on the period bound
+    (only the stopping point does), the result of the heuristic for ANY bound
+    P_fix is the first trajectory state with period <= P_fix.  For H4 the
+    trajectory of its inner bi-criteria splitter (whose top-of-binary-search
+    probe is latency-unconstrained) characterizes feasibility the same way.
+    This turns an O(bounds) family of runs into one run — used by the
+    simulation harness and the failure-threshold computation.
+    """
+    st = _State(workload, platform)
+    traj = [(st.period(), st.latency())]
+    st_trace = traj
+    if code == "H1":
+        gen, pick, k = _two_way_candidates, _pick_mono, 1
+    elif code == "H2":
+        gen, pick, k = _three_way_candidates, _pick_mono, 2
+    elif code == "H3":
+        gen, pick, k = _three_way_candidates, _pick_bi, 2
+    elif code == "H4":
+        gen, pick, k = _two_way_candidates, _pick_bi, 1
+    else:
+        raise KeyError(f"trajectories are for fixed-period heuristics, not {code}")
+    # Re-run the loop manually so we can record each accepted state.
+    while True:
+        idx = st.worst_index()
+        d, e, j = st.items[idx]
+        if e == d:
+            break
+        new_procs = st.peek_procs(k)
+        if new_procs is None:
+            break
+        old_cycle = st.cycle(d, e, j)
+        cur_lat = st.latency()
+        mode = "mono" if pick is _pick_mono else "bi"
+        if not _State.force_reference and k == 1:
+            choice = _best_split_2way_fast(st, idx, new_procs[0], mode, old_cycle, math.inf, cur_lat)
+        elif not _State.force_reference and k == 2:
+            choice = _best_split_3way_fast(st, idx, new_procs[0], new_procs[1], mode,
+                                           old_cycle, math.inf, cur_lat)
+        else:
+            choice = pick(gen(st, idx, *new_procs), old_cycle, math.inf, cur_lat)
+        if choice is None:
+            break
+        parts, _, _ = choice
+        st.replace(idx, parts)
+        used = {u for _, _, u in parts} - {j}
+        st.consume_procs(k if len(used) == k else len(used))
+        st_trace.append((st.period(), st.latency()))
+    return traj
+
+
+import contextlib
+
+
+@contextlib.contextmanager
+def reference_mode():
+    """Force the readable generator-based candidate paths (for tests that
+    check the vectorized fast paths are behavior-identical)."""
+    old = _State.force_reference
+    _State.force_reference = True
+    try:
+        yield
+    finally:
+        _State.force_reference = old
+
+
+def run_heuristic(code: str, workload: Workload, platform: Platform, bound: float) -> HeuristicResult:
+    if code in FIXED_PERIOD_HEURISTICS:
+        return FIXED_PERIOD_HEURISTICS[code](workload, platform, bound)
+    if code in FIXED_LATENCY_HEURISTICS:
+        return FIXED_LATENCY_HEURISTICS[code](workload, platform, bound)
+    raise KeyError(f"unknown heuristic {code!r}")

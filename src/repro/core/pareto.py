@@ -1,0 +1,74 @@
+"""Bi-criteria sweeps: trace (period, latency) trade-off curves with the
+paper's heuristics, and compute Pareto fronts."""
+
+from __future__ import annotations
+
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .heuristics import (FIXED_LATENCY_HEURISTICS, FIXED_PERIOD_HEURISTICS,
+                         HeuristicResult, run_heuristic)
+from .platform import Platform
+from .workload import Workload
+
+
+def pareto_front(points: Iterable, rtol: float = 1e-9) -> list:
+    """Non-dominated subset of (period, latency) points, sorted by period.
+    Points whose coordinates differ by less than ``rtol`` (relative) are
+    considered equal, so floating-point noise cannot leak dominated points."""
+    pts = sorted(set((float(a), float(b)) for a, b in points))
+    front = []
+    best_lat = float("inf")
+    for per, lat in pts:
+        if lat < best_lat * (1 - rtol):
+            # drop a predecessor with (numerically) equal period but worse latency
+            while front and per <= front[-1][0] * (1 + rtol) and lat < front[-1][1]:
+                front.pop()
+            front.append((per, lat))
+            best_lat = lat
+    return front
+
+
+def sweep_heuristic(
+    code: str,
+    workload: Workload,
+    platform: Platform,
+    bounds: Sequence[float],
+) -> list:
+    """Run heuristic ``code`` for every bound; return list of HeuristicResult."""
+    return [run_heuristic(code, workload, platform, float(b)) for b in bounds]
+
+
+def default_period_grid(workload: Workload, platform: Platform, k: int = 20) -> np.ndarray:
+    """Geometric grid of fixed-period bounds between the best single-processor
+    cycle / p and the single-processor period."""
+    from .metrics import period, single_processor_mapping
+
+    hi = period(workload, platform, single_processor_mapping(workload, platform.fastest()))
+    lo = max(hi / (2 * platform.p), 1e-9)
+    return np.geomspace(lo, hi, k)
+
+
+def default_latency_grid(workload: Workload, platform: Platform, k: int = 20) -> np.ndarray:
+    from .metrics import optimal_latency
+
+    lo = optimal_latency(workload, platform)
+    hi = lo * 5.0
+    return np.linspace(lo, hi, k)
+
+
+def tradeoff_curves(workload: Workload, platform: Platform, k: int = 20) -> dict:
+    """For each heuristic, the list of achieved (period, latency) points over a
+    grid of bounds (the paper's Figures 2-7 are averages of these across
+    random instances)."""
+    out = {}
+    pgrid = default_period_grid(workload, platform, k)
+    lgrid = default_latency_grid(workload, platform, k)
+    for code in FIXED_PERIOD_HEURISTICS:
+        res = sweep_heuristic(code, workload, platform, pgrid)
+        out[code] = [(r.period, r.latency) for r in res if r.feasible]
+    for code in FIXED_LATENCY_HEURISTICS:
+        res = sweep_heuristic(code, workload, platform, lgrid)
+        out[code] = [(r.period, r.latency) for r in res if r.feasible]
+    return out

@@ -1,0 +1,174 @@
+"""High-level planner API: the paper's technique as a framework feature.
+
+``plan()`` takes a workload (layers as pipeline stages) and a platform (pods
+as processors) and returns a :class:`StagePlan` that the pipeline runtime
+(:mod:`repro.pipeline.runtime`) executes.  The default "auto" mode runs the
+paper's full heuristic portfolio plus the polynomial DP baselines and returns
+the best feasible mapping — a beyond-paper ensemble that strictly dominates
+any single heuristic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from .exact import dp_speed_ordered, exact_min_period
+from .heuristics import (FIXED_LATENCY_HEURISTICS, FIXED_PERIOD_HEURISTICS,
+                         HeuristicResult, run_heuristic)
+from .metrics import Mapping, evaluate, optimal_latency, period, single_processor_mapping
+from .platform import Platform
+from .workload import Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    """Bi-criteria objective: minimize ``minimize`` subject to the other
+    criterion being <= ``bound`` (bound=None -> unconstrained)."""
+
+    minimize: str                 # "latency" | "period"
+    bound: Optional[float] = None
+
+    def __post_init__(self):
+        if self.minimize not in ("latency", "period"):
+            raise ValueError(self.minimize)
+
+
+@dataclasses.dataclass(frozen=True)
+class StagePlan:
+    """A planned pipeline mapping, ready for the runtime."""
+
+    mapping: Mapping
+    period: float
+    latency: float
+    planner: str                  # which algorithm produced it
+    # Runtime realization data:
+    stage_sizes: tuple            # layers per stage, chain order
+    max_stage_size: int           # padded stage depth for the stacked runtime
+    padding_overhead: float       # wasted fraction of padded compute slots
+
+    @property
+    def num_stages(self) -> int:
+        return len(self.stage_sizes)
+
+
+def _realize(mapping: Mapping, per: float, lat: float, name: str) -> StagePlan:
+    sizes = tuple(e - d + 1 for d, e in mapping.intervals)
+    mx = max(sizes)
+    total_slots = mx * len(sizes)
+    pad = 1.0 - sum(sizes) / total_slots
+    return StagePlan(mapping, per, lat, name, sizes, mx, pad)
+
+
+def plan(
+    workload: Workload,
+    platform: Platform,
+    objective: Objective,
+    mode: str = "auto",
+    exact_max_p: int = 12,
+) -> StagePlan:
+    """Compute a stage plan.
+
+    mode:
+      - one of "H1".."H6": the corresponding paper heuristic (bound required);
+      - "auto": portfolio — all applicable heuristics + DP baselines (+ exact
+        when p is small), best feasible result wins;
+      - "exact": exact solver (exponential in p; raises if p > exact_max_p).
+    """
+    if mode in FIXED_PERIOD_HEURISTICS or mode in FIXED_LATENCY_HEURISTICS:
+        if objective.bound is None:
+            raise ValueError("paper heuristics need a bound")
+        res = run_heuristic(mode, workload, platform, objective.bound)
+        if not res.feasible or res.mapping is None:
+            raise InfeasiblePlan(f"{mode} found no feasible mapping for {objective}")
+        return _realize(res.mapping, res.period, res.latency, mode)
+
+    if mode == "exact":
+        if platform.p > exact_max_p:
+            raise ValueError(f"exact solver limited to p <= {exact_max_p}")
+        cap = objective.bound if objective.minimize == "period" else math.inf
+        mp = exact_min_period(workload, platform, latency_cap=cap if cap is not None else math.inf)
+        if mp is None:
+            raise InfeasiblePlan("exact: infeasible")
+        per, lat = evaluate(workload, platform, mp)
+        return _realize(mp, per, lat, "exact")
+
+    if mode != "auto":
+        raise KeyError(mode)
+
+    candidates: list = []
+
+    def add(mp: Optional[Mapping], name: str):
+        if mp is None:
+            return
+        per, lat = evaluate(workload, platform, mp)
+        candidates.append((mp, per, lat, name))
+
+    # Always valid fallback: everything on the fastest processor.
+    add(single_processor_mapping(workload, platform.fastest()), "single")
+
+    if objective.minimize == "latency":
+        bound = objective.bound if objective.bound is not None else math.inf
+        for code in FIXED_PERIOD_HEURISTICS:
+            res = run_heuristic(code, workload, platform, bound)
+            if res.feasible and res.mapping is not None:
+                candidates.append((res.mapping, res.period, res.latency, code))
+    else:
+        bound = objective.bound if objective.bound is not None else math.inf
+        for code in FIXED_LATENCY_HEURISTICS:
+            res = run_heuristic(code, workload, platform, bound)
+            if res.feasible and res.mapping is not None:
+                candidates.append((res.mapping, res.period, res.latency, code))
+        add(dp_speed_ordered(workload, platform, latency_cap=bound), "dp-speed-ordered")
+        if platform.p <= exact_max_p:
+            add(exact_min_period(workload, platform, latency_cap=bound), "exact")
+
+    # Filter by constraint, sort by objective (tie-break on the other).
+    feas = []
+    for mp, per, lat, name in candidates:
+        if objective.bound is not None:
+            other = per if objective.minimize == "latency" else lat
+            if other > objective.bound + 1e-12:
+                continue
+        key = (lat, per) if objective.minimize == "latency" else (per, lat)
+        feas.append((key, mp, per, lat, name))
+    if not feas:
+        raise InfeasiblePlan(f"no planner produced a feasible mapping for {objective}")
+    feas.sort(key=lambda t: t[0])
+    _, mp, per, lat, name = feas[0]
+    return _realize(mp, per, lat, f"auto({name})")
+
+
+class InfeasiblePlan(RuntimeError):
+    pass
+
+
+def replan_for_straggler(
+    workload: Workload,
+    platform: Platform,
+    current: StagePlan,
+    observed_stage_times: np.ndarray,
+    slowdown_threshold: float = 1.3,
+) -> tuple:
+    """Straggler mitigation: compare observed per-stage step times against the
+    plan's predicted cycle times; degrade the effective speed of any processor
+    running slower than ``slowdown_threshold`` x predicted; re-plan.
+
+    Returns (new_plan, degraded_platform).  This is exactly the paper's
+    heterogeneous-processor scenario arising *online* on homogeneous hardware.
+    """
+    from .metrics import interval_cycle_times
+
+    predicted = interval_cycle_times(workload, platform, current.mapping)
+    observed = np.asarray(observed_stage_times, dtype=float)
+    if observed.shape != predicted.shape:
+        raise ValueError("one observation per stage required")
+    pf = platform
+    for j, (obs, pred) in enumerate(zip(observed, predicted)):
+        if pred > 0 and obs / pred > slowdown_threshold:
+            pf = pf.degrade(current.mapping.alloc[j], obs / pred)
+    new = plan(workload, pf, Objective("period", bound=None), mode="auto")
+    return new, pf

@@ -1,0 +1,85 @@
+"""Target platform description — Communication-Homogeneous platforms.
+
+Different-speed processors ``s_u`` interconnected by links of identical
+bandwidth ``b`` (paper Section 2).  The one-port linear cost model is captured
+by the metric functions in :mod:`repro.core.metrics`; the platform itself only
+stores speeds and bandwidth.
+
+For the TPU adaptation a "processor" is a pod slice: its speed is
+``chips * peak_flops * efficiency`` and can be degraded online to model
+stragglers (see :mod:`repro.pipeline.replan`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Platform:
+    """p processors with speeds ``s`` and homogeneous link bandwidth ``b``."""
+
+    s: np.ndarray          # shape (p,), processor speeds (flops / time-unit)
+    b: float               # link bandwidth (bytes / time-unit), identical links
+    name: str = "platform"
+
+    def __post_init__(self):
+        s = np.asarray(self.s, dtype=np.float64)
+        object.__setattr__(self, "s", s)
+        if s.ndim != 1 or len(s) == 0:
+            raise ValueError("s must be a non-empty 1-D array")
+        if (s <= 0).any():
+            raise ValueError("processor speeds must be positive")
+        if self.b <= 0:
+            raise ValueError("bandwidth must be positive")
+
+    @property
+    def p(self) -> int:
+        return int(len(self.s))
+
+    def sorted_indices(self) -> np.ndarray:
+        """Processor indices by non-increasing speed (ties broken by index,
+        matching the paper's 'sort processors by non-increasing speed')."""
+        return np.lexsort((np.arange(self.p), -self.s))
+
+    def fastest(self) -> int:
+        return int(self.sorted_indices()[0])
+
+    def degrade(self, proc: int, factor: float) -> "Platform":
+        """Return a platform where processor ``proc`` runs ``factor`` times slower.
+        Used for straggler modeling."""
+        if not (0 < factor):
+            raise ValueError("factor must be positive")
+        s = self.s.copy()
+        s[proc] = s[proc] / factor
+        return Platform(s, self.b, name=f"{self.name}-degraded")
+
+
+def make_platform(s: Sequence[float], b: float, name: str = "platform") -> Platform:
+    return Platform(np.asarray(s, dtype=np.float64), float(b), name)
+
+
+def homogeneous_platform(p: int, s: float = 1.0, b: float = 10.0) -> Platform:
+    return Platform(np.full(p, s), b, name=f"homog-{p}")
+
+
+def tpu_pod_platform(
+    pods: int,
+    chips_per_pod: int = 256,
+    peak_flops: float = 197e12,
+    efficiency: float = 0.4,
+    dcn_bandwidth: float = 25e9,
+    degraded: dict | None = None,
+) -> Platform:
+    """A multi-pod TPU platform for the planner: one 'processor' per pod.
+
+    ``degraded`` maps pod index -> slowdown factor (straggler modeling).
+    """
+    s = np.full(pods, chips_per_pod * peak_flops * efficiency)
+    if degraded:
+        for k, f in degraded.items():
+            s[k] /= f
+    return Platform(s, dcn_bandwidth, name=f"tpu-{pods}x{chips_per_pod}")

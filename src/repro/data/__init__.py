@@ -1,0 +1,3 @@
+from .pipeline import SyntheticLMDataset, ShardedLoader, make_batch_sharding
+
+__all__ = ["SyntheticLMDataset", "ShardedLoader", "make_batch_sharding"]

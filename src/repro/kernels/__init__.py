@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+The paper (pipeline-workflow scheduling) has no kernel-level contribution;
+these kernels implement the substrate's hot spots — attention (prefill +
+decode), fused RMSNorm, and the Mamba2 SSD intra-chunk — as TPU-native
+pallas_call kernels with explicit BlockSpec VMEM tiling.  ``ref.py`` holds
+the pure-jnp oracles; ``ops.py`` the jitted wrappers (interpret mode on CPU).
+"""
+
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,88 @@
+"""Pallas TPU decode attention (flash-decoding style).
+
+Single-token query against a (possibly ring-buffered) KV cache.  Grid:
+(batch, q_heads, num_cache_blocks); the cache-length loop is the innermost
+grid dim with online-softmax scratch, so arbitrarily long caches stream
+through VMEM block by block.  Slot validity (unwritten slots, ring-buffer
+wraparound, sliding-window ageing) is precomputed by the caller as a bool
+mask — the kernel stays pure attention.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, block_c: int):
+    ci = pl.program_id(2)
+    nc = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :].astype(jnp.float32)                  # (hd,)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)               # (bc, hd)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    valid = mask_ref[0, :]                                  # (bc,) bool
+
+    s = jnp.einsum("d,cd->c", q, k) * scale
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_blk = s.max()
+    m_new = jnp.maximum(m_prev, m_blk)
+    p = jnp.exp(s - m_new)
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[0] = alpha * l_ref[0] + p.sum()
+    acc_ref[...] = alpha * acc_ref[...] + jnp.einsum("c,cd->d", p, v)[None]
+    m_ref[0] = m_new
+
+    @pl.when(ci == nc - 1)
+    def _finish():
+        l = jnp.where(l_ref[0] == 0.0, 1.0, l_ref[0])
+        o_ref[0, 0, :] = (acc_ref[0] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array, *, block_c: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B,H,hd); k,v: (B,C,K,hd); mask: (B,C) bool.  Returns (B,H,hd)."""
+    B, H, hd = q.shape
+    C, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_c = min(block_c, C)
+    assert C % block_c == 0
+    nc = C // block_c
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_kernel, scale=scale, block_c=block_c)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, hd), lambda b, h, ci: (b, h, 0)),
+            pl.BlockSpec((1, block_c, 1, hd), lambda b, h, ci: (b, ci, h // G, 0)),
+            pl.BlockSpec((1, block_c, 1, hd), lambda b, h, ci: (b, ci, h // G, 0)),
+            pl.BlockSpec((1, block_c), lambda b, h, ci: (b, ci)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, hd), lambda b, h, ci: (b, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, mask)

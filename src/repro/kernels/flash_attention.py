@@ -1,0 +1,115 @@
+"""Pallas TPU flash attention (causal / sliding-window, GQA).
+
+Grid: (batch, q_heads, num_q_blocks, num_k_blocks) with the KV loop innermost;
+online-softmax statistics (m, l) and the fp32 accumulator live in VMEM scratch
+across KV iterations.  Block shapes are MXU-aligned (q/k blocks multiples of
+128 on the sequence dims, full head_dim lanes).  Out-of-band blocks (future
+blocks under causality, blocks left of the sliding window) are skipped with
+``pl.when`` so they cost neither MXU flops nor VMEM traffic.
+
+GQA is handled in the index maps: query head h reads KV head ``h // group``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Blocks entirely outside the causal / sliding-window band skip all compute.
+    in_band = jnp.bool_(True)
+    if causal:
+        in_band &= k_start <= q_start + block_q - 1
+    if window is not None:
+        in_band &= k_start + block_k - 1 >= q_start - window + 1
+
+    @pl.when(in_band)
+    def _compute():
+        q = q_ref[0, :, 0, :].astype(jnp.float32)          # (bq, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)          # (bk, hd)
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq, bk)
+
+        pq = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        pk = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask &= pq >= pk
+        if window is not None:
+            mask &= (pq - pk) < window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_blk = s.max(axis=1)
+        m_new = jnp.maximum(m_prev, m_blk)
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = alpha * l_ref[...] + p.sum(axis=1)
+        acc_ref[...] = alpha[:, None] * acc_ref[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = l_ref[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,T,K,hd) with H % K == 0.  Returns (B,S,H,hd)."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    nq, nk = S // block_q, T // block_k
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_kernel, scale=scale, causal=causal,
+                               window=window, block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+            pl.BlockSpec((1, block_k, 1, hd), lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, 1, hd), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, S, H, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel for the Mamba2 SSD intra-chunk computation.
+
+For each (batch, chunk, head) grid cell the kernel computes, entirely in VMEM:
+  - the intra-chunk output  y[i] = sum_{j<=i} exp(cum_i - cum_j) dt_j (C_i.B_j) x_j
+  - the chunk's state contribution  S_c = sum_j exp(cum_Q - cum_j) dt_j B_j x_j^T
+  - the chunk decay  exp(cum_Q)
+The O(S)-sequential inter-chunk recurrence stays outside (a cheap
+``lax.scan`` over nc chunk states in the wrapper — it is O(nc) tiny matmuls).
+
+Block shapes: a full (Q, P) x-tile and (Q, N) B/C tiles per head; Q (chunk)
+is a multiple of 128 in production configs, P/N are 64-128 — MXU-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, st_ref, dec_ref):
+    # shapes: x (1,1,Q,1,P); dt (1,1,Q,1); a (1,); b/c (1,1,Q,N)
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)        # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)         # (Q,)
+    A = a_ref[0].astype(jnp.float32)                    # scalar
+    Bm = b_ref[0, 0].astype(jnp.float32)                # (Q, N)
+    Cm = c_ref[0, 0].astype(jnp.float32)                # (Q, N)
+    Q = x.shape[0]
+
+    dA = dt * A                                         # (Q,) log-decay
+    cum = jnp.cumsum(dA)                                # inclusive
+    # L[i,j] = exp(cum_i - cum_j) for j <= i else 0
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())))   # (Q, Q)
+    w = scores * L * dt[None, :]
+    y = jax.lax.dot_general(w, x, (((1,), (0,)), ((), ())))          # (Q, P)
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+
+    dec_state = jnp.exp(cum[-1] - cum) * dt                          # (Q,)
+    st = jax.lax.dot_general(Bm * dec_state[:, None], x,
+                             (((0,), (0,)), ((), ())))               # (N, P)
+    st_ref[0, 0, 0] = st.astype(st_ref.dtype)
+    dec_ref[0, 0, 0] = jnp.exp(cum[-1]).astype(dec_ref.dtype)
+
+
+def ssd_intra_chunk(x, dt, A, Bmat, Cmat, *, interpret: bool = False):
+    """x: (B,nc,Q,H,P); dt: (B,nc,Q,H); A: (H,); Bmat/Cmat: (B,nc,Q,N).
+
+    Returns (y_intra (B,nc,Q,H,P), chunk_state (B,nc,H,N,P), chunk_decay (B,nc,H)).
+    """
+    Bb, nc, Q, H, P = x.shape
+    N = Bmat.shape[-1]
+    grid = (Bb, nc, H)
+    y, st, dec = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1,), lambda b, c, h: (h,)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, N), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, N, P), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bb, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, nc, H, N, P), jnp.float32),
+            jax.ShapeDtypeStruct((Bb, nc, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dt, A, Bmat, Cmat)
+    return y, st, dec
+
+
+def ssd_chunked_kernel(x, dt, A, Bmat, Cmat, chunk: int, *,
+                       interpret: bool = False):
+    """Full SSD using the Pallas intra-chunk kernel + jnp inter-chunk scan.
+    Same contract as repro.models.ssm.ssd_chunked (x: (B,S,H,P) fp32)."""
+    Bb, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = Bmat.reshape(Bb, nc, Q, N)
+    Cc = Cmat.reshape(Bb, nc, Q, N)
+
+    y_intra, chunk_state, chunk_decay = ssd_intra_chunk(
+        xc, dtc, A, Bc, Cc, interpret=interpret)
+
+    def step(state, inp):                                # state: (B,H,N,P)
+        c_state, c_decay = inp
+        new = state * c_decay[..., None, None] + c_state
+        return new, state
+
+    init = jnp.zeros((Bb, H, N, P), jnp.float32)
+    final_state, prev = jax.lax.scan(
+        step, init, (chunk_state.transpose(1, 0, 2, 3, 4),
+                     chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                 # (B,nc,H,N,P)
+
+    cum = jnp.cumsum(dtc * A, axis=2)                    # (B,nc,Q,H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", Cc, jnp.exp(cum), prev)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, final_state.transpose(0, 1, 3, 2)          # state as (B,H,P,N)

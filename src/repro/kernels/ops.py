@@ -1,0 +1,60 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On non-TPU backends the kernels run in ``interpret=True`` mode (the kernel
+body executes in Python via XLA on CPU) so every call site — models, tests,
+benchmarks — exercises the same code path that compiles for TPU.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import decode_attention as _dec
+from . import flash_attention as _fa
+from . import mamba2_ssd as _ssd
+from . import rmsnorm as _rn
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                    block_q: int = 512, block_k: int = 512):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=block_q, block_k=block_k,
+                               interpret=_interpret())
+
+
+def decode_attention(q, k, v, positions, pos, *, window: Optional[int] = None,
+                     block_c: int = 512):
+    """q: (B,H,hd); cache k,v: (B,C,K,hd); positions: (B,C) absolute positions
+    stored per slot (-1 = empty); pos: (B,) current decode position."""
+    valid = (positions >= 0) & (positions <= pos[:, None])
+    if window is not None:
+        valid &= positions > (pos[:, None] - window)
+    return _dec.decode_attention(q, k, v, valid, block_c=min(block_c, k.shape[1]),
+                                 interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, scale, *, eps: float = 1e-5, block_rows: int = 256):
+    return _rn.rmsnorm(x, scale, eps=eps, block_rows=block_rows,
+                       interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm_residual(x, residual, scale, *, eps: float = 1e-5, block_rows: int = 256):
+    return _rn.rmsnorm_residual(x, residual, scale, eps=eps,
+                                block_rows=block_rows, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked(x, dt, A, Bmat, Cmat, chunk: int = 256):
+    return _ssd.ssd_chunked_kernel(x, dt, A, Bmat, Cmat, chunk,
+                                   interpret=_interpret())

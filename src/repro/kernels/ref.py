@@ -1,0 +1,88 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each function here is the mathematical definition, written with materialized
+intermediates — slow and memory-hungry, but obviously correct.  The kernel
+tests sweep shapes/dtypes and assert allclose against these.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """q: (B,S,H,hd); k,v: (B,T,K,hd).  Materialized softmax attention."""
+    B, S, H, hd = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    kf = jnp.repeat(k, G, axis=2)                        # (B,T,H,hd)
+    vf = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / math.sqrt(hd)
+    pq = jnp.arange(S)[:, None]
+    pk = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= pq >= pk
+    if window is not None:
+        mask &= (pq - pk) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhst,bthd->bshd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, mask) -> jax.Array:
+    """q: (B,H,hd); k,v: (B,C,K,hd); mask: (B,C)."""
+    B, H, hd = q.shape
+    C, K = k.shape[1], k.shape[2]
+    G = H // K
+    kf = jnp.repeat(k, G, axis=2)
+    vf = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bhd,bchd->bhc", q.astype(jnp.float32),
+                   kf.astype(jnp.float32)) / math.sqrt(hd)
+    s = jnp.where(mask[:, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhc,bchd->bhd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rmsnorm_ref(x, scale, *, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def rmsnorm_residual_ref(x, residual, scale, *, eps: float = 1e-5) -> tuple:
+    r = (x.astype(jnp.float32) + residual.astype(jnp.float32))
+    return rmsnorm_ref(r.astype(x.dtype), scale, eps=eps), r.astype(x.dtype)
+
+
+def ssd_ref(x, dt, A, Bmat, Cmat) -> tuple:
+    """Sequential (step-by-step) SSD reference.
+
+    x: (B,S,H,P) fp32; dt: (B,S,H); A: (H,); Bmat/Cmat: (B,S,N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    B, S, H, P = x.shape
+    N = Bmat.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                            # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * A)                         # (B,H)
+        upd = jnp.einsum("bh,bhp,bn->bhpn", dtt, xt, bt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    s0 = jnp.zeros((B, H, P, N), jnp.float32)
+    final, ys = jax.lax.scan(
+        step, s0, (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+                   Bmat.transpose(1, 0, 2), Cmat.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2, 3), final

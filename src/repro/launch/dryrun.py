@@ -1,0 +1,350 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production meshes, without allocating any real arrays.
+
+For each cell we lower the right step function —
+  train_4k     -> train_step  (fwd + bwd + AdamW, donated params/opt)
+  prefill_32k  -> prefill forward (inference logits)
+  decode_*     -> serve_step  (one token against a seq_len KV cache / SSM state)
+— with explicit in/out shardings (megatron TP + DP from
+repro.models.sharding), compile it, and record:
+  - compiled.memory_analysis()  (per-device bytes: proves it fits)
+  - compiled.cost_analysis()    (XLA's aggregate flops/bytes — loop bodies
+                                 counted once; kept for reference)
+  - loop-aware HLO analysis     (repro.launch.hlo_analysis: true flops, HBM
+                                 traffic model, collective bytes by kind)
+into results/dryrun/<arch>__<shape>__<mesh>.json for the roofline stage.
+
+Run one cell per process (clean device state):
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod both]
+"""
+
+import argparse
+import json
+import pathlib
+import subprocess
+import sys
+import time
+import traceback
+import warnings
+
+warnings.filterwarnings("ignore")
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def _mesh_tag(multi_pod: bool) -> str:
+    return "pod2x16x16" if multi_pod else "pod16x16"
+
+
+def cell_path(out_dir: pathlib.Path, arch: str, shape: str, multi_pod: bool) -> pathlib.Path:
+    return out_dir / f"{arch}__{shape}__{_mesh_tag(multi_pod)}.json"
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, donate: bool = True) -> dict:
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch.hlo_analysis import analyze
+    from repro.launch.mesh import make_production_mesh
+    from repro.models import get_model, make_train_step
+    from repro.models.sharding import (batch_spec, named, param_specs,
+                                       state_specs, zero1_specs)
+    from repro.models.train import init_optimizer
+    from repro.optim.adamw import AdamWState
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    api = get_model(cfg)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+
+    rec = {"arch": arch, "shape": shape_name, "kind": shape.kind,
+           "mesh": _mesh_tag(multi_pod), "devices": int(len(jax.devices())),
+           "seq_len": S, "global_batch": B}
+
+    with jax.set_mesh(mesh):
+        params_sds = jax.eval_shape(api.init, jax.random.key(0))
+        pspec_fn = zero1_specs if cfg.fsdp_params else param_specs
+        pn = named(pspec_fn(params_sds, cfg, mesh), mesh)
+        bspec = batch_spec(mesh)
+
+        from repro.launch.mesh import data_axis_size, model_axis_size
+
+        dsize = data_axis_size(mesh)
+        msize = model_axis_size(mesh)
+        batch_sds = api.input_specs(shape)
+        bn = {k: NamedSharding(mesh, P(bspec[0] if v.shape[0] % dsize == 0 else None))
+              for k, v in batch_sds.items()}
+
+        if shape.kind == "train":
+            opt_sds = jax.eval_shape(init_optimizer, params_sds)
+            zspecs = zero1_specs(params_sds, cfg, mesh)
+            on = AdamWState(step=NamedSharding(mesh, P()),
+                            m=named(zspecs, mesh), v=named(zspecs, mesh))
+            ts = make_train_step(api.forward, cfg)
+            jitted = jax.jit(
+                ts,
+                in_shardings=(pn, on, bn),
+                out_shardings=(pn, on, None),
+                donate_argnums=(0, 1) if donate else (),
+            )
+            lowered = jitted.lower(params_sds, opt_sds, batch_sds)
+        elif shape.kind == "prefill":
+
+            def infer(params, batch):
+                logits, _ = api.forward(params, batch, cfg)
+                return logits
+
+            vocab_ok = cfg.vocab_size % msize == 0
+            out_spec = P(bspec[0] if B % dsize == 0 else None, None,
+                         "model" if vocab_ok else None)
+            jitted = jax.jit(
+                infer,
+                in_shardings=(pn, bn),
+                out_shardings=NamedSharding(mesh, out_spec),
+            )
+            lowered = jitted.lower(params_sds, batch_sds)
+        else:  # decode
+            state_sds = jax.eval_shape(lambda: api.init_decode_state(B, S))
+            sspecs = state_specs(state_sds, cfg, mesh, batch=B)
+            sn = named(sspecs, mesh)
+
+            def serve_step(params, state, batch):
+                return api.decode(params, state, batch["token"])
+
+            jitted = jax.jit(
+                serve_step,
+                in_shardings=(pn, sn, bn),
+                out_shardings=(None, sn),
+                donate_argnums=(1,) if donate else (),
+            )
+            lowered = jitted.lower(params_sds, state_sds, batch_sds)
+
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = {
+        k: int(getattr(mem, k))
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes")
+        if hasattr(mem, k)
+    }
+    ca = compiled.cost_analysis() or {}
+    rec["cost_analysis"] = {k: float(v) for k, v in ca.items()
+                            if isinstance(v, (int, float)) and k in
+                            ("flops", "bytes accessed", "transcendentals",
+                             "utilization operand 0 {}", "optimal_seconds")}
+    txt = compiled.as_text()
+    rec["hlo"] = analyze(txt)
+    rec["hlo_chars"] = len(txt)
+    rec["lower_s"] = round(t_lower - t0, 2)
+    rec["compile_s"] = round(t_compile - t_lower, 2)
+
+    # analytic model flops for the roofline's usefulness ratio
+    from repro.models.common import active_param_count
+
+    wl = api.workload(shape)
+    unembed = 2.0 * B * (S if shape.kind != "decode" else 1) * cfg.d_model * cfg.vocab_size
+    fwd = wl.total_work + unembed
+    rec["model_flops"] = float(fwd * (3.0 if shape.kind == "train" else 1.0))
+    tokens = B * (S if shape.kind != "decode" else 1)
+    rec["model_flops_6nd"] = float(
+        (6.0 if shape.kind == "train" else 2.0) * active_param_count(cfg) * tokens)
+    rec["ok"] = True
+    return rec
+
+
+def run_pipeline_cell(arch: str, num_microbatches: int = 8,
+                      straggler: float = 1.0) -> dict:
+    """Lower + compile the PAPER'S TECHNIQUE at production scale: the planner
+    partitions the arch's layers into intervals, the pipeline runtime executes
+    them over the 2-pod mesh ('pod' = the stage axis; data/model stay GSPMD),
+    and we compile loss+grad of the pipelined step.  ``straggler`` > 1
+    degrades pod 1's planning speed, producing unequal intervals."""
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.configs import SHAPES, get_config
+    from repro.core import Objective, Platform, plan
+    from repro.launch.hlo_analysis import analyze
+    from repro.launch.mesh import make_production_mesh
+    from repro.models.registry import lm_workload
+    from repro.models.sharding import param_specs
+    from repro.models.train import cross_entropy
+    from repro.models import transformer
+    from repro.pipeline.runtime import (make_stage_mask, make_stage_params,
+                                        pipelined_loss_fn)
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=True)
+    cfg = get_config(arch)
+    shape = SHAPES["train_4k"]
+    wl = lm_workload(cfg, shape)
+    speeds = np.array([256 * 197e12 * 0.4, 256 * 197e12 * 0.4 / straggler])
+    pf = Platform(speeds, b=25e9)
+    pl = plan(wl, pf, Objective("period"), mode="auto")
+
+    with jax.set_mesh(mesh):
+        params_sds = jax.eval_shape(
+            lambda k: transformer.init_params(k, cfg), jax.random.key(0))
+        stages_sds = jax.eval_shape(
+            lambda lp: make_stage_params(lp, pl, 2)[0], params_sds["layers"])
+        mask = make_stage_mask(pl, 2)
+        pipe_sds = {"embed": params_sds["embed"], "stages": stages_sds,
+                    "ln_f": params_sds["ln_f"]}
+
+        # shardings: per-layer TP specs, stages get 'pod' on dim 0
+        base = param_specs({"embed": params_sds["embed"],
+                            "layers": params_sds["layers"],
+                            "ln_f": params_sds["ln_f"]}, cfg, mesh)
+        # base layer specs already carry the stacked-L dim (-> the L_max slot
+        # dim); the packed stages just gain a leading 'pod' stage dim
+        stage_specs = jax.tree.map(
+            lambda s: P("pod", *list(s)), base["layers"],
+            is_leaf=lambda x: isinstance(x, P))
+        pipe_pn = {
+            "embed": jax.tree.map(lambda s: NamedSharding(mesh, s), base["embed"],
+                                  is_leaf=lambda x: isinstance(x, P)),
+            "stages": jax.tree.map(lambda s: NamedSharding(mesh, s), stage_specs,
+                                   is_leaf=lambda x: isinstance(x, P)),
+            "ln_f": NamedSharding(mesh, P(None)),
+        }
+        B, S = shape.global_batch, shape.seq_len
+        batch_sds = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                     "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        bn = {k: NamedSharding(mesh, P("data")) for k in batch_sds}
+
+        loss_fn = pipelined_loss_fn(cfg, pl, num_microbatches, mask,
+                                    mesh=mesh, stage_axis="pod")
+        jitted = jax.jit(jax.value_and_grad(loss_fn),
+                         in_shardings=(pipe_pn, bn))
+        lowered = jitted.lower(pipe_sds, batch_sds)
+        t_lower = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time()
+
+    mem = compiled.memory_analysis()
+    rec = {
+        "arch": arch, "shape": "train_4k", "mesh": "pod2x16x16",
+        "mode": "pipeline", "ok": True,
+        "plan": {"planner": pl.planner, "stage_sizes": list(pl.stage_sizes),
+                 "alloc": list(pl.mapping.alloc),
+                 "period_s": pl.period, "latency_s": pl.latency,
+                 "padding_overhead": pl.padding_overhead,
+                 "straggler": straggler},
+        "num_microbatches": num_microbatches,
+        "memory": {k: int(getattr(mem, k))
+                   for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                             "temp_size_in_bytes")
+                   if hasattr(mem, k)},
+        "hlo": analyze(compiled.as_text()),
+        "lower_s": round(t_lower - t0, 2),
+        "compile_s": round(t_compile - t_lower, 2),
+    }
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", default="no", choices=["no", "yes", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="compile the planner-driven pipeline over the pod axis")
+    ap.add_argument("--microbatches", type=int, default=8)
+    ap.add_argument("--straggler", type=float, default=1.0)
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+
+    if args.pipeline:
+        tag = f"straggler{args.straggler}" if args.straggler != 1.0 else "even"
+        path = out_dir / f"{args.arch}__pipeline_{tag}__pod2x16x16.json"
+        try:
+            rec = run_pipeline_cell(args.arch, args.microbatches, args.straggler)
+        except Exception as e:
+            rec = {"arch": args.arch, "mode": "pipeline", "ok": False,
+                   "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-4000:]}
+            path.write_text(json.dumps(rec, indent=2))
+            raise
+        path.write_text(json.dumps(rec, indent=2))
+        show = {k: rec[k] for k in ("arch", "mode", "ok", "compile_s")}
+        show["plan"] = rec["plan"]
+        show["temp_gb"] = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+        show["collective_gb"] = rec["hlo"]["collective_bytes"] / 1e9
+        print(json.dumps(show, indent=2))
+        return
+
+    from repro.configs import cells  # light import (no jax state)
+
+    if args.list:
+        for a, s in cells():
+            print(f"{a:18s} {s.name}")
+        return
+
+    if args.all:
+        # one subprocess per cell: clean jax state, bounded memory
+        pods = [False, True] if args.multi_pod == "both" else [args.multi_pod == "yes"]
+        todo = [(a, s.name, mp) for mp in pods for a, s in cells()]
+        done = fails = 0
+        for a, sname, mp in todo:
+            path = cell_path(out_dir, a, sname, mp)
+            if path.exists() and not args.force:
+                done += 1
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", a,
+                   "--shape", sname, "--multi-pod", "yes" if mp else "no",
+                   "--out", str(out_dir)]
+            print(f"[dryrun] {a} {sname} {_mesh_tag(mp)} ...", flush=True)
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode != 0:
+                fails += 1
+                print(r.stdout[-2000:])
+                print(r.stderr[-2000:])
+            else:
+                done += 1
+        print(f"[dryrun] complete: {done} ok, {fails} failed")
+        sys.exit(1 if fails else 0)
+
+    path = cell_path(out_dir, args.arch, args.shape, args.multi_pod == "yes")
+    try:
+        rec = run_cell(args.arch, args.shape, args.multi_pod == "yes")
+    except Exception as e:  # record failures too — they are bugs to fix
+        rec = {"arch": args.arch, "shape": args.shape,
+               "mesh": _mesh_tag(args.multi_pod == "yes"),
+               "ok": False, "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        path.write_text(json.dumps(rec, indent=2))
+        print(json.dumps({k: rec[k] for k in ("arch", "shape", "mesh", "ok", "error")},
+                         indent=2))
+        raise
+    path.write_text(json.dumps(rec, indent=2))
+    show = {k: rec.get(k) for k in ("arch", "shape", "mesh", "ok", "compile_s")}
+    show["temp_gb"] = rec["memory"].get("temp_size_in_bytes", 0) / 1e9
+    show["dot_tflops"] = rec["hlo"]["dot_flops"] / 1e12
+    show["collective_gb"] = rec["hlo"]["collective_bytes"] / 1e9
+    print(json.dumps(show, indent=2))
+
+
+if __name__ == "__main__":
+    main()

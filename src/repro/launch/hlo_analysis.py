@@ -1,0 +1,287 @@
+"""Loop-aware analysis of optimized HLO text.
+
+``compiled.cost_analysis()`` on XLA:CPU counts each ``while`` body ONCE, which
+silently undercounts every scan-over-layers model by ~n_layers x.  This module
+parses ``compiled.as_text()`` instead:
+
+ 1. builds the computation call graph — while bodies with their trip counts
+    (from the ``known_trip_count`` backend config, falling back to the loop
+    condition's comparison constant), fusion/call/conditional edges;
+ 2. multiplies per-computation costs by the product of enclosing trip counts;
+ 3. reports:
+      - dot_flops        : MXU flops from `dot` ops (2 * result * contraction)
+      - bytes_accessed   : HBM-traffic model — per materializing op, result +
+                           resolved operand bytes; dynamic-(update-)slice and
+                           slicing fusions charged at slice size (in-place /
+                           streaming reads); fusion internals excluded;
+      - collective_bytes : summed *operand* bytes of all-reduce / all-gather /
+                           reduce-scatter / all-to-all / collective-permute
+                           (the spec'd roofline numerator), with a per-kind
+                           breakdown and counts.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([a-z][\w\-]*)\(")
+_WHILE_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"(\d+)"')
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branches=\{([^}]*)\}")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# Ops that materialize HBM traffic on TPU.  Deliberately excluded (they fuse
+# into neighbors or are layout-only on TPU): broadcast, iota, transpose,
+# select, pad, reverse, bitcast, reshape.
+_TRAFFIC_OPS = {
+    "dot", "fusion", "copy", "reduce", "reduce-window", "sort", "scatter",
+    "gather", "dynamic-slice", "dynamic-update-slice",
+    "concatenate", "slice", "convolution",
+    "select-and-scatter", "custom-call", "rng", "cholesky",
+    "triangular-solve",
+} | set(COLLECTIVES)
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a result type annotation (array or tuple)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _operands(line: str, op_start: int) -> List[str]:
+    """%names inside the op's argument parens."""
+    lp = line.find("(", op_start)
+    if lp < 0:
+        return []
+    depth = 0
+    for i in range(lp, len(line)):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return _OPERAND_RE.findall(line[lp:i])
+    return _OPERAND_RE.findall(line[lp:])
+
+
+def parse(text: str):
+    """-> (comps: name -> [parsed op dicts], sizes: (comp, %name) -> bytes,
+    dims: (comp, %name) -> list of per-array dim tuples).
+
+    Symbol tables are PER COMPUTATION: HLO op names (param_0.1, ...) repeat
+    across computations, so a global table would corrupt operand lookups."""
+    comps: Dict[str, list] = {}
+    sizes: Dict[tuple, int] = {}
+    dims: Dict[tuple, list] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        m = _COMP_HEADER_RE.match(line)
+        if m and "=" not in line.split("(")[0]:
+            cur = m.group(1)
+            comps[cur] = []
+            continue
+        if cur is None:
+            continue
+        if line == "}":
+            cur = None
+            continue
+        om = _OP_RE.match(line)
+        if not om:
+            continue
+        name, type_str, kind = om.group(1), om.group(2), om.group(3)
+        sizes[(cur, name)] = _type_bytes(type_str)
+        dims[(cur, name)] = [
+            tuple(int(x) for x in dd.split(",") if x)
+            for _, dd in _SHAPE_RE.findall(type_str)
+        ]
+        comps[cur].append({
+            "name": name, "kind": kind, "type_bytes": sizes[(cur, name)],
+            "line": line, "op_end": om.end() - 1,
+        })
+    return comps, sizes, dims
+
+
+def call_multipliers(comps) -> tuple:
+    edges = defaultdict(list)
+    unknown = []
+    for name, ops in comps.items():
+        for op in ops:
+            line = op["line"]
+            if op["kind"] == "while":
+                wm = _WHILE_RE.search(line)
+                if not wm:
+                    continue
+                cond, body = wm.group(1), wm.group(2)
+                tm = _TRIP_RE.search(line)
+                if tm:
+                    trip = int(tm.group(1))
+                else:
+                    trips = [int(c) for o in comps.get(cond, ())
+                             for c in _CONST_RE.findall(o["line"])]
+                    trip = max(trips) if trips else 1
+                    if not trips:
+                        unknown.append(body)
+                edges[name].append((body, trip))
+                edges[name].append((cond, trip))
+                continue
+            if op["kind"] == "conditional":
+                b = _BRANCHES_RE.search(line)
+                if b:
+                    for br in b.group(1).split(","):
+                        edges[name].append((br.strip().lstrip("%"), 1))
+            for callee in _CALLS_RE.findall(line):
+                edges[name].append((callee, 1))
+
+    called = {c for outs in edges.values() for c, _ in outs}
+    mult = {}
+    for _ in range(len(comps) + 1):
+        new = {name: (1.0 if name not in called else 0.0) for name in comps}
+        for name, outs in edges.items():
+            for callee, factor in outs:
+                if callee in new:
+                    new[callee] += mult.get(name, 1.0 if name not in called else 0.0) * factor
+        if new == mult:
+            break
+        mult = new
+    return mult, unknown
+
+
+_DOT_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def analyze(text: str, detail: bool = False) -> dict:
+    comps, sizes, dims = parse(text)
+    mult, unknown = call_multipliers(comps)
+
+    fusion_comps = set()
+    slicing_fusions = set()
+    for name, ops in comps.items():
+        for op in ops:
+            if op["kind"] == "fusion":
+                for callee in _CALLS_RE.findall(op["line"]):
+                    fusion_comps.add(callee)
+    dus_fusions = set()
+    for fc in fusion_comps:
+        for op in comps.get(fc, ()):
+            if op["kind"] in ("dynamic-slice", "slice"):
+                slicing_fusions.add(fc)
+            if op["kind"] == "dynamic-update-slice":
+                dus_fusions.add(fc)
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    bytes_by_kind = defaultdict(float)
+    coll = defaultdict(float)
+    coll_count = defaultdict(int)
+    detail_rows: list = []
+
+    for name_comp, ops in comps.items():
+        k = mult.get(name_comp, 0.0)
+        if k == 0.0:
+            continue
+        in_fusion = name_comp in fusion_comps
+        for op in ops:
+            kind = op["kind"]
+            line = op["line"]
+            name = op["name"]
+            if kind == "dot":
+                shapes = _SHAPE_RE.findall(line)
+                res_elems = 1
+                if shapes:
+                    for d in shapes[0][1].split(","):
+                        if d:
+                            res_elems *= int(d)
+                opnds = _operands(line, op["op_end"])
+                cm = _DOT_CONTRACT_RE.search(line)
+                contract = 1
+                lhs_dims = None
+                if len(shapes) > 1:            # operand annotated inline
+                    lhs_dims = tuple(int(x) for x in shapes[1][1].split(",") if x)
+                elif opnds:                     # resolve in this computation
+                    dl = dims.get((name_comp, opnds[0]))
+                    if dl and len(dl) == 1:
+                        lhs_dims = dl[0]
+                if cm and lhs_dims is not None:
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contract *= lhs_dims[int(idx)]
+                flops += k * 2.0 * res_elems * max(contract, 1)
+            if in_fusion:
+                continue
+            if kind.endswith("-done"):
+                continue
+            base = kind[:-6] if kind.endswith("-start") else kind
+            opnd_bytes = [sizes.get((name_comp, o), 0)
+                          for o in _operands(line, op["op_end"])]
+            if base in COLLECTIVES:
+                ob = sum(opnd_bytes) if opnd_bytes else op["type_bytes"]
+                coll[base] += k * ob
+                coll_count[base] += max(int(k), 1)
+                bytes_accessed += k * ob
+                continue
+            if base not in _TRAFFIC_OPS:
+                continue
+            # Traffic model: every materialized tensor is written once and
+            # read ~once downstream => 2 x result bytes; in-place updates
+            # (DUS and DUS-rooted fusions) cost 2 x the update slice; dots
+            # additionally stream their operands (weights re-read per use).
+            res_b = op["type_bytes"]
+            if base == "dynamic-update-slice" and len(opnd_bytes) >= 2:
+                contrib = k * 2 * opnd_bytes[1]
+            elif base in ("dynamic-slice", "slice"):
+                contrib = k * 2 * res_b
+            elif base == "dot":
+                contrib = k * (res_b + sum(opnd_bytes))
+            elif base == "fusion":
+                callee = next(iter(_CALLS_RE.findall(line)), None)
+                if callee in dus_fusions:
+                    small = sum(b for b in opnd_bytes if b < res_b)
+                    contrib = k * 2 * small
+                elif callee in slicing_fusions:
+                    contrib = k * 2 * res_b
+                else:
+                    contrib = k * 2 * res_b
+            else:
+                contrib = k * 2 * res_b
+            bytes_accessed += contrib
+            bytes_by_kind[base] += contrib
+            if detail and contrib > 0:
+                import re as _re
+
+                mm = _re.search(r'op_name="([^"]*)"', line)
+                detail_rows.append((contrib, k, base, res_b,
+                                    (mm.group(1) if mm else "?")[-85:]))
+
+    return {
+        "dot_flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "bytes_by_kind": dict(bytes_by_kind),
+        "collective_bytes": float(sum(coll.values())),
+        "collectives": dict(coll),
+        "collective_counts": dict(coll_count),
+        "unknown_loops": unknown,
+        "n_computations": len(comps),
+        "detail": sorted(detail_rows, reverse=True) if detail else None,
+    }

@@ -1,0 +1,176 @@
+import os
+
+if "XLA_FLAGS" not in os.environ:
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf-iteration instrument: lower one (arch x shape x mesh) cell and print
+the roofline terms plus the top contributors (collectives / dots / HBM bytes)
+with HLO op_name attribution — the 'profile' of the dry-run methodology.
+
+    PYTHONPATH=src python -m repro.launch.perf_probe --arch mixtral-8x7b \\
+        --shape train_4k [--multi-pod] [--top 12] [--set use_pallas=True]
+"""
+
+import argparse
+import re
+import warnings
+
+warnings.filterwarnings("ignore")
+
+PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def probe(arch: str, shape_name: str, multi_pod: bool = False,
+          overrides: dict = None, top: int = 12) -> dict:
+    import jax
+
+    from repro.configs import SHAPES, get_config
+    from repro.launch import hlo_analysis as H
+    from repro.launch.dryrun import run_cell
+    import repro.launch.dryrun as dr
+    import repro.configs as configs
+
+    overrides = overrides or {}
+    if overrides:
+        base_get = configs.get_config
+        cfg0 = base_get(arch).replace(**overrides)
+        configs.get_config = lambda a: cfg0 if a == arch else base_get(a)
+        import repro.launch.dryrun
+        repro.launch.dryrun.get_config = configs.get_config  # not imported there; safe
+
+    # Re-implement enough of run_cell to keep the compiled object
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    from repro.launch.mesh import make_production_mesh, data_axis_size, model_axis_size
+    from repro.models import get_model, make_train_step
+    from repro.models.sharding import batch_spec, named, param_specs, state_specs, zero1_specs
+    from repro.models.train import init_optimizer
+    from repro.optim.adamw import AdamWState
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch).replace(**overrides) if overrides else get_config(arch)
+    api = get_model(cfg)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    with jax.set_mesh(mesh):
+        params_sds = jax.eval_shape(api.init, jax.random.key(0))
+        pspec_fn = zero1_specs if cfg.fsdp_params else param_specs
+        pn = named(pspec_fn(params_sds, cfg, mesh), mesh)
+        bspec = batch_spec(mesh)
+        dsize = data_axis_size(mesh)
+        batch_sds = api.input_specs(shape)
+        bn = {k: NamedSharding(mesh, P(bspec[0] if v.shape[0] % dsize == 0 else None))
+              for k, v in batch_sds.items()}
+        if shape.kind == "train":
+            opt_sds = jax.eval_shape(init_optimizer, params_sds)
+            zn = named(zero1_specs(params_sds, cfg, mesh), mesh)
+            on = AdamWState(step=NamedSharding(mesh, P()), m=zn, v=zn)
+            ts = make_train_step(api.forward, cfg)
+            compiled = jax.jit(ts, in_shardings=(pn, on, bn),
+                               out_shardings=(pn, on, None),
+                               donate_argnums=(0, 1)).lower(
+                params_sds, opt_sds, batch_sds).compile()
+        elif shape.kind == "prefill":
+            def infer(params, batch):
+                return api.forward(params, batch, cfg)[0]
+            compiled = jax.jit(infer, in_shardings=(pn, bn)).lower(
+                params_sds, batch_sds).compile()
+        else:
+            state_sds = jax.eval_shape(lambda: api.init_decode_state(B, S))
+            sn = named(state_specs(state_sds, cfg, mesh, batch=B), mesh)
+            def serve(params, state, batch):
+                return api.decode(params, state, batch["token"])
+            compiled = jax.jit(serve, in_shardings=(pn, sn, bn),
+                               out_shardings=(None, sn),
+                               donate_argnums=(1,)).lower(
+                params_sds, state_sds, batch_sds).compile()
+
+    txt = compiled.as_text()
+    res = H.analyze(txt, detail=True)
+    mem = compiled.memory_analysis()
+    terms = {"compute": res["dot_flops"] / PEAK_FLOPS,
+             "memory": res["bytes_accessed"] / HBM_BW,
+             "collective": res["collective_bytes"] / LINK_BW}
+    dom = max(terms, key=terms.get)
+    print(f"== {arch} {shape_name} {'2x16x16' if multi_pod else '16x16'} "
+          f"{overrides or ''}")
+    print(f"terms: compute={terms['compute']:.3f}s memory={terms['memory']:.3f}s "
+          f"collective={terms['collective']:.3f}s  dominant={dom}  "
+          f"frac={terms['compute']/max(terms.values()):.3f}")
+    print(f"temp={mem.temp_size_in_bytes/1e9:.1f}GB  "
+          f"args={mem.argument_size_in_bytes/1e9:.1f}GB")
+    print("bytes_by_kind (GB):",
+          {k: round(v / 1e9, 1) for k, v in sorted(
+              res["bytes_by_kind"].items(), key=lambda kv: -kv[1])[:8]})
+
+    comps, sizes, dims = H.parse(txt)
+    mult, _ = H.call_multipliers(comps)
+    colls, dots, bigbytes = [], [], []
+    for cname, ops in comps.items():
+        k = mult.get(cname, 0)
+        if not k:
+            continue
+        for op in ops:
+            line = op["line"]
+            mm = re.search(r'op_name="([^"]*)"', line)
+            oname = (mm.group(1) if mm else "?")[-85:]
+            kind = op["kind"][:-6] if op["kind"].endswith("-start") else op["kind"]
+            if kind in H.COLLECTIVES:
+                ob = sum(sizes.get((cname, o), 0)
+                         for o in H._operands(line, op["op_end"]))
+                shapes = H._SHAPE_RE.findall(line)
+                dt0 = shapes[0][0] if shapes else "?"
+                colls.append((k * ob, k, kind, dt0, oname))
+            if kind == "dot":
+                shapes = H._SHAPE_RE.findall(line)
+                res_elems = 1
+                for d in shapes[0][1].split(","):
+                    if d:
+                        res_elems *= int(d)
+                opnds = H._operands(line, op["op_end"])
+                cm = H._DOT_CONTRACT_RE.search(line)
+                contract, lhs_dims = 1, None
+                if len(shapes) > 1:
+                    lhs_dims = tuple(int(x) for x in shapes[1][1].split(",") if x)
+                elif opnds:
+                    dl = dims.get((cname, opnds[0]))
+                    if dl and len(dl) == 1:
+                        lhs_dims = dl[0]
+                if cm and lhs_dims is not None:
+                    for idx in cm.group(1).split(","):
+                        if idx and int(idx) < len(lhs_dims):
+                            contract *= lhs_dims[int(idx)]
+                dots.append((k * 2.0 * res_elems * max(contract, 1), k, oname))
+    colls.sort(reverse=True)
+    dots.sort(reverse=True)
+    print("-- top HBM-bytes ops (traffic model):")
+    for b in (res["detail"] or [])[:top]:
+        print(f"  {b[0]/1e9:8.1f}GB x{b[1]:5.0f} {b[2]:12s} res={b[3]/1e9:.2f}GB {b[4]}")
+    print(f"-- top collectives ({sum(c[0] for c in colls)/1e9:.0f} GB total):")
+    for c in colls[:top]:
+        print(f"  {c[0]/1e9:8.1f}GB x{c[1]:5.0f} {c[2]:18s} [{c[3]}] {c[4]}")
+    print(f"-- top dots ({sum(d[0] for d in dots)/1e12:.0f} TF total):")
+    for d in dots[:max(top // 2, 6)]:
+        print(f"  {d[0]/1e12:8.1f}TF x{d[1]:5.0f} {d[2]}")
+    return {"terms": terms, "res": res, "temp_gb": mem.temp_size_in_bytes / 1e9}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--top", type=int, default=12)
+    ap.add_argument("--set", action="append", default=[],
+                    help="cfg override key=value (evaluated)")
+    args = ap.parse_args()
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = eval(v)
+    probe(args.arch, args.shape, args.multi_pod, overrides, args.top)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Serving driver: continuous-batching decode loop.
+
+A request pool feeds a fixed-width decode batch; finished sequences free
+their slot for the next request (continuous batching).  Prefill runs per
+request (chunked into the batch), decode is a single fused ``serve_step``.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --smoke \\
+        --requests 16 --batch 4 --max-new 32
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs import get_config, get_smoke_config
+from ..models import get_model
+from ..models.transformer import prefill as tf_prefill
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (P,) int32
+    max_new: int
+    generated: Optional[List[int]] = None
+    done: bool = False
+
+
+def serve_pool(arch: str = "qwen3-4b", smoke: bool = True, n_requests: int = 16,
+               batch: int = 4, prompt_len: int = 16, max_new: int = 32,
+               capacity: int = 128, seed: int = 0, greedy: bool = True) -> dict:
+    """Run a request pool to completion; returns throughput metrics."""
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(seed))
+    rng = np.random.default_rng(seed)
+    reqs = [Request(i, rng.integers(1, cfg.vocab_size, prompt_len).astype(np.int32),
+                    max_new, []) for i in range(n_requests)]
+
+    decode = jax.jit(api.decode, donate_argnums=(1,))
+
+    state = api.init_decode_state(batch, capacity)
+    slots: List[Optional[Request]] = [None] * batch
+    slot_steps = np.zeros(batch, np.int32)
+    cur_tokens = np.zeros((batch, 1), np.int32)
+    queue = list(reqs)
+    t0 = time.time()
+    tokens_out = 0
+    steps = 0
+
+    def admit(state):
+        """Fill free slots: run the prompt through decode steps (prefill-as-
+        decode keeps the driver model-agnostic across cache/SSM states)."""
+        nonlocal cur_tokens
+        for s in range(batch):
+            if slots[s] is None and queue:
+                r = queue.pop(0)
+                slots[s] = r
+                slot_steps[s] = 0
+                # feed the prompt token by token into this slot
+                for t in r.prompt[:-1]:
+                    tok = cur_tokens.copy()
+                    tok[s, 0] = t
+                    cur_tokens = tok
+                    _, state = decode(params, state, jnp.asarray(cur_tokens))
+                cur_tokens[s, 0] = r.prompt[-1]
+        return state
+
+    state = admit(state)
+    while any(slots) or queue:
+        logits, state = decode(params, state, jnp.asarray(cur_tokens))
+        steps += 1
+        logits_np = np.asarray(logits[:, 0], np.float32)
+        nxt = logits_np.argmax(-1) if greedy else logits_np.argmax(-1)
+        for s in range(batch):
+            r = slots[s]
+            if r is None:
+                continue
+            tok = int(nxt[s])
+            r.generated.append(tok)
+            tokens_out += 1
+            slot_steps[s] += 1
+            cur_tokens[s, 0] = tok
+            if slot_steps[s] >= r.max_new:
+                r.done = True
+                slots[s] = None
+        if any(sl is None for sl in slots) and queue:
+            state = admit(state)
+
+    dt = time.time() - t0
+    return {
+        "requests": n_requests,
+        "decode_steps": steps,
+        "tokens_generated": tokens_out,
+        "tokens_per_s": tokens_out / max(dt, 1e-9),
+        "wall_s": dt,
+        "all_done": all(r.done for r in reqs),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=32)
+    args = ap.parse_args()
+    out = serve_pool(arch=args.arch, smoke=args.smoke, n_requests=args.requests,
+                     batch=args.batch, prompt_len=args.prompt_len,
+                     max_new=args.max_new)
+    print(json.dumps(out, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,11 @@
+"""Model zoo: config-driven implementations of the ten assigned architectures."""
+
+from .common import ModelConfig, ShapeSpec, SHAPES, param_count, active_param_count
+from .registry import ModelAPI, get_model, lm_workload, layer_flops
+from .train import make_train_step, make_loss_fn, cross_entropy, init_optimizer
+from .sharding import param_specs, zero1_specs, batch_spec, named
+
+__all__ = ["ModelConfig", "ShapeSpec", "SHAPES", "param_count", "active_param_count",
+           "ModelAPI", "get_model", "lm_workload", "layer_flops",
+           "make_train_step", "make_loss_fn", "cross_entropy", "init_optimizer",
+           "param_specs", "zero1_specs", "batch_spec", "named"]

@@ -1,0 +1,184 @@
+"""Whisper-style encoder-decoder backbone (conv/audio frontend is a stub:
+``input_specs()`` supplies precomputed frame embeddings of shape
+(B, enc_seq, d_model), per the assignment).
+
+Encoder: bidirectional self-attention blocks over the frames.
+Decoder: causal self-attention + cross-attention + GELU MLP.
+Whisper uses LayerNorm (with bias) and GELU; both are honored here.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (KVCache, attention, cache_from_prefill,
+                        decode_attention_step, init_attention, _project_qkv,
+                        plain_attention)
+from .common import ModelConfig
+from .layers import dense_init, embed, init_embed, init_mlp, layer_norm, mlp, shard, unembed
+
+
+def _init_ln(d, pdt):
+    return {"scale": jnp.ones((d,), pdt), "bias": jnp.zeros((d,), pdt)}
+
+
+def _ln(x, p, cfg):
+    return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def init_enc_block(key, cfg: ModelConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    pdt = cfg.jparam_dtype
+    return {
+        "ln1": _init_ln(cfg.d_model, pdt),
+        "attn": init_attention(k1, cfg),
+        "ln2": _init_ln(cfg.d_model, pdt),
+        "mlp": init_mlp(k2, cfg),
+    }
+
+
+def init_dec_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    pdt = cfg.jparam_dtype
+    return {
+        "ln1": _init_ln(cfg.d_model, pdt),
+        "self_attn": init_attention(k1, cfg),
+        "ln2": _init_ln(cfg.d_model, pdt),
+        "cross_attn": init_attention(k2, cfg),
+        "ln3": _init_ln(cfg.d_model, pdt),
+        "mlp": init_mlp(k3, cfg),
+    }
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, kenc, kdec = jax.random.split(key, 3)
+    enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+    dec_keys = jax.random.split(kdec, cfg.n_layers)
+    return {
+        "embed": init_embed(ke, cfg),
+        "enc": jax.vmap(lambda k: init_enc_block(k, cfg))(enc_keys),
+        "dec": jax.vmap(lambda k: init_dec_block(k, cfg))(dec_keys),
+        "ln_enc": _init_ln(cfg.d_model, cfg.jparam_dtype),
+        "ln_f": _init_ln(cfg.d_model, cfg.jparam_dtype),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, enc_seq, d) stub embeddings -> encoder output."""
+    x = frames.astype(cfg.jdtype)
+    T = x.shape[1]
+    positions = jnp.arange(T)[None, :]
+
+    def body(x, lp):
+        h = _ln(x, lp["ln1"], cfg)
+        h = attention(lp["attn"], h, cfg, positions=positions, causal=False)
+        x = x + h
+        h = _ln(x, lp["ln2"], cfg)
+        x = x + mlp(lp["mlp"], h, cfg)
+        return x, None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["enc"])
+    return _ln(x, params["ln_enc"], cfg)
+
+
+def _dec_block(lp, x, enc_out, cfg, positions, self_kv=None):
+    h = _ln(x, lp["ln1"], cfg)
+    h = attention(lp["self_attn"], h, cfg, positions=positions, causal=True)
+    x = x + h
+    h = _ln(x, lp["ln2"], cfg)
+    h = attention(lp["cross_attn"], h, cfg, positions=positions, causal=False,
+                  kv_x=enc_out, rope=False)
+    x = x + h
+    h = _ln(x, lp["ln3"], cfg)
+    return x + mlp(lp["mlp"], h, cfg)
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            frames: jax.Array = None) -> tuple:
+    """tokens: (B, S) decoder tokens; frames: (B, enc_seq, d) stub embeddings."""
+    enc_out = encode(params, frames, cfg)
+    x = embed(params["embed"], tokens, cfg)
+    S = x.shape[1]
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        return _dec_block(lp, x, enc_out, cfg, positions), None
+
+    if cfg.remat == "block":
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, params["dec"])
+    x = _ln(x, params["ln_f"], cfg)
+    return unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+class EncDecState(NamedTuple):
+    self_caches: KVCache     # (L, B, C, K, hd)
+    cross_k: jax.Array       # (L, B, T, K, hd) — static after encode
+    cross_v: jax.Array
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, capacity: int) -> EncDecState:
+    L, K, hd = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    T = cfg.enc_seq
+    return EncDecState(
+        self_caches=KVCache(
+            k=jnp.zeros((L, batch, capacity, K, hd), cfg.jdtype),
+            v=jnp.zeros((L, batch, capacity, K, hd), cfg.jdtype),
+            pos=jnp.zeros((L, batch), jnp.int32),
+            positions=jnp.full((L, batch, capacity), -1, jnp.int32),
+        ),
+        cross_k=jnp.zeros((L, batch, T, K, hd), cfg.jdtype),
+        cross_v=jnp.zeros((L, batch, T, K, hd), cfg.jdtype),
+    )
+
+
+def precompute_cross(params: dict, enc_out: jax.Array, cfg: ModelConfig) -> tuple:
+    """Per-layer cross K/V from the encoder output."""
+    T = enc_out.shape[1]
+    pos = jnp.arange(T)[None, :]
+
+    def body(_, lp):
+        kq = lp["cross_attn"]
+        dt = enc_out.dtype
+        k = jnp.einsum("btd,dhk->bthk", enc_out, kq["wk"].astype(dt))
+        v = jnp.einsum("btd,dhk->bthk", enc_out, kq["wv"].astype(dt))
+        return None, (k, v)
+
+    _, (ks, vs) = jax.lax.scan(body, None, params["dec"])
+    return ks, vs
+
+
+def decode_step(params: dict, state: EncDecState, token: jax.Array,
+                cfg: ModelConfig) -> tuple:
+    x = embed(params["embed"], token, cfg)
+
+    def body(x, inp):
+        lp, cache, ck, cv = inp
+        h = _ln(x, lp["ln1"], cfg)
+        h, new_cache = decode_attention_step(lp["self_attn"], h, cache, cfg)
+        x = x + h
+        h = _ln(x, lp["ln2"], cfg)
+        # cross attention against static K/V
+        dt = h.dtype
+        ca = lp["cross_attn"]
+        q = jnp.einsum("bsd,dhk->bshk", h, ca["wq"].astype(dt))
+        out = plain_attention(q, ck, cv, causal=False, window=None)
+        h = jnp.einsum("bshk,hkd->bsd", out, ca["wo"].astype(dt))
+        x = x + h
+        h = _ln(x, lp["ln3"], cfg)
+        return x + mlp(lp["mlp"], h, cfg), new_cache
+
+    x, new_caches = jax.lax.scan(
+        body, x, (params["dec"], state.self_caches, state.cross_k, state.cross_v))
+    x = _ln(x, params["ln_f"], cfg)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, EncDecState(new_caches, state.cross_k, state.cross_v)

@@ -1,0 +1,151 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with a *shared* full-attention block
+applied every ``cfg.attn_every`` layers.
+
+Execution structure mirrors the paper-planner's padded-interval trick: the
+n_layers Mamba blocks are grouped into G = ceil(L / attn_every) groups of
+``attn_every`` (last group padded with masked identity layers), and we scan
+over groups: [shared attention] -> [inner scan over the group's Mamba layers].
+This keeps one compiled group body (bounded HLO) and gives the attention
+applications a natural per-group KV cache stack.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (KVCache, attention, cache_from_prefill,
+                        decode_attention_step, init_attention, init_cache)
+from .common import ModelConfig
+from .layers import embed, init_embed, init_mlp, mlp, rms_norm, shard, unembed
+from .ssm import (MambaState, init_mamba2, init_mamba_state, mamba2_decode_step,
+                  mamba2_forward, ssm_dims)
+
+
+def group_shape(cfg: ModelConfig) -> tuple:
+    """(n_groups, group_size, n_padded_layers)."""
+    g = cfg.attn_every
+    ng = math.ceil(cfg.n_layers / g)
+    pad = ng * g - cfg.n_layers
+    return ng, g, pad
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, ka, km, kn = jax.random.split(key, 4)
+    ng, g, pad = group_shape(cfg)
+    layer_keys = jax.random.split(km, ng * g)
+    mamba = jax.vmap(lambda k: init_mamba2(k, cfg))(layer_keys)
+    # reshape leading dim to (ng, g)
+    mamba = jax.tree.map(lambda a: a.reshape((ng, g) + a.shape[1:]), mamba)
+    return {
+        "embed": init_embed(ke, cfg),
+        "shared_attn": {
+            "ln": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
+            "attn": init_attention(ka, cfg),
+            "ln2": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
+            "mlp": init_mlp(kn, cfg),
+        },
+        "mamba_groups": mamba,
+        "mamba_ln": jnp.ones((ng, g, cfg.d_model), cfg.jparam_dtype),
+        "ln_f": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
+    }
+
+
+def _group_forward(shared, group_params, group_ln, group_mask, x, cfg, positions):
+    """One group: shared attention application + masked scan over Mamba layers."""
+    h = rms_norm(x, shared["ln"], cfg.norm_eps)
+    h = attention(shared["attn"], h, cfg, positions=positions, causal=True)
+    x = x + h
+    h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+    x = x + mlp(shared["mlp"], h, cfg)
+
+    def body(x, inp):
+        lp, ln, m = inp
+        h = rms_norm(x, ln, cfg.norm_eps)
+        h = mamba2_forward(lp, h, cfg)
+        return x + m.astype(x.dtype) * h, None
+
+    x, _ = jax.lax.scan(body, x, (group_params, group_ln, group_mask))
+    return x
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig) -> tuple:
+    x = embed(params["embed"], tokens, cfg)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+    shared = params["shared_attn"]
+    ng, g, _ = group_shape(cfg)
+    layer_mask = (jnp.arange(ng * g) < cfg.n_layers).reshape(ng, g)
+
+    def gbody(x, inp):
+        gp, gln, gm = inp
+        x = _group_forward(shared, gp, gln, gm, x, cfg, positions)
+        return x, None
+
+    if cfg.remat == "block":
+        gbody = jax.checkpoint(gbody)
+    x, _ = jax.lax.scan(gbody, x, (params["mamba_groups"], params["mamba_ln"],
+                                   layer_mask))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Decode
+# ---------------------------------------------------------------------------
+
+class HybridState(NamedTuple):
+    caches: KVCache        # stacked (ng, B, C, K, hd) — one per attention application
+    mamba: MambaState      # stacked (ng, g, ...) per layer
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, capacity: int) -> HybridState:
+    ng, g, _ = group_shape(cfg)
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * N
+    caches = KVCache(
+        k=jnp.zeros((ng, batch, capacity, cfg.n_kv_heads, cfg.head_dim), cfg.jdtype),
+        v=jnp.zeros((ng, batch, capacity, cfg.n_kv_heads, cfg.head_dim), cfg.jdtype),
+        pos=jnp.zeros((ng, batch), jnp.int32),
+        positions=jnp.full((ng, batch, capacity), -1, jnp.int32),
+    )
+    mamba = MambaState(
+        conv=jnp.zeros((ng, g, batch, conv_dim, cfg.ssm_conv - 1), jnp.float32),
+        ssm=jnp.zeros((ng, g, batch, H, P, N), jnp.float32),
+    )
+    return HybridState(caches, mamba)
+
+
+def decode_step(params: dict, state: HybridState, token: jax.Array,
+                cfg: ModelConfig) -> tuple:
+    x = embed(params["embed"], token, cfg)
+    shared = params["shared_attn"]
+    ng, g, _ = group_shape(cfg)
+    layer_mask = (jnp.arange(ng * g) < cfg.n_layers).reshape(ng, g)
+
+    def gbody(x, inp):
+        gp, gln, gm, cache, mstate = inp
+        h = rms_norm(x, shared["ln"], cfg.norm_eps)
+        h, new_cache = decode_attention_step(shared["attn"], h, cache, cfg)
+        x = x + h
+        h = rms_norm(x, shared["ln2"], cfg.norm_eps)
+        x = x + mlp(shared["mlp"], h, cfg)
+
+        def lbody(x, linp):
+            lp, ln, m, ms = linp
+            h = rms_norm(x, ln, cfg.norm_eps)
+            h, new_ms = mamba2_decode_step(lp, h, ms, cfg)
+            return x + m.astype(x.dtype) * h, new_ms
+
+        x, new_mstate = jax.lax.scan(lbody, x, (gp, gln, gm, mstate))
+        return x, (new_cache, new_mstate)
+
+    x, (new_caches, new_mamba) = jax.lax.scan(
+        gbody, x, (params["mamba_groups"], params["mamba_ln"],
+                   layer_mask, state.caches, state.mamba))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, HybridState(new_caches, new_mamba)

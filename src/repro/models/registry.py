@@ -1,0 +1,208 @@
+"""Uniform model API over all architecture families.
+
+``get_model(cfg)`` returns a :class:`ModelAPI` with:
+  - init(key) -> params
+  - forward(params, batch, cfg) -> (logits, aux)          [train / prefill]
+  - init_decode_state(batch, capacity) -> state
+  - decode(params, state, token) -> (logits, state)       [serve_step core]
+  - input_specs(shape) -> dict of ShapeDtypeStruct        [dry-run stand-ins]
+  - workload(shape) -> repro.core.Workload                [planner integration]
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.workload import Workload
+from .common import ModelConfig, ShapeSpec
+from . import encdec, hybrid, transformer, xlstm
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    init: Callable
+    forward: Callable            # (params, batch, cfg) -> (logits, aux)
+    init_decode_state: Callable  # (batch, capacity) -> state
+    decode: Callable             # (params, state, token) -> (logits, state)
+    input_specs: Callable        # (ShapeSpec) -> dict
+    workload: Callable           # (ShapeSpec) -> Workload
+
+
+def _tok_specs(shape: ShapeSpec, cfg: ModelConfig, extra: Optional[dict] = None) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    d = {}
+    if shape.kind == "train":
+        d = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    elif shape.kind == "prefill":
+        d = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    else:  # decode
+        d = {"token": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+    if extra:
+        d.update(extra)
+    return d
+
+
+# ---------------------------------------------------------------------------
+# Per-family wiring
+# ---------------------------------------------------------------------------
+
+def _lm_forward(params, batch, cfg):
+    return transformer.forward(params, batch["tokens"], cfg)
+
+
+def _vlm_forward(params, batch, cfg):
+    return transformer.forward(params, batch["tokens"], cfg,
+                               prefix_embeds=batch["patch_embeds"])
+
+
+def _hybrid_forward(params, batch, cfg):
+    return hybrid.forward(params, batch["tokens"], cfg)
+
+
+def _xlstm_forward(params, batch, cfg):
+    return xlstm.forward(params, batch["tokens"], cfg)
+
+
+def _encdec_forward(params, batch, cfg):
+    return encdec.forward(params, batch["tokens"], cfg, frames=batch["frames"])
+
+
+def get_model(cfg: ModelConfig) -> ModelAPI:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        fwd = _vlm_forward if fam == "vlm" else _lm_forward
+
+        def specs(shape: ShapeSpec) -> dict:
+            extra = None
+            if fam == "vlm" and shape.kind != "decode":
+                extra = {"patch_embeds": jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.n_vis_tokens, cfg.d_model), cfg.jdtype)}
+            return _tok_specs(shape, cfg, extra)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: transformer.init_params(key, cfg),
+            forward=fwd,
+            init_decode_state=lambda b, cap: transformer.init_decode_state(cfg, b, cap),
+            decode=lambda p, st, tok: transformer.decode_step(p, st, tok, cfg),
+            input_specs=specs,
+            workload=lambda shape: lm_workload(cfg, shape),
+        )
+
+    if fam in ("ssm", "hybrid"):
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: hybrid.init_params(key, cfg),
+            forward=_hybrid_forward,
+            init_decode_state=lambda b, cap: hybrid.init_decode_state(cfg, b, cap),
+            decode=lambda p, st, tok: hybrid.decode_step(p, st, tok, cfg),
+            input_specs=lambda shape: _tok_specs(shape, cfg),
+            workload=lambda shape: lm_workload(cfg, shape),
+        )
+
+    if fam == "xlstm":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: xlstm.init_params(key, cfg),
+            forward=_xlstm_forward,
+            init_decode_state=lambda b, cap: xlstm.init_decode_state(cfg, b, cap),
+            decode=lambda p, st, tok: xlstm.decode_step(p, st, tok, cfg),
+            input_specs=lambda shape: _tok_specs(shape, cfg),
+            workload=lambda shape: lm_workload(cfg, shape),
+        )
+
+    if fam == "encdec":
+
+        def specs(shape: ShapeSpec) -> dict:
+            extra = None
+            if shape.kind != "decode":
+                extra = {"frames": jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.enc_seq, cfg.d_model), cfg.jdtype)}
+            return _tok_specs(shape, cfg, extra)
+
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key: encdec.init_params(key, cfg),
+            forward=_encdec_forward,
+            init_decode_state=lambda b, cap: encdec.init_decode_state(cfg, b, cap),
+            decode=lambda p, st, tok: encdec.decode_step(p, st, tok, cfg),
+            input_specs=specs,
+            workload=lambda shape: lm_workload(cfg, shape),
+        )
+
+    raise KeyError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# Workload extraction (planner integration): layers as pipeline stages
+# ---------------------------------------------------------------------------
+
+def layer_flops(cfg: ModelConfig, seq: int, batch: int) -> float:
+    """Analytic forward FLOPs of one block at (batch, seq)."""
+    d, hd = cfg.d_model, cfg.head_dim
+    H, K = cfg.n_heads, cfg.n_kv_heads
+    T = batch * seq
+    qkvo = 2 * T * d * (H * hd + 2 * K * hd + H * hd)
+    if cfg.sliding_window:
+        eff = min(seq, cfg.sliding_window)
+        attn = 2 * T * eff * hd * H * 2 / 2
+    else:
+        attn = 2 * T * seq * hd * H * 2 / 2          # causal: half the square
+    if cfg.family == "moe":
+        ffn = 2 * T * cfg.top_k * 3 * d * cfg.expert_d_ff
+        if cfg.dense_residual:
+            ffn += 2 * T * 3 * d * cfg.d_ff
+    elif cfg.family in ("ssm", "hybrid"):
+        from .ssm import ssm_dims
+
+        d_in, Hm, P, N = ssm_dims(cfg)
+        ffn = 2 * T * d * (2 * d_in + 2 * N + Hm) + 2 * T * d_in * d \
+            + 2 * T * d_in * N * 2                    # in/out proj + state update/read
+        qkvo, attn = 0.0, 0.0                         # attention only in shared block
+    elif cfg.family == "xlstm":
+        from .xlstm import mlstm_dims
+
+        d_in, Hm, P = mlstm_dims(cfg)
+        ffn = 2 * T * d * 2 * d_in + 3 * 2 * T * d_in * d_in + 2 * T * d_in * d
+        qkvo, attn = 0.0, 0.0
+    else:
+        mult = 3 if cfg.act == "swiglu" else 2
+        ffn = 2 * T * mult * d * cfg.d_ff
+    return float(qkvo + attn + ffn)
+
+
+def _attn_block_flops(cfg: ModelConfig, seq: int, batch: int) -> float:
+    d, hd, H, K = cfg.d_model, cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    T = batch * seq
+    mlp_f = 2 * T * (3 if cfg.act == "swiglu" else 2) * d * cfg.d_ff
+    return float(2 * T * d * (2 * H * hd + 2 * K * hd) + 2 * T * seq * hd * H + mlp_f)
+
+
+def lm_workload(cfg: ModelConfig, shape: ShapeSpec) -> Workload:
+    """Layers (blocks) as pipeline stages; delta = inter-layer activation bytes."""
+    seq = shape.seq_len if shape.kind != "decode" else 1
+    B = shape.global_batch
+    act_bytes = B * seq * cfg.d_model * 2.0           # bf16 activations
+    if cfg.family == "encdec":
+        n = cfg.n_enc_layers + cfg.n_layers
+        # decode reuses precomputed cross K/V: the encoder contributes nothing
+        enc_w = 0.0 if shape.kind == "decode" else layer_flops(cfg, cfg.enc_seq, B) * 0.75
+        w = [enc_w] * cfg.n_enc_layers + \
+            [layer_flops(cfg, seq, B)] * cfg.n_layers
+        delta = [B * cfg.enc_seq * cfg.d_model * 2.0] * (cfg.n_enc_layers + 1) + \
+                [act_bytes] * cfg.n_layers
+        return Workload(np.array(w), np.array(delta), name=cfg.arch_id)
+    w = np.full(cfg.n_layers, layer_flops(cfg, seq, B))
+    if cfg.family == "hybrid" and cfg.attn_every:
+        w = w.copy()
+        for i in range(0, cfg.n_layers, cfg.attn_every):
+            w[i] += _attn_block_flops(cfg, seq, B)
+    delta = np.full(cfg.n_layers + 1, act_bytes)
+    return Workload(w, delta, name=cfg.arch_id)

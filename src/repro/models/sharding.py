@@ -1,0 +1,196 @@
+"""Parameter / state / batch sharding-spec derivation.
+
+``param_specs`` walks a parameter pytree and assigns a PartitionSpec per leaf
+from its name, dimensionality, and the mesh — the tensor-parallel layout
+(megatron-style: attention heads + FFN inner dim + vocab + experts over
+'model'; everything replicated over 'data'/'pod' unless ZeRO is requested).
+
+``zero1_specs`` additionally shards the largest replicated dim of each leaf
+over the data axes (optimizer-state sharding, ZeRO-1): at 512 chips this cuts
+AdamW moment memory by the data-axis size.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.tree_util import DictKey, GetAttrKey, SequenceKey
+
+from .common import ModelConfig
+
+ATTN_PARENTS = {"attn", "self_attn", "cross_attn", "shared_attn"}
+
+
+def _path_names(path) -> list:
+    out = []
+    for k in path:
+        if isinstance(k, DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, GetAttrKey):
+            out.append(k.name)
+        elif isinstance(k, SequenceKey):
+            out.append(str(k.idx))
+    return out
+
+
+def _shard_priority(names: list) -> tuple:
+    """(base_ndim, priority list of base-dim indices to try for 'model').
+
+    Base dims are counted from the END of the array shape (leading dims are
+    layer stacks).  The first dim in priority order whose size divides the
+    model-axis size gets the 'model' annotation."""
+    name = names[-1]
+    in_attn = any(n in ATTN_PARENTS for n in names[:-1])
+    in_moe = "moe" in names[:-1]
+
+    if name == "tok":
+        return 2, [0, 1]
+    if name == "unembed":
+        return 2, [1, 0]
+    if in_attn:
+        if name in ("wq", "wk", "wv"):
+            return 3, [1, 2, 0]      # heads, head_dim, d_model
+        if name == "wo":
+            return 3, [0, 1, 2]
+        if name in ("bq", "bk", "bv"):
+            return 2, [0, 1]
+    if in_moe and name in ("wi", "wg"):
+        return 3, [0, 2, 1]          # experts, ff, d_model
+    if in_moe and name == "wo":
+        return 3, [0, 1, 2]
+    if name in ("wi", "wg"):
+        return 2, [1, 0]
+    if name in ("wo", "out", "down", "out_proj"):
+        return 2, [0, 1]
+    if name in ("in_proj", "up", "wx", "wq", "wk", "wv"):
+        return 2, [1, 0]
+    if name == "conv_w":
+        return 2, [0]
+    if name == "r":
+        return 3, [1, 2]
+    return 0, []
+
+
+def param_specs(params, cfg: ModelConfig, mesh) -> dict:
+    """Pytree of PartitionSpec matching ``params`` (tensor-parallel layout)."""
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+
+    def one(path, leaf):
+        names = _path_names(path)
+        nd = leaf.ndim
+        base_nd, prio = _shard_priority(names)
+        entries = [None] * nd
+        if msize > 1 and base_nd and nd >= base_nd:
+            off = nd - base_nd
+            for b in prio:
+                i = off + b
+                if leaf.shape[i] % msize == 0 and leaf.shape[i] >= msize:
+                    entries[i] = "model"
+                    break
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def _axis_size(mesh, name) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def zero1_specs(params, cfg: ModelConfig, mesh) -> dict:
+    """Param specs with the largest remaining replicated dim additionally
+    sharded over the data axes (for optimizer moments)."""
+    base = param_specs(params, cfg, mesh)
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+
+    def one(spec, leaf):
+        if dsize <= 1 or leaf.ndim == 0:
+            return spec
+        entries = list(spec) + [None] * (leaf.ndim - len(spec))
+        # choose the largest None dim divisible by the data size
+        cand = [(leaf.shape[i], i) for i, e in enumerate(entries)
+                if e is None and leaf.shape[i] % dsize == 0 and leaf.shape[i] >= dsize]
+        if not cand:
+            return spec
+        _, i = max(cand)
+        entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+        return P(*entries)
+
+    return jax.tree.map(one, base, params)
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def batch_spec(mesh, *, batch_dims: int = 1) -> P:
+    """Shard the leading batch dim over all data axes."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    first = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+    return P(first)
+
+
+# ---------------------------------------------------------------------------
+# Decode-state sharding (KV caches, SSM states, ...)
+# ---------------------------------------------------------------------------
+
+_CACHE_FIELDS = {"k", "v", "cross_k", "cross_v"}
+_BATCHED_FIELDS = {"conv", "ssm", "C", "n", "c", "m", "h", "pos", "positions"}
+
+
+def state_specs(state_sds, cfg: ModelConfig, mesh, batch: int) -> dict:
+    """PartitionSpecs for a decode-state pytree (ShapeDtypeStructs).
+
+    Rules: the batch dim shards over the data axes when divisible; for KV
+    caches, if the batch cannot be sharded (B=1 long-context decode) the
+    cache-length dim shards over 'data' instead (distributed flash-decoding);
+    the kv-head dim (or failing divisibility, head_dim) shards over 'model'.
+    Other state tensors shard their largest remaining divisible dim over
+    'model'."""
+    data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    dsize = int(np.prod([mesh.shape[a] for a in data_axes])) if data_axes else 1
+    msize = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    data_entry = data_axes if len(data_axes) > 1 else (data_axes[0] if data_axes else None)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        shape = leaf.shape
+        nd = len(shape)
+        entries = [None] * nd
+        # locate the batch dim: first dim whose size == batch
+        bdim = next((i for i, s in enumerate(shape) if s == batch), None)
+        batch_sharded = False
+        if bdim is not None and dsize > 1 and batch % dsize == 0:
+            entries[bdim] = data_entry
+            batch_sharded = True
+        if name in _CACHE_FIELDS and nd >= 4:
+            # (..., B, C, K, hd)
+            cdim, kdim, hdim = nd - 3, nd - 2, nd - 1
+            if not batch_sharded and dsize > 1 and shape[cdim] % dsize == 0:
+                entries[cdim] = data_entry
+            if msize > 1 and shape[kdim] % msize == 0:
+                entries[kdim] = "model"
+            elif msize > 1 and shape[hdim] % msize == 0:
+                entries[hdim] = "model"
+        elif name == "positions" and nd >= 2:
+            cdim = nd - 1
+            if not batch_sharded and dsize > 1 and shape[cdim] % dsize == 0:
+                entries[cdim] = data_entry
+        elif name in _BATCHED_FIELDS and msize > 1:
+            cand = [(shape[i], i) for i in range(nd)
+                    if entries[i] is None and i != bdim
+                    and shape[i] % msize == 0 and shape[i] >= msize]
+            if cand:
+                _, i = max(cand)
+                entries[i] = "model"
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, state_sds)

@@ -1,0 +1,184 @@
+"""Mamba2 (state-space duality) blocks, chunked-scan formulation.
+
+The SSD forward runs in chunks of ``cfg.ssm_chunk``: within-chunk terms are
+quadratic in the chunk (MXU-friendly batched matmuls), the inter-chunk state
+(B, H, P, N) is carried by a ``lax.scan`` — O(S * Q) compute, O(1)-in-S decode
+state, which is what makes the SSM archs eligible for the ``long_500k`` cell.
+
+Shapes follow the Mamba2 paper: d_inner = expand * d_model, H = d_inner / P
+heads of head-dim P, single B/C group (G=1), state size N = cfg.ssm_state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import dense_init, rms_norm, shard
+
+
+def ssm_dims(cfg: ModelConfig) -> tuple:
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    return d_in, H, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * N                       # x, B, C go through the conv
+    ks = jax.random.split(key, 4)
+    pdt = cfg.jparam_dtype
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * N + H), pdt, fan_in=d),
+        "conv_w": dense_init(ks[1], (conv_dim, cfg.ssm_conv), pdt, fan_in=cfg.ssm_conv),
+        "conv_b": jnp.zeros((conv_dim,), pdt),
+        "A_log": jnp.zeros((H,), pdt),            # A = -exp(A_log) = -1 at init
+        "D": jnp.ones((H,), pdt),
+        "dt_bias": jnp.zeros((H,), pdt),
+        "norm": jnp.ones((d_in,), pdt),
+        "out_proj": dense_init(ks[2], (d_in, d), pdt, fan_in=d_in),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d.  x: (B, S, C); w: (C, K)."""
+    B, S, C = x.shape
+    K = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    # depthwise: gather K shifted copies — cheap, fusible, no conv primitive needed
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + xp[:, i : i + S, :] * w[:, i]
+    return out + b
+
+
+def _segsum_chunk(dA: jax.Array) -> jax.Array:
+    """dA: (..., Q) per-step log-decay.  Returns (..., Q, Q) matrix
+    M[i,j] = sum_{t=j+1..i} dA_t  for j <= i, -inf above diagonal."""
+    Q = dA.shape[-1]
+    cs = jnp.cumsum(dA, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]      # cs_i - cs_j
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bmat, Cmat, chunk: int) -> tuple:
+    """Chunked SSD scan.
+
+    x: (B, S, H, P); dt: (B, S, H); A: (H,); Bmat/Cmat: (B, S, N).
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    Bb, S, H, P = x.shape
+    N = Bmat.shape[-1]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+
+    xc = x.reshape(Bb, nc, Q, H, P)
+    dtc = dt.reshape(Bb, nc, Q, H)
+    Bc = Bmat.reshape(Bb, nc, Q, N)
+    Cc = Cmat.reshape(Bb, nc, Q, N)
+    dA = dtc * A                                     # (B,nc,Q,H) log-decay per step
+    cs = jnp.cumsum(dA, axis=2)                      # within-chunk cumulative
+
+    # Intra-chunk (quadratic in Q): y_i += C_i . sum_{j<=i} exp(cs_i-cs_j) dt_j B_j x_j
+    L = _segsum_chunk(dA.transpose(0, 1, 3, 2))      # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)   # (B,nc,Q,Q)
+    gated = scores[:, :, None] * jnp.exp(L)          # (B,nc,H,Q,Q)
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", gated, dtc, xc)
+
+    # Inter-chunk state recurrence over chunks.
+    decay_out = jnp.exp(cs)                                        # (B,nc,Q,H)
+    decay_state = jnp.exp(cs[:, :, -1:, :] - cs)                   # exp(cs_Q - cs_j)
+    chunk_state = jnp.einsum("bcqh,bcqh,bcqhp,bcqn->bchpn",
+                             decay_state, dtc, xc, Bc)             # per-chunk new-state term
+    chunk_decay = jnp.exp(cs[:, :, -1, :])                         # (B,nc,H)
+
+    def step(state, inp):
+        c_state, c_decay = inp                                     # (B,H,P,N), (B,H)
+        new = state * c_decay[..., None, None] + c_state
+        return new, state                                          # emit state BEFORE chunk
+
+    init = jnp.zeros((Bb, H, P, N), x.dtype)
+    final_state, prev_states = jax.lax.scan(
+        step, init,
+        (chunk_state.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)             # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cc, decay_out, prev_states)
+    y = (y_intra + y_inter).reshape(Bb, S, H, P)
+    return y, final_state
+
+
+def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence Mamba2 mixer.  x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    d_in, H, P, N = ssm_dims(cfg)
+    dt = x.dtype
+    z_x_bc_dt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt))
+    z, xbc, dtv = jnp.split(z_x_bc_dt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"].astype(dt), p["conv_b"].astype(dt)))
+    xs, Bmat, Cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(B, S, H, P)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs.astype(jnp.float32), dtv, A,
+                       Bmat.astype(jnp.float32), Cmat.astype(jnp.float32),
+                       cfg.ssm_chunk)
+    y = y + xs.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_in).astype(dt)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dt))
+    return shard(out, "batch", "seq", "d_model")
+
+
+# ---------------------------------------------------------------------------
+# Decode (O(1) state)
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    conv: jax.Array    # (B, conv_dim, K-1) last inputs
+    ssm: jax.Array     # (B, H, P, N)
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int) -> MambaState:
+    d_in, H, P, N = ssm_dims(cfg)
+    conv_dim = d_in + 2 * N
+    return MambaState(
+        conv=jnp.zeros((batch, conv_dim, cfg.ssm_conv - 1), jnp.float32),
+        ssm=jnp.zeros((batch, H, P, N), jnp.float32),
+    )
+
+
+def mamba2_decode_step(p: dict, x: jax.Array, state: MambaState,
+                       cfg: ModelConfig) -> tuple:
+    """x: (B, 1, d) -> (y (B,1,d), new_state)."""
+    B = x.shape[0]
+    d_in, H, P, N = ssm_dims(cfg)
+    dt = x.dtype
+    z_x_bc_dt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt))[:, 0]
+    z, xbc, dtv = jnp.split(z_x_bc_dt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    # conv over the stored window + current input
+    hist = jnp.concatenate([state.conv, xbc.astype(jnp.float32)[:, :, None]], axis=-1)
+    w = p["conv_w"].astype(jnp.float32)
+    conv_out = (hist * w[None]).sum(-1) + p["conv_b"].astype(jnp.float32)
+    xbc = jax.nn.silu(conv_out)
+    new_conv = hist[:, :, 1:]
+    xs, Bmat, Cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xs = xs.reshape(B, H, P)
+    dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dtv * A)                               # (B, H)
+    upd = jnp.einsum("bh,bhp,bn->bhpn", dtv, xs, Bmat)
+    ssm = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cmat, ssm)
+    y = y + xs * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, d_in).astype(dt)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y, p["out_proj"].astype(dt))[:, None]
+    return out, MambaState(conv=new_conv, ssm=ssm)

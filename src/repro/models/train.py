@@ -1,0 +1,85 @@
+"""Loss and train-step factory shared by all architectures."""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..optim import (adamw_init, adamw_update, clip_by_global_norm,
+                     linear_warmup_cosine)
+from .common import ModelConfig
+from .layers import shard
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  weights: jax.Array = None) -> jax.Array:
+    """Mean token cross-entropy in fp32.  logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if weights is None:
+        return nll.mean()
+    w = weights.astype(jnp.float32)
+    return (nll * w).sum() / jnp.maximum(w.sum(), 1.0)
+
+
+def make_loss_fn(forward: Callable, cfg: ModelConfig, aux_weight: float = 0.01):
+    """forward(params, batch, cfg) -> (logits, aux).  Returns loss_fn."""
+
+    def loss_fn(params, batch):
+        logits, aux = forward(params, batch, cfg)
+        loss = cross_entropy(logits, batch["labels"], batch.get("weights"))
+        return loss + aux_weight * aux, {"ce": loss, "aux": aux}
+
+    return loss_fn
+
+
+def make_train_step(forward: Callable, cfg: ModelConfig, *,
+                    base_lr: float = 3e-4, warmup: int = 100,
+                    total_steps: int = 10000, clip: float = 1.0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With cfg.accum_steps > 1 the global batch is split into that many
+    microbatches processed sequentially under a lax.scan (gradient
+    accumulation): peak activation memory scales with the microbatch, at the
+    cost of re-running the forward/backward loop — the standard lever when a
+    shape does not fit HBM."""
+    loss_fn = make_loss_fn(forward, cfg)
+    A = max(int(cfg.accum_steps), 1)
+
+    def _grads(params, batch):
+        if A == 1:
+            return jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        micro = {k: v.reshape((A, v.shape[0] // A) + v.shape[1:])
+                 for k, v in batch.items()}
+        zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, mb):
+            g_acc, loss_acc, aux_acc = acc
+            (loss, parts), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+            g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+            return (g_acc, loss_acc + loss, aux_acc + parts["aux"]), parts["ce"]
+
+        (g_sum, loss_sum, aux_sum), ces = jax.lax.scan(
+            body, (zero, jnp.zeros(()), jnp.zeros(())), micro)
+        grads = jax.tree.map(lambda g: g / A, g_sum)
+        return (loss_sum / A, {"ce": ces.mean(), "aux": aux_sum / A}), grads
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = _grads(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip)
+        lr = linear_warmup_cosine(opt_state.step, base_lr=base_lr,
+                                  warmup_steps=warmup, total_steps=total_steps)
+        params, opt_state = adamw_update(params, grads, opt_state, lr)
+        metrics = {"loss": loss, "ce": parts["ce"], "aux": parts["aux"],
+                   "grad_norm": gnorm, "lr": lr}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_optimizer(params):
+    return adamw_init(params)

@@ -1,0 +1,196 @@
+"""Decoder-only transformer LM covering the dense, MoE and VLM families.
+
+One scanned block structure; config switches select GQA shape, qk-norm, QKV
+bias, sliding-window attention, and MoE vs dense FFN.  The VLM family is the
+same LM consuming a prefix of precomputed patch embeddings (the assignment
+specifies the vision frontend as a stub).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .attention import (KVCache, attention, cache_from_prefill,
+                        decode_attention_step, init_attention, init_cache,
+                        _project_qkv)
+from .common import ModelConfig
+from .layers import embed, init_embed, init_mlp, mlp, rms_norm, shard, unembed
+from .moe import init_moe, moe_ffn
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+def init_block(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "ln1": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
+        "attn": init_attention(k1, cfg),
+        "ln2": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(k2, cfg)
+    else:
+        p["mlp"] = init_mlp(k3, cfg)
+    return p
+
+
+def block_forward(p: dict, x: jax.Array, cfg: ModelConfig, positions) -> tuple:
+    h = rms_norm(x, p["ln1"], cfg.norm_eps, cfg.use_pallas)
+    h = attention(p["attn"], h, cfg, positions=positions, causal=True,
+                  window=cfg.sliding_window)
+    x = x + h
+    h = rms_norm(x, p["ln2"], cfg.norm_eps, cfg.use_pallas)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        h, aux = moe_ffn(p["moe"], h, cfg)
+    else:
+        h = mlp(p["mlp"], h, cfg)
+    x = x + h
+    return shard(x, "batch", "seq_sp", "d_model"), aux
+
+
+# ---------------------------------------------------------------------------
+# Model
+# ---------------------------------------------------------------------------
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ke, kl, kf = jax.random.split(key, 3)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    layers = jax.vmap(lambda k: init_block(k, cfg))(layer_keys)
+    return {
+        "embed": init_embed(ke, cfg),
+        "layers": layers,
+        "ln_f": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
+    }
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    if cfg.remat == "block":
+        return jax.checkpoint(fn)
+    return fn
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds: Optional[jax.Array] = None) -> tuple:
+    """Returns (logits, aux_loss).  tokens: (B, S_text); prefix_embeds (VLM):
+    (B, S_vis, d) prepended before the text tokens."""
+    x = embed(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = block_forward(lp, x, cfg, positions)
+        return (x, aux + a), None
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    else:
+        aux = jnp.zeros((), jnp.float32)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda a: a[i], params["layers"])
+            (x, aux), _ = body((x, aux), lp)
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps, cfg.use_pallas)
+    logits = unembed(params["embed"], x, cfg)
+    if prefix_embeds is not None:
+        logits = logits[:, prefix_embeds.shape[1]:]
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Prefill / decode
+# ---------------------------------------------------------------------------
+
+class DecodeState(NamedTuple):
+    caches: KVCache      # stacked over layers: fields (L, B, C, K, hd)
+
+
+def _block_prefill(p, x, cfg: ModelConfig, positions):
+    """Like block_forward but also returns this layer's (k, v) for the cache."""
+    h = rms_norm(x, p["ln1"], cfg.norm_eps, cfg.use_pallas)
+    B, S, _ = h.shape
+    q, k, v = _project_qkv(p["attn"], h, h, cfg, positions, positions)
+    from .attention import blocked_attention, plain_attention
+
+    if S <= 2048 or S % 512:
+        out = plain_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    else:
+        out = blocked_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["attn"]["wo"].astype(h.dtype))
+    x = x + y
+    h = rms_norm(x, p["ln2"], cfg.norm_eps, cfg.use_pallas)
+    if cfg.family == "moe":
+        h, _ = moe_ffn(p["moe"], h, cfg)
+    else:
+        h = mlp(p["mlp"], h, cfg)
+    return x + h, (k, v)
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig,
+            prefix_embeds: Optional[jax.Array] = None) -> tuple:
+    """Forward pass that also builds the per-layer KV caches.
+    Returns (last_logits, DecodeState)."""
+    x = embed(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        x, kv = _block_prefill(lp, x, cfg, positions)
+        return x, kv
+
+    body = _maybe_remat(body, cfg)
+    x, (ks, vs) = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps, cfg.use_pallas)
+    logits = unembed(params["embed"], x[:, -1:], cfg)
+    caches = jax.vmap(lambda k, v: cache_from_prefill(cfg, k, v, cfg.sliding_window))(ks, vs)
+    return logits, DecodeState(caches)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, capacity: int) -> DecodeState:
+    """Fresh decode state with given cache capacity (= seq_len, or window for SWA)."""
+    cap = min(capacity, cfg.sliding_window) if cfg.sliding_window else capacity
+    L = cfg.n_layers
+    caches = KVCache(
+        k=jnp.zeros((L, batch, cap, cfg.n_kv_heads, cfg.head_dim), cfg.jdtype),
+        v=jnp.zeros((L, batch, cap, cfg.n_kv_heads, cfg.head_dim), cfg.jdtype),
+        pos=jnp.zeros((L, batch), jnp.int32),
+        positions=jnp.full((L, batch, cap), -1, jnp.int32),
+    )
+    return DecodeState(caches)
+
+
+def decode_step(params: dict, state: DecodeState, token: jax.Array,
+                cfg: ModelConfig) -> tuple:
+    """One decoding step: token (B, 1) -> (logits (B,1,V), new state)."""
+    x = embed(params["embed"], token, cfg)
+    # Boost MoE capacity for tiny decode batches so routing rarely drops.
+    dcfg = cfg.replace(capacity_factor=max(cfg.capacity_factor, 8.0)) \
+        if cfg.family == "moe" else cfg
+
+    def body(x, inp):
+        lp, cache = inp
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        h, new_cache = decode_attention_step(lp["attn"], h, cache, cfg,
+                                             window=cfg.sliding_window)
+        x = x + h
+        h = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            h, _ = moe_ffn(lp["moe"], h, dcfg)
+        else:
+            h = mlp(lp["mlp"], h, cfg)
+        return x + h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], state.caches))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, DecodeState(new_caches)

@@ -1,0 +1,336 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, recurrent), in the 7:1 arrangement of the xLSTM paper.
+
+The mLSTM is executed in a chunked linear-attention form (O(S*Q) like the
+Mamba2 SSD path) with exponential input gates and sigmoid forget gates; we
+omit the paper's max-stabilizer in the chunked path (compute is fp32 and the
+gates are bounded at init) — shapes and FLOPs match the stabilized version.
+The sLSTM's recurrent gate connections make it inherently sequential; it runs
+as a ``lax.scan`` over time (O(1) state => long_500k eligible).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig
+from .layers import dense_init, embed, init_embed, init_mlp, mlp, rms_norm, shard, unembed
+
+
+def mlstm_dims(cfg: ModelConfig) -> tuple:
+    d_in = 2 * cfg.d_model
+    H = cfg.n_heads
+    P = d_in // H
+    return d_in, H, P
+
+
+def slstm_dims(cfg: ModelConfig) -> tuple:
+    H = cfg.n_heads
+    dh = cfg.d_model // H
+    return H, dh
+
+
+def ffn_dim(cfg: ModelConfig) -> int:
+    # xLSTM uses a 4/3 projection-factor FFN after sLSTM blocks (d_ff=0 in the
+    # assigned config means "use the family default").
+    return int(math.ceil(4 * cfg.d_model / 3 / 128) * 128)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def init_mlstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    d_in, H, P = mlstm_dims(cfg)
+    ks = jax.random.split(key, 6)
+    pdt = cfg.jparam_dtype
+    return {
+        "ln": jnp.ones((d,), pdt),
+        "up": dense_init(ks[0], (d, 2 * d_in), pdt),          # x_in, z
+        "wq": dense_init(ks[1], (d_in, d_in), pdt),
+        "wk": dense_init(ks[2], (d_in, d_in), pdt),
+        "wv": dense_init(ks[3], (d_in, d_in), pdt),
+        "wif": dense_init(ks[4], (d_in, 2 * H), pdt),         # input/forget gates
+        "down": dense_init(ks[5], (d_in, d), pdt),
+    }
+
+
+def _mlstm_chunked(q, k, v, li, lf, chunk: int) -> jax.Array:
+    """q,k,v: (B,S,H,P) fp32; li: log input gate, lf: log forget gate (B,S,H).
+    Returns h (B,S,H,P)."""
+    B, S, H, P = q.shape
+    Q = min(chunk, S)
+    assert S % Q == 0
+    nc = S // Q
+    r = lambda a: a.reshape((B, nc, Q) + a.shape[2:])
+    q, k, v, li, lf = map(r, (q, k, v, li, lf))
+    scale = 1.0 / math.sqrt(P)
+
+    A = jnp.cumsum(lf, axis=2)                                   # (B,nc,Q,H) inclusive
+    # intra-chunk decay: D_ij = exp(A_i - A_j + li_j), j <= i
+    diff = A[:, :, :, None, :] - A[:, :, None, :, :] + li[:, :, None, :, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    D = jnp.where(mask, jnp.exp(diff), 0.0)                      # (B,nc,Q,Q,H)
+    qk = jnp.einsum("bcqhp,bckhp->bcqkh", q, k) * scale          # (B,nc,Q,Q,H)
+    w = qk * D
+    intra_h = jnp.einsum("bcqkh,bckhp->bcqhp", w, v)
+    intra_n = w.sum(axis=3)                                      # (B,nc,Q,H) = q.n intra
+
+    # inter-chunk state: C (B,H,P,P), n (B,H,P)
+    dec_state = jnp.exp(A[:, :, -1:, :] - A + li)                # (B,nc,Q,H)
+    new_C = jnp.einsum("bcqh,bcqhp,bcqhr->bchpr", dec_state, k, v)
+    new_n = jnp.einsum("bcqh,bcqhp->bchp", dec_state, k)
+    chunk_dec = jnp.exp(A[:, :, -1, :])                          # (B,nc,H)
+
+    def step(carry, inp):
+        C, n = carry
+        nC, nn, cd = inp
+        out = (C, n)
+        C = C * cd[:, :, None, None] + nC
+        n = n * cd[:, :, None] + nn
+        return (C, n), out
+
+    C0 = jnp.zeros((B, H, P, P), q.dtype)
+    n0 = jnp.zeros((B, H, P), q.dtype)
+    (_, _), (Cs, ns) = jax.lax.scan(
+        step, (C0, n0),
+        (new_C.transpose(1, 0, 2, 3, 4), new_n.transpose(1, 0, 2, 3),
+         chunk_dec.transpose(1, 0, 2)))
+    Cs = Cs.transpose(1, 0, 2, 3, 4)                             # (B,nc,H,P,P) pre-chunk states
+    ns = ns.transpose(1, 0, 2, 3)
+
+    inter_h = jnp.einsum("bcqh,bcqhp,bchpr->bcqhr", jnp.exp(A), q * scale, Cs)
+    inter_n = jnp.einsum("bcqh,bcqhp,bchp->bcqh", jnp.exp(A), q * scale, ns)
+    denom = jnp.maximum(jnp.abs(intra_n + inter_n), 1.0)
+    h = (intra_h + inter_h) / denom[..., None]
+    return h.reshape(B, S, H, P)
+
+
+def mlstm_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = x.shape
+    d_in, H, P = mlstm_dims(cfg)
+    dt = x.dtype
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h, p["up"].astype(dt))
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q = jnp.einsum("bse,ef->bsf", x_in, p["wq"].astype(dt)).reshape(B, S, H, P)
+    k = jnp.einsum("bse,ef->bsf", x_in, p["wk"].astype(dt)).reshape(B, S, H, P)
+    v = jnp.einsum("bse,ef->bsf", x_in, p["wv"].astype(dt)).reshape(B, S, H, P)
+    gates = jnp.einsum("bse,eg->bsg", x_in, p["wif"].astype(dt)).astype(jnp.float32)
+    gi, gf = jnp.split(gates, 2, axis=-1)                        # (B,S,H)
+    li = -jax.nn.softplus(-gi)                                   # log sigmoid — bounded <= 0
+    lf = -jax.nn.softplus(-gf)
+    y = _mlstm_chunked(q.astype(jnp.float32), k.astype(jnp.float32),
+                       v.astype(jnp.float32), li, lf, cfg.xlstm_chunk)
+    y = y.reshape(B, S, d_in).astype(dt) * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, p["down"].astype(dt))
+    return shard(out, "batch", "seq", "d_model")
+
+
+class MLSTMState(NamedTuple):
+    C: jax.Array   # (B, H, P, P)
+    n: jax.Array   # (B, H, P)
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    d_in, H, P = mlstm_dims(cfg)
+    return MLSTMState(C=jnp.zeros((batch, H, P, P), jnp.float32),
+                      n=jnp.zeros((batch, H, P), jnp.float32))
+
+
+def mlstm_decode_step(p: dict, x: jax.Array, state: MLSTMState, cfg: ModelConfig):
+    B = x.shape[0]
+    d_in, H, P = mlstm_dims(cfg)
+    dt = x.dtype
+    h = rms_norm(x, p["ln"], cfg.norm_eps)[:, 0]
+    up = jnp.einsum("bd,de->be", h, p["up"].astype(dt))
+    x_in, z = jnp.split(up, 2, axis=-1)
+    q = (x_in @ p["wq"].astype(dt)).reshape(B, H, P).astype(jnp.float32)
+    k = (x_in @ p["wk"].astype(dt)).reshape(B, H, P).astype(jnp.float32)
+    v = (x_in @ p["wv"].astype(dt)).reshape(B, H, P).astype(jnp.float32)
+    gates = (x_in @ p["wif"].astype(dt)).astype(jnp.float32)
+    gi, gf = jnp.split(gates, 2, axis=-1)
+    fi = jnp.exp(-jax.nn.softplus(-gi))                          # sigmoid-style gates
+    ff = jnp.exp(-jax.nn.softplus(-gf))
+    C = state.C * ff[..., None, None] + fi[..., None, None] * jnp.einsum(
+        "bhp,bhr->bhpr", k, v)
+    n = state.n * ff[..., None] + fi[..., None] * k
+    scale = 1.0 / math.sqrt(P)
+    num = jnp.einsum("bhp,bhpr->bhr", q * scale, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", q * scale, n)), 1.0)
+    y = (num / den[..., None]).reshape(B, d_in).astype(dt) * jax.nn.silu(z)
+    out = (y @ p["down"].astype(dt))[:, None]
+    return out, MLSTMState(C=C, n=n)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    H, dh = slstm_dims(cfg)
+    ks = jax.random.split(key, 4)
+    pdt = cfg.jparam_dtype
+    return {
+        "ln": jnp.ones((d,), pdt),
+        "wx": dense_init(ks[0], (d, 4 * d), pdt),                # z,i,f,o from input
+        "r": dense_init(ks[1], (H, dh, 4 * dh), pdt) * 0.1,      # recurrent, block-diag per head
+        "ln2": jnp.ones((d,), pdt),
+        "ffn": init_mlp(ks[2], cfg, d_ff=ffn_dim(cfg)),
+        "out": dense_init(ks[3], (d, d), pdt),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, d)
+    n: jax.Array
+    m: jax.Array
+    h: jax.Array
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    z = jnp.zeros((batch, d), jnp.float32)
+    return SLSTMState(c=z, n=jnp.copy(z), m=jnp.full((batch, d), -1e30), h=jnp.copy(z))
+
+
+def _slstm_cell(p, xt, state: SLSTMState, cfg: ModelConfig) -> SLSTMState:
+    """One recurrent step.  xt: (B, d) fp32 pre-activation from W x."""
+    B, d = state.h.shape
+    H, dh = slstm_dims(cfg)
+    hr = state.h.reshape(B, H, dh)
+    rec = jnp.einsum("bhd,hde->bhe", hr, p["r"].astype(jnp.float32)).reshape(B, 4 * d)
+    zt, it, ft, ot = jnp.split(xt + rec, 4, axis=-1)
+    m_new = jnp.maximum(ft + state.m, it)                        # log-space stabilizer
+    i_ = jnp.exp(it - m_new)
+    f_ = jnp.exp(ft + state.m - m_new)
+    c = f_ * state.c + i_ * jnp.tanh(zt)
+    n = jnp.maximum(f_ * state.n + i_, 1e-6)
+    h = jax.nn.sigmoid(ot) * c / n
+    return SLSTMState(c=c, n=n, m=m_new, h=h)
+
+
+def slstm_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    B, S, d = x.shape
+    dt = x.dtype
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    xt = jnp.einsum("bsd,de->bse", h_in, p["wx"].astype(dt)).astype(jnp.float32)
+
+    def step(state, x_t):
+        new = _slstm_cell(p, x_t, state, cfg)
+        return new, new.h
+
+    s0 = init_slstm_state(cfg, B)
+    _, hs = jax.lax.scan(step, s0, xt.transpose(1, 0, 2))
+    y = hs.transpose(1, 0, 2).astype(dt)                         # (B,S,d)
+    y = jnp.einsum("bsd,de->bse", y, p["out"].astype(dt))
+    x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(p["ffn"], h2, cfg)
+
+
+def slstm_decode_step(p: dict, x: jax.Array, state: SLSTMState, cfg: ModelConfig):
+    dt = x.dtype
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)[:, 0]
+    xt = (h_in @ p["wx"].astype(dt)).astype(jnp.float32)
+    new = _slstm_cell(p, xt, state, cfg)
+    y = (new.h.astype(dt) @ p["out"].astype(dt))[:, None]
+    x = x + y
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    return x + mlp(p["ffn"], h2, cfg), new
+
+
+# ---------------------------------------------------------------------------
+# Full model: groups of (slstm_every - 1) mLSTM + 1 sLSTM
+# ---------------------------------------------------------------------------
+
+def xlstm_group_shape(cfg: ModelConfig) -> tuple:
+    k = cfg.slstm_every
+    assert cfg.n_layers % k == 0, "n_layers must be divisible by slstm_every"
+    return cfg.n_layers // k, k - 1          # (n_groups, mlstm per group)
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    ng, nm = xlstm_group_shape(cfg)
+    ke, km, ks = jax.random.split(key, 3)
+    mkeys = jax.random.split(km, ng * nm)
+    ml = jax.vmap(lambda k: init_mlstm(k, cfg))(mkeys)
+    ml = jax.tree.map(lambda a: a.reshape((ng, nm) + a.shape[1:]), ml)
+    skeys = jax.random.split(ks, ng)
+    sl = jax.vmap(lambda k: init_slstm(k, cfg))(skeys)
+    return {
+        "embed": init_embed(ke, cfg),
+        "mlstm": ml,              # (ng, nm, ...)
+        "slstm": sl,              # (ng, ...)
+        "ln_f": jnp.ones((cfg.d_model,), cfg.jparam_dtype),
+    }
+
+
+def forward(params: dict, tokens: jax.Array, cfg: ModelConfig) -> tuple:
+    x = embed(params["embed"], tokens, cfg)
+
+    def gbody(x, inp):
+        mg, sg = inp
+
+        def mbody(x, lp):
+            return x + mlstm_forward(lp, x, cfg), None
+
+        x, _ = jax.lax.scan(mbody, x, mg)
+        x = slstm_forward(sg, x, cfg)
+        return x, None
+
+    if cfg.remat == "block":
+        gbody = jax.checkpoint(gbody)
+    x, _ = jax.lax.scan(gbody, x, (params["mlstm"], params["slstm"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    return unembed(params["embed"], x, cfg), jnp.zeros((), jnp.float32)
+
+
+class XLSTMState(NamedTuple):
+    ml: MLSTMState    # (ng, nm, ...)
+    sl: SLSTMState    # (ng, ...)
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, capacity: int = 0) -> XLSTMState:
+    ng, nm = xlstm_group_shape(cfg)
+    d_in, H, P = mlstm_dims(cfg)
+    d = cfg.d_model
+    ml = MLSTMState(
+        C=jnp.zeros((ng, nm, batch, H, P, P), jnp.float32),
+        n=jnp.zeros((ng, nm, batch, H, P), jnp.float32),
+    )
+    sl = SLSTMState(
+        c=jnp.zeros((ng, batch, d), jnp.float32),
+        n=jnp.zeros((ng, batch, d), jnp.float32),
+        m=jnp.full((ng, batch, d), -1e30),
+        h=jnp.zeros((ng, batch, d), jnp.float32),
+    )
+    return XLSTMState(ml, sl)
+
+
+def decode_step(params: dict, state: XLSTMState, token: jax.Array, cfg: ModelConfig):
+    x = embed(params["embed"], token, cfg)
+
+    def gbody(x, inp):
+        mg, sg, mstate, sstate = inp
+
+        def mbody(x, linp):
+            lp, ls = linp
+            y, new = mlstm_decode_step(lp, x, ls, cfg)
+            return x + y, new
+
+        x, new_m = jax.lax.scan(mbody, x, (mg, mstate))
+        x, new_s = slstm_decode_step(sg, x, sstate, cfg)
+        return x, (new_m, new_s)
+
+    x, (new_ml, new_sl) = jax.lax.scan(
+        gbody, x, (params["mlstm"], params["slstm"], state.ml, state.sl))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    logits = unembed(params["embed"], x, cfg)
+    return logits, XLSTMState(new_ml, new_sl)

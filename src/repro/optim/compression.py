@@ -1,0 +1,74 @@
+"""Gradient compression for bandwidth-constrained (inter-pod) reduction.
+
+Two codecs, both with exact decompress-side shapes so they compose with any
+collective schedule:
+
+ - top-k sparsification with error feedback (memory = residual pytree),
+ - int8 linear quantization (per-tensor scale).
+
+At 1000+ node scale, inter-pod gradient all-reduce over DCN is the scarcest
+link; top-k (k ~ 1%) plus error feedback is the standard trick to push the
+collective term of the roofline down ~100x at negligible quality cost.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress(x: jax.Array, frac: float):
+    """Keep the top ``frac`` fraction of entries by magnitude.
+    Returns (values, flat_indices, original_shape)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    taken = flat[idx]
+    return taken, idx, x.shape
+
+
+def topk_decompress(values, idx, shape) -> jax.Array:
+    out = jnp.zeros(int(jnp.prod(jnp.array(shape))), jnp.float32)
+    out = out.at[idx].set(values)
+    return out.reshape(shape)
+
+
+def int8_compress(x: jax.Array):
+    flat = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(flat)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(flat / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def int8_decompress(q, scale) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+class ErrorFeedbackState(NamedTuple):
+    residual: dict  # pytree like grads
+
+
+def ef_init(grads) -> ErrorFeedbackState:
+    return ErrorFeedbackState(jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.float32), grads))
+
+
+def ef_compress_update(grads, state: ErrorFeedbackState, frac: float = 0.01):
+    """Error-feedback top-k: compress (grad + residual); residual accumulates
+    what was dropped.  Returns (compressed_pytree, new_state) where each leaf
+    of compressed is (values, idx, shape)."""
+    def one(g, r):
+        corrected = g.astype(jnp.float32) + r
+        vals, idx, shape = topk_compress(corrected, frac)
+        dense = topk_decompress(vals, idx, shape)
+        new_r = corrected - dense
+        return (vals, idx, shape), new_r
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_r = tdef.flatten_up_to(state.residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = tdef.unflatten([o[0] for o in outs])
+    new_res = tdef.unflatten([o[1] for o in outs])
+    return comp, ErrorFeedbackState(new_res)

@@ -1,0 +1,22 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(step, *, base_lr: float, total_steps: int, min_ratio: float = 0.1):
+    frac = jnp.clip(step.astype(jnp.float32) / max(total_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return base_lr * (min_ratio + (1.0 - min_ratio) * cos)
+
+
+def linear_warmup_cosine(step, *, base_lr: float, warmup_steps: int,
+                         total_steps: int, min_ratio: float = 0.1):
+    step_f = step.astype(jnp.float32)
+    warm = step_f / max(warmup_steps, 1)
+    after = cosine_schedule(step - warmup_steps,
+                            base_lr=base_lr,
+                            total_steps=max(total_steps - warmup_steps, 1),
+                            min_ratio=min_ratio)
+    return jnp.where(step_f < warmup_steps, base_lr * warm, after)

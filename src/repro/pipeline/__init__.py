@@ -1,0 +1,10 @@
+"""Pipeline-parallel runtime driven by the paper's interval planner."""
+
+from .schedule import gpipe_ticks, stage_microbatch, bubble_fraction
+from .runtime import (PipelineSpec, make_stage_params, pipelined_loss_fn,
+                      sequential_loss_fn)
+from .replan import StragglerMonitor, replan_stages
+
+__all__ = ["gpipe_ticks", "stage_microbatch", "bubble_fraction",
+           "PipelineSpec", "make_stage_params", "pipelined_loss_fn",
+           "sequential_loss_fn", "StragglerMonitor", "replan_stages"]

@@ -1,0 +1,66 @@
+"""Online re-planning: straggler mitigation and elastic scaling.
+
+This is the paper's heterogeneous-processor scenario arising *online*:
+observed per-stage step times turn a homogeneous pod platform into an
+effectively heterogeneous one, and the paper's heuristics re-balance the
+layer intervals.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from ..core import (Objective, Platform, StagePlan, Workload,
+                    interval_cycle_times, plan, replan_for_straggler)
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA of per-stage step times; flags stages slower than predicted."""
+
+    num_stages: int
+    alpha: float = 0.2
+    threshold: float = 1.3
+    ewma: Optional[np.ndarray] = None
+
+    def observe(self, stage_times) -> np.ndarray:
+        t = np.asarray(stage_times, dtype=float)
+        if self.ewma is None:
+            self.ewma = t.copy()
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma + self.alpha * t
+        return self.ewma
+
+    def stragglers(self, predicted) -> list:
+        """Stage indices whose EWMA exceeds threshold x predicted cycle time."""
+        if self.ewma is None:
+            return []
+        pred = np.asarray(predicted, dtype=float)
+        return [int(j) for j in range(len(pred))
+                if pred[j] > 0 and self.ewma[j] / pred[j] > self.threshold]
+
+
+def replan_stages(workload: Workload, platform: Platform, current: StagePlan,
+                  monitor: StragglerMonitor) -> tuple:
+    """If stragglers are detected, degrade the platform and re-plan.
+    Returns (new_plan_or_None, degraded_platform)."""
+    predicted = interval_cycle_times(workload, platform, current.mapping)
+    bad = monitor.stragglers(predicted)
+    if not bad:
+        return None, platform
+    new_plan, degraded = replan_for_straggler(
+        workload, platform, current, monitor.ewma,
+        slowdown_threshold=monitor.threshold)
+    return new_plan, degraded
+
+
+def elastic_replan(workload: Workload, old_platform: Platform,
+                   new_num_pods: int) -> StagePlan:
+    """Elastic scaling: the pod count changed (preemption / capacity add);
+    re-run the planner on the resized platform."""
+    s = np.full(new_num_pods, float(np.median(old_platform.s)))
+    pf = Platform(s, old_platform.b, name=f"elastic-{new_num_pods}")
+    return plan(workload, pf, Objective("period"), mode="auto")

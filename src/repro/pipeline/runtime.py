@@ -1,0 +1,184 @@
+"""shard_map pipeline runtime executing a planner StagePlan.
+
+The paper's interval mapping becomes executable here:
+
+ 1. ``make_stage_params`` packs the stacked per-layer weights (L, ...) into
+    padded per-stage stacks (S, L_max, ...) + a validity mask, following the
+    plan's (possibly unequal) intervals — heterogeneous-speed pods get
+    intervals sized by the paper's heuristics.
+ 2. ``pipelined_loss_fn`` builds a differentiable GPipe pipeline:
+    ``shard_map`` manual over the stage axis (explicit ``ppermute`` hand-offs
+    = the delta/b terms of Eq. 1/2), everything else left to GSPMD (DP/TP
+    inside a stage).  Backward is JAX autodiff through the tick scan — the
+    reversed pipeline — with each stage step rematerialized.
+
+The microbatch loop is a ``lax.scan`` over M + S - 1 ticks; stage 0 injects
+microbatch t at tick t, the last stage computes per-microbatch CE loss, and
+the scalar losses are summed across stages with ``psum`` (only the last
+stage contributes non-zeros).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..core.planner import StagePlan
+from ..models.common import ModelConfig
+from ..models.layers import embed, rms_norm, unembed
+from ..models.train import cross_entropy
+from ..models.transformer import block_forward
+from .schedule import gpipe_ticks
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineSpec:
+    num_stages: int
+    layers_per_stage: int            # padded depth L_max
+    num_microbatches: int
+    stage_axis: str = "stage"
+
+
+def make_stage_params(layer_params, plan: StagePlan, num_pods: int):
+    """Pack (L, ...) stacked layer weights into per-POD stacks
+    (num_pods, L_max, ...) + validity mask (num_pods, L_max).
+
+    The paper's mapping allocates interval j to processor alloc(j); weights of
+    interval j therefore land in pod slot alloc(j), pods not enrolled by the
+    plan stay empty (all-masked) and just idle.  Padding slots carry zeros and
+    are masked to identity in the stage body.
+    """
+    Lmax = plan.max_stage_size
+    sizes = plan.stage_sizes
+    alloc = plan.mapping.alloc
+    assert max(alloc) < num_pods, (alloc, num_pods)
+    starts = np.cumsum([0] + list(sizes))[:-1]
+
+    def pack(leaf):
+        out = jnp.zeros((num_pods, Lmax) + leaf.shape[1:], leaf.dtype)
+        for j, (start, size) in enumerate(zip(starts, sizes)):
+            out = out.at[alloc[j], :size].set(leaf[start:start + size])
+        return out
+
+    return jax.tree.map(pack, layer_params), make_stage_mask(plan, num_pods)
+
+
+def make_stage_mask(plan: StagePlan, num_pods: int):
+    """(num_pods, L_max) bool validity mask for the plan (no weights needed)."""
+    mask = jnp.zeros((num_pods, plan.max_stage_size), bool)
+    for j, size in enumerate(plan.stage_sizes):
+        mask = mask.at[plan.mapping.alloc[j], :size].set(True)
+    return mask
+
+
+def _stage_fn(stage_layers, mask, x, cfg: ModelConfig, positions):
+    """Run this stage's (padded) layers; masked slots are identity."""
+
+    def body(x, inp):
+        lp, m = inp
+        y, _ = block_forward(lp, x, cfg, positions)
+        return jnp.where(m, y, x), None
+
+    x, _ = jax.lax.scan(body, x, (stage_layers, mask))
+    return x
+
+
+def pipelined_loss_fn(cfg: ModelConfig, plan: StagePlan, num_microbatches: int,
+                      mask, mesh=None, stage_axis: str = "stage") -> Callable:
+    """Returns loss(params, batch) running the plan's pipeline.
+
+    params = {"embed": ..., "stages": (S, L_max, ...) packed tree, "ln_f": ...}
+    (the bool validity ``mask`` (S, L_max) is closed over — it must not
+    receive gradients); batch = {"tokens": (B, S_seq), "labels": (B, S_seq)}
+    with B divisible by num_microbatches.
+    """
+    m = plan.num_stages                  # enrolled intervals (may be < pods)
+    M = num_microbatches
+    ticks = gpipe_ticks(m, M)
+    alloc = list(plan.mapping.alloc)     # chain position j -> pod alloc[j]
+
+    def loss_fn(params, batch):
+        tokens, labels = batch["tokens"], batch["labels"]
+        B, seq = tokens.shape
+        assert B % M == 0, (B, M)
+        mb = B // M
+        tok_q = tokens.reshape(M, mb, seq)
+        lab_q = labels.reshape(M, mb, seq)
+
+        def pipe(stages, mask, embed_p, lnf, tok_q, lab_q):
+            sidx = jax.lax.axis_index(stage_axis)
+            npods = jax.lax.axis_size(stage_axis)
+            stages = jax.tree.map(lambda a: a[0], stages)      # local pod's stack
+            mask_l = mask[0]
+            positions = jnp.arange(seq)[None, :]
+
+            # pod -> chain position (or -1 if not enrolled by the plan)
+            chain_pos_arr = np.full(npods, -1, np.int64)
+            for j, a in enumerate(alloc):
+                chain_pos_arr[a] = j
+            chain_pos = jnp.asarray(chain_pos_arr)[sidx]
+
+            x0 = jnp.zeros((mb, seq, cfg.d_model), cfg.jdtype)
+            losses0 = jnp.zeros((M,), jnp.float32)
+
+            def tick_fn(carry, t):
+                x_in, losses = carry
+                mb_idx = t - chain_pos
+                # the plan's first pod injects microbatch t (embedded)
+                tok = tok_q[jnp.clip(t, 0, M - 1)]
+                injected = embed(embed_p, tok, cfg)
+                x = jnp.where(sidx == alloc[0], injected, x_in)
+                y = _stage_fn(stages, mask_l, x, cfg, positions)
+                active = (chain_pos >= 0) & (mb_idx >= 0) & (mb_idx < M)
+                # the plan's last pod computes this microbatch's loss
+                lab = lab_q[jnp.clip(mb_idx, 0, M - 1)]
+                h = rms_norm(y, lnf, cfg.norm_eps)
+                logits = unembed(embed_p, h, cfg)
+                ce = cross_entropy(logits, lab)
+                take = active & (sidx == alloc[-1])
+                losses = losses.at[jnp.clip(mb_idx, 0, M - 1)].add(
+                    jnp.where(take, ce, 0.0))
+                # hand off along the plan's chain (the paper's delta/b edges)
+                perm = [(alloc[j], alloc[j + 1]) for j in range(m - 1)]
+                x_next = jax.lax.ppermute(y, stage_axis, perm) if perm else y
+                return (x_next, losses), None
+
+            tick_body = jax.checkpoint(tick_fn)
+            (_, losses), _ = jax.lax.scan(tick_body, (x0, losses0),
+                                          jnp.arange(ticks))
+            # only the last stage holds real losses; share them
+            losses = jax.lax.psum(losses, stage_axis)
+            return losses.mean()
+
+        pipe_mapped = jax.shard_map(
+            pipe,
+            mesh=mesh,
+            in_specs=(P(stage_axis), P(stage_axis), P(), P(), P(), P()),
+            out_specs=P(),
+            axis_names={stage_axis},
+            check_vma=False,
+        )
+        return pipe_mapped(params["stages"], mask, params["embed"],
+                           params["ln_f"], tok_q, lab_q)
+
+    return loss_fn
+
+
+def sequential_loss_fn(cfg: ModelConfig) -> Callable:
+    """Reference: same math, no pipeline (for equivalence tests)."""
+
+    def loss_fn(params, batch):
+        from ..models.transformer import forward
+
+        logits, _ = forward({"embed": params["embed"],
+                             "layers": params["layers"],
+                             "ln_f": params["ln_f"]},
+                            batch["tokens"], cfg)
+        return cross_entropy(logits, batch["labels"])
+
+    return loss_fn

@@ -1,0 +1,160 @@
+"""The paper's simulation study (Section 5), reproduced.
+
+For each experiment (E1-E4), each n in {5,10,20,40} and p in {10,100}, we draw
+50 random application/platform pairs and run the six heuristics over a grid of
+bounds, producing:
+
+ - trade-off curves: averaged (period, latency) per bound index — the paper's
+   Figures 2-7;
+ - failure thresholds: the largest bound for which a heuristic finds no
+   solution — the paper's Table 1.
+
+Fixed-period heuristics H1-H3 (and H4's inner splitter) are evaluated via a
+single exhaustion-run *trajectory* per instance (see
+``repro.core.heuristics.split_trajectory``), which is exact and ~20x faster
+than re-running per bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from ..core import (Platform, Workload, optimal_latency, run_heuristic)
+from ..core.heuristics import split_trajectory, sp_bi_p
+from ..core.metrics import period as eval_period
+from ..core.metrics import single_processor_mapping
+from .generators import gen_instance
+
+N_STAGES_DEFAULT = (5, 10, 20, 40)
+N_PROCS_DEFAULT = (10, 100)
+
+
+def trajectory(code: str, wl: Workload, pf: Platform) -> list:
+    return split_trajectory(code, wl, pf)
+
+
+def _result_from_trajectory(traj: list, p_fix: float) -> Optional[tuple]:
+    """First trajectory state with period <= p_fix, or None (failure)."""
+    for per, lat in traj:
+        if per <= p_fix + 1e-12:
+            return per, lat
+    return None
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    exp: str
+    n: int
+    p: int
+    n_pairs: int
+    bounds_rel: np.ndarray            # relative bound grid (fraction of single-proc period / L_opt mult)
+    # curves[heuristic] = (mean_period, mean_latency, feasible_frac) arrays over the grid
+    curves: dict
+    thresholds: dict                  # heuristic -> (mean, max) failure threshold
+
+
+def run_experiment(
+    exp: str,
+    n: int,
+    p: int,
+    n_pairs: int = 50,
+    n_bounds: int = 16,
+    seed0: int = 1234,
+    h4_iters: int = 10,
+    include_h4: bool = True,
+) -> ExperimentResult:
+    period_fracs = np.geomspace(0.04, 1.0, n_bounds)     # x single-processor period
+    latency_mults = np.linspace(1.0, 3.0, n_bounds)      # x optimal latency
+
+    codes_p = ["H1", "H2", "H3"] + (["H4"] if include_h4 else [])
+    codes_l = ["H5", "H6"]
+    acc = {c: [[] for _ in range(n_bounds)] for c in codes_p + codes_l}
+    thresholds = {c: [] for c in codes_p + codes_l}
+
+    for k in range(n_pairs):
+        wl, pf = gen_instance(exp, n, p, seed=seed0 + k)
+        hi = eval_period(wl, pf, single_processor_mapping(wl, pf.fastest()))
+        l_opt = optimal_latency(wl, pf)
+        pgrid = hi * period_fracs
+        lgrid = l_opt * latency_mults
+
+        trajs = {c: split_trajectory(c, wl, pf) for c in ["H1", "H2", "H3", "H4"]}
+        for c in ["H1", "H2", "H3"]:
+            if c not in acc:
+                continue
+            thresholds[c].append(min(per for per, _ in trajs[c]))
+            for bi, pb in enumerate(pgrid):
+                r = _result_from_trajectory(trajs[c], pb)
+                if r is not None:
+                    acc[c][bi].append(r)
+        if include_h4:
+            # H4 feasibility is characterized by its inner splitter's trajectory;
+            # the binary search then trades latency. Run the real H4 per bound.
+            thresholds["H4"].append(min(per for per, _ in trajs["H4"]))
+            for bi, pb in enumerate(pgrid):
+                if _result_from_trajectory(trajs["H4"], pb) is None:
+                    continue  # provably infeasible for H4 — skip the binary search
+                r = sp_bi_p(wl, pf, pb, iters=h4_iters)
+                if r.feasible:
+                    acc["H4"][bi].append((r.period, r.latency))
+
+        for c in codes_l:
+            thresholds[c].append(l_opt)
+            for bi, lb in enumerate(lgrid):
+                r = run_heuristic(c, wl, pf, lb)
+                if r.feasible:
+                    acc[c][bi].append((r.period, r.latency))
+
+    curves = {}
+    for c, cols in acc.items():
+        mean_per = np.array([np.mean([a for a, _ in col]) if col else np.nan for col in cols])
+        mean_lat = np.array([np.mean([b for _, b in col]) if col else np.nan for col in cols])
+        frac = np.array([len(col) / n_pairs for col in cols])
+        curves[c] = (mean_per, mean_lat, frac)
+
+    thr = {c: (float(np.mean(v)), float(np.max(v))) for c, v in thresholds.items()}
+    grid = period_fracs  # stored for reference; latency grids are the mults
+    return ExperimentResult(exp, n, p, n_pairs, grid, curves, thr)
+
+
+def failure_thresholds(
+    exps=("E1", "E2", "E3", "E4"),
+    ns=N_STAGES_DEFAULT,
+    p: int = 10,
+    n_pairs: int = 50,
+    seed0: int = 1234,
+) -> dict:
+    """The paper's Table 1: per (experiment, heuristic, n), the failure
+    threshold, averaged over instances.  Returns {exp: {code: {n: value}}}."""
+    out: dict = {}
+    for exp in exps:
+        out[exp] = {c: {} for c in ["H1", "H2", "H3", "H4", "H5", "H6"]}
+        for n in ns:
+            vals = {c: [] for c in out[exp]}
+            for k in range(n_pairs):
+                wl, pf = gen_instance(exp, n, p, seed=seed0 + k)
+                for c in ["H1", "H2", "H3", "H4"]:
+                    traj = split_trajectory(c, wl, pf)
+                    vals[c].append(min(per for per, _ in traj))
+                l_opt = optimal_latency(wl, pf)
+                vals["H5"].append(l_opt)
+                vals["H6"].append(l_opt)
+            for c, v in vals.items():
+                out[exp][c][n] = float(np.mean(v))
+    return out
+
+
+def summarize_experiment(res: ExperimentResult) -> str:
+    lines = [f"# {res.exp} n={res.n} p={res.p} pairs={res.n_pairs}"]
+    lines.append("heuristic,bound_idx,mean_period,mean_latency,feasible_frac")
+    for c, (mp, ml, fr) in sorted(res.curves.items()):
+        for i in range(len(mp)):
+            lines.append(f"{c},{i},{mp[i]:.6g},{ml[i]:.6g},{fr[i]:.3f}")
+    lines.append("heuristic,threshold_mean,threshold_max")
+    for c, (m, mx) in sorted(res.thresholds.items()):
+        lines.append(f"{c},{m:.6g},{mx:.6g}")
+    return "\n".join(lines)

@@ -1,0 +1,70 @@
+"""Random application/platform generators for the paper's experiments (5.1).
+
+Common to all experiments: b = 10, processor speeds uniform integers in
+[1, 20].  Per-experiment application parameters:
+
+  E1  balanced comm/comp, homogeneous comms:     delta_i = 10,        w in [1, 20]
+  E2  balanced comm/comp, heterogeneous comms:   delta in [1, 100],   w in [1, 20]
+  E3  large computations:                        delta in [1, 20],    w in [10, 1000]
+  E4  small computations:                        delta in [1, 20],    w in [0.01, 10]
+
+The paper draws integer w for E1-E3 ("randomly chosen between 1 and 20");
+E4's range [0.01, 10] is continuous.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from ..core import Platform, Workload
+
+
+@dataclasses.dataclass(frozen=True)
+class ExperimentSpec:
+    name: str
+    description: str
+    gen_delta: Callable  # (rng, n) -> (n+1,) array
+    gen_w: Callable      # (rng, n) -> (n,) array
+
+
+EXPERIMENTS = {
+    "E1": ExperimentSpec(
+        "E1", "balanced comm/comp, homogeneous comms",
+        lambda rng, n: np.full(n + 1, 10.0),
+        lambda rng, n: rng.integers(1, 21, n).astype(float),
+    ),
+    "E2": ExperimentSpec(
+        "E2", "balanced comm/comp, heterogeneous comms",
+        lambda rng, n: rng.integers(1, 101, n + 1).astype(float),
+        lambda rng, n: rng.integers(1, 21, n).astype(float),
+    ),
+    "E3": ExperimentSpec(
+        "E3", "large computations",
+        lambda rng, n: rng.integers(1, 21, n + 1).astype(float),
+        lambda rng, n: rng.integers(10, 1001, n).astype(float),
+    ),
+    "E4": ExperimentSpec(
+        "E4", "small computations",
+        lambda rng, n: rng.integers(1, 21, n + 1).astype(float),
+        lambda rng, n: rng.uniform(0.01, 10.0, n),
+    ),
+}
+
+BANDWIDTH = 10.0
+SPEED_LOW, SPEED_HIGH = 1, 20
+
+
+def gen_instance(exp: str, n: int, p: int, seed: int) -> tuple:
+    """One random (workload, platform) pair for experiment ``exp``."""
+    spec = EXPERIMENTS[exp]
+    rng = np.random.default_rng(seed)
+    w = spec.gen_w(rng, n)
+    delta = spec.gen_delta(rng, n)
+    s = rng.integers(SPEED_LOW, SPEED_HIGH + 1, p).astype(float)
+    return (
+        Workload(w, delta, name=f"{exp}-n{n}-seed{seed}"),
+        Platform(s, BANDWIDTH, name=f"{exp}-p{p}-seed{seed}"),
+    )

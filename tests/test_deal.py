@@ -1,0 +1,59 @@
+"""Deal-skeleton extension (the paper's Section-7 future work)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Objective, make_platform, make_workload, plan,
+                        plan_with_deal)
+
+
+def test_deal_improves_single_bottleneck_stage():
+    """One huge stage dominates: interval splitting cannot help (single
+    stage), but dealing it over extra processors must."""
+    wl = make_workload([1.0, 100.0, 1.0], [0.1, 0.1, 0.1, 0.1])
+    pf = make_platform([10.0] * 6, b=100.0)
+    base = plan(wl, pf, Objective("period"), mode="auto")
+    dealt = plan_with_deal(wl, pf, Objective("period"))
+    assert dealt.period < base.period - 1e-9
+    # the bottleneck interval got the replicas
+    sizes = [len(g) for g in dealt.groups]
+    bott = max(range(dealt.num_stages),
+               key=lambda j: wl.interval_work(*dealt.base.mapping.intervals[j]))
+    assert sizes[bott] > 1
+
+
+def test_deal_never_worse_than_base():
+    rng = np.random.default_rng(0)
+    for _ in range(15):
+        n = int(rng.integers(2, 12))
+        p = int(rng.integers(3, 10))
+        wl = make_workload(rng.integers(1, 50, n).astype(float),
+                           rng.integers(0, 20, n + 1).astype(float))
+        pf = make_platform(rng.integers(1, 21, p).astype(float), 10.0)
+        base = plan(wl, pf, Objective("period"), mode="auto")
+        dealt = plan_with_deal(wl, pf, Objective("period"))
+        assert dealt.period <= base.period + 1e-9
+        # all groups disjoint
+        seen = set()
+        for g in dealt.groups:
+            assert not (seen & set(g))
+            seen |= set(g)
+
+
+def test_deal_stops_when_comm_bound():
+    """If the bottleneck cycle is pure communication, dealing cannot help and
+    must not consume processors."""
+    wl = make_workload([0.01, 0.01], [1000.0, 1000.0, 1000.0])
+    pf = make_platform([10.0] * 4, b=1.0)
+    dealt = plan_with_deal(wl, pf, Objective("period"))
+    assert all(len(g) == 1 for g in dealt.groups)
+
+
+def test_deal_respects_latency_bound():
+    wl = make_workload([1.0, 100.0, 1.0], [0.1] * 4)
+    pf = make_platform([10.0, 10.0, 10.0, 1.0, 1.0], b=100.0)
+    base = plan(wl, pf, Objective("period"), mode="auto")
+    # a tight latency bound: dealing onto the slow processors would blow the
+    # latency (slowest group member bounds it), so it must hold the bound
+    dealt = plan_with_deal(wl, pf, Objective("period", bound=base.latency * 1.01))
+    assert dealt.latency <= base.latency * 1.01 + 1e-9

@@ -1,0 +1,123 @@
+"""Numerical equivalence of the distributed execution paths vs single-device
+references, on 8 fake devices (subprocess).  These are the paths the dry-run
+compiles but smoke tests (single device) never execute:
+
+ - shard_map-local MoE dispatch  == per-token oracle
+ - sequence-parallel attention   == plain attention
+ - FSDP (2-D sharded) train step == unsharded train step
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+_CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import warnings; warnings.filterwarnings("ignore")
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
+    from repro.configs import get_smoke_config
+    from repro.models.moe import moe_ffn, moe_ffn_tokens, init_moe
+    from repro.models.attention import plain_attention, seq_parallel_attention
+
+    rng = np.random.default_rng(0)
+    mesh = make_mesh((2, 4), ("data", "model"))
+
+    # ---- shard_map MoE vs per-token oracle --------------------------------
+    cfg = get_smoke_config("mixtral-8x7b").replace(capacity_factor=16.0)
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jnp.asarray(rng.normal(size=(4, 32, cfg.d_model)) * 0.3, jnp.float32)
+    with jax.set_mesh(mesh):
+        y_dist = jax.jit(lambda p, x: moe_ffn(p, x, cfg)[0])(params, x)
+    y_ref = jax.jit(lambda p, x: moe_ffn_tokens(p, x, cfg))(params, x)
+    err = float(jnp.max(jnp.abs(np.asarray(y_dist) - np.asarray(y_ref))))
+    assert err < 1e-4, f"moe dist err {err}"
+    print("MOE_DIST_OK", err)
+
+    # ---- grad check through the shard_map MoE ------------------------------
+    with jax.set_mesh(mesh):
+        g = jax.jit(jax.grad(lambda p, x: moe_ffn(p, x, cfg)[0].sum()))(params, x)
+    g_ref = jax.jit(jax.grad(lambda p, x: moe_ffn_tokens(p, x, cfg).sum()))(params, x)
+    for a, b in zip(jax.tree.leaves(g), jax.tree.leaves(g_ref)):
+        gerr = float(jnp.max(jnp.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+        assert gerr < 2e-3, f"moe grad err {gerr}"
+    print("MOE_GRAD_OK")
+
+    # ---- sequence-parallel attention vs plain ------------------------------
+    # H=6 heads on a 4-way model axis (6 % 4 != 0 -> the seq-parallel path)
+    B, S, H, K, hd = 2, 512, 6, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)) * 0.5, jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, K, hd)) * 0.5, jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, K, hd)) * 0.5, jnp.float32)
+    with jax.set_mesh(mesh):
+        a_sp = jax.jit(lambda q, k, v: seq_parallel_attention(
+            q, k, v, causal=True, window=None, block_q=128, block_k=128))(q, k, v)
+    a_ref = jax.jit(lambda q, k, v: plain_attention(
+        q, k, v, causal=True, window=None))(q, k, v)
+    aerr = float(jnp.max(jnp.abs(np.asarray(a_sp) - np.asarray(a_ref))))
+    assert aerr < 1e-5, f"seq-parallel attention err {aerr}"
+    print("SEQPAR_OK", aerr)
+
+    # ---- windowed variant ---------------------------------------------------
+    with jax.set_mesh(mesh):
+        w_sp = jax.jit(lambda q, k, v: seq_parallel_attention(
+            q, k, v, causal=True, window=200, block_q=128, block_k=128))(q, k, v)
+    w_ref = jax.jit(lambda q, k, v: plain_attention(
+        q, k, v, causal=True, window=200))(q, k, v)
+    werr = float(jnp.max(jnp.abs(np.asarray(w_sp) - np.asarray(w_ref))))
+    assert werr < 1e-5, f"seq-parallel SWA err {werr}"
+    print("SEQPAR_SWA_OK", werr)
+
+    # ---- FSDP-sharded train step == unsharded ------------------------------
+    from repro.models import get_model, make_train_step, init_optimizer
+    from repro.models.sharding import named, zero1_specs, param_specs
+    from repro.optim.adamw import AdamWState
+
+    cfg2 = get_smoke_config("qwen1.5-110b").replace(fsdp_params=True, accum_steps=2)
+    api = get_model(cfg2)
+    params2 = api.init(jax.random.PRNGKey(1))
+    opt = init_optimizer(params2)
+    batch = {"tokens": jnp.asarray(rng.integers(1, cfg2.vocab_size, (8, 64)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(1, cfg2.vocab_size, (8, 64)), jnp.int32)}
+    ts = make_train_step(api.forward, cfg2)
+    p_ref, o_ref, m_ref = jax.jit(ts)(params2, opt, batch)   # single-device
+
+    with jax.set_mesh(mesh):
+        pn = named(zero1_specs(params2, cfg2, mesh), mesh)
+        zn = named(zero1_specs(params2, cfg2, mesh), mesh)
+        on = AdamWState(step=NamedSharding(mesh, P()), m=zn, v=zn)
+        params_s = jax.device_put(params2, pn)
+        opt_s = AdamWState(step=jax.device_put(opt.step, NamedSharding(mesh, P())),
+                           m=jax.device_put(opt.m, zn), v=jax.device_put(opt.v, zn))
+        batch_s = {kk: jax.device_put(vv, NamedSharding(mesh, P("data")))
+                   for kk, vv in batch.items()}
+        p_dist, o_dist, m_dist = jax.jit(
+            ts, in_shardings=(pn, on, {kk: NamedSharding(mesh, P("data"))
+                                       for kk in batch}),
+            out_shardings=(pn, on, None))(params_s, opt_s, batch_s)
+    dl = abs(float(m_dist["loss"]) - float(m_ref["loss"]))
+    assert dl < 5e-3, f"fsdp loss mismatch {dl}"
+    for a, b in zip(jax.tree.leaves(p_dist), jax.tree.leaves(p_ref)):
+        perr = float(jnp.max(jnp.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32))))
+        assert perr < 5e-3, f"fsdp param err {perr}"
+    print("FSDP_OK", dl)
+""")
+
+
+@pytest.mark.slow
+def test_distributed_numerics_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _CODE], env=env,
+                       capture_output=True, text=True, timeout=560)
+    assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-3000:]
+    for marker in ("MOE_DIST_OK", "MOE_GRAD_OK", "SEQPAR_OK", "SEQPAR_SWA_OK",
+                   "FSDP_OK"):
+        assert marker in r.stdout, r.stdout[-2000:]

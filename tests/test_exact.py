@@ -1,0 +1,95 @@
+"""Exact solvers agree with brute force; DPs are optimal in their domains."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (Mapping, brute_force, dp_homogeneous_period,
+                        dp_speed_ordered, evaluate, exact_min_period,
+                        make_platform, make_workload, pareto_exact, period)
+
+
+def _rand_small(rng, n_max=7, p_max=4):
+    n = int(rng.integers(2, n_max))
+    p = int(rng.integers(2, p_max))
+    wl = make_workload(rng.integers(1, 11, n).astype(float),
+                       rng.integers(0, 21, n + 1).astype(float))
+    pf = make_platform(rng.integers(1, 11, p).astype(float), 5.0)
+    return wl, pf
+
+
+def test_exact_matches_brute_force():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        wl, pf = _rand_small(rng)
+        bf = brute_force(wl, pf)
+        ex = exact_min_period(wl, pf)
+        assert bf is not None and ex is not None
+        assert period(wl, pf, ex) == pytest.approx(period(wl, pf, bf), rel=1e-9)
+
+
+def test_exact_with_latency_cap():
+    rng = np.random.default_rng(1)
+    for _ in range(10):
+        wl, pf = _rand_small(rng)
+        front = pareto_exact(wl, pf)
+        # pick a cap between min and max latency on the front
+        lats = [l for _, l in front]
+        cap = (min(lats) + max(lats)) / 2
+        ex = exact_min_period(wl, pf, latency_cap=cap)
+        bf = brute_force(wl, pf, latency_cap=cap)
+        if bf is None:
+            assert ex is None
+        else:
+            assert ex is not None
+            per_e, lat_e = evaluate(wl, pf, ex)
+            assert lat_e <= cap + 1e-9
+            assert per_e == pytest.approx(period(wl, pf, bf), rel=1e-9)
+
+
+def test_dp_homogeneous_matches_brute_force():
+    rng = np.random.default_rng(2)
+    for _ in range(15):
+        n = int(rng.integers(2, 8))
+        p = int(rng.integers(2, 4))
+        s = float(rng.integers(1, 5))
+        wl = make_workload(rng.integers(1, 11, n).astype(float),
+                           rng.integers(0, 11, n + 1).astype(float))
+        pf = make_platform([s] * p, 3.0)
+        per_dp, intervals = dp_homogeneous_period(wl, p, s, 3.0)
+        bf = brute_force(wl, pf)
+        assert per_dp == pytest.approx(period(wl, pf, bf), rel=1e-9)
+        # returned intervals realize the claimed period
+        mp = Mapping(intervals, tuple(range(len(intervals))))
+        assert period(wl, pf, mp) == pytest.approx(per_dp)
+
+
+def test_dp_speed_ordered_bounds():
+    """Speed-ordered DP is >= the true optimum and <= single-processor."""
+    rng = np.random.default_rng(3)
+    for _ in range(15):
+        wl, pf = _rand_small(rng)
+        mp = dp_speed_ordered(wl, pf)
+        assert mp is not None
+        mp.validate(wl.n, pf.p)
+        opt = period(wl, pf, exact_min_period(wl, pf))
+        single = period(wl, pf, brute_force(
+            make_workload(wl.w, wl.delta), make_platform([pf.s.max()], pf.b)))
+        assert period(wl, pf, mp) >= opt - 1e-9
+        assert period(wl, pf, mp) <= single + 1e-9
+
+
+def test_pareto_front_is_nondominated_and_anchored():
+    rng = np.random.default_rng(4)
+    for _ in range(10):
+        wl, pf = _rand_small(rng, n_max=6, p_max=4)
+        front = pareto_exact(wl, pf)
+        assert front
+        pers = [p for p, _ in front]
+        lats = [l for _, l in front]
+        assert pers == sorted(pers)
+        assert lats == sorted(lats, reverse=True)
+        # anchors: min period == exact optimum; min latency == optimal latency
+        opt_per = period(wl, pf, exact_min_period(wl, pf))
+        assert min(pers) == pytest.approx(opt_per, rel=1e-9)

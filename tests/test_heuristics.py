@@ -1,0 +1,123 @@
+"""The paper's six heuristics: behavior, faithfulness, and fast-path identity."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (FIXED_LATENCY_HEURISTICS, FIXED_PERIOD_HEURISTICS,
+                        Platform, Workload, brute_force, evaluate,
+                        make_platform, make_workload, optimal_latency,
+                        run_heuristic, single_processor_mapping, period)
+from repro.core.heuristics import reference_mode, split_trajectory
+
+
+def _rand_instance(rng, n_max=20, p_max=12):
+    n = int(rng.integers(2, n_max))
+    p = int(rng.integers(2, p_max))
+    wl = make_workload(rng.integers(1, 21, n).astype(float),
+                       rng.integers(1, 101, n + 1).astype(float))
+    pf = make_platform(rng.integers(1, 21, p).astype(float), 10.0)
+    return wl, pf
+
+
+def test_fast_paths_match_reference():
+    rng = np.random.default_rng(42)
+    for _ in range(25):
+        wl, pf = _rand_instance(rng)
+        for code in ["H1", "H2", "H3", "H5", "H6"]:
+            bound = (float(rng.uniform(0.1, 50)) if code in ("H1", "H2", "H3")
+                     else optimal_latency(wl, pf) * float(rng.uniform(1.0, 3.0)))
+            fast = run_heuristic(code, wl, pf, bound)
+            with reference_mode():
+                ref = run_heuristic(code, wl, pf, bound)
+            assert fast.mapping == ref.mapping, (code, bound)
+            assert fast.period == pytest.approx(ref.period)
+            assert fast.latency == pytest.approx(ref.latency)
+
+
+def test_feasible_results_respect_constraints():
+    rng = np.random.default_rng(7)
+    for _ in range(30):
+        wl, pf = _rand_instance(rng)
+        for code in FIXED_PERIOD_HEURISTICS:
+            bound = float(rng.uniform(0.5, 30))
+            r = run_heuristic(code, wl, pf, bound)
+            if r.feasible:
+                assert r.period <= bound + 1e-9
+                r.mapping.validate(wl.n, pf.p)
+        for code in FIXED_LATENCY_HEURISTICS:
+            bound = optimal_latency(wl, pf) * float(rng.uniform(0.8, 2.5))
+            r = run_heuristic(code, wl, pf, bound)
+            if r.feasible:
+                assert r.latency <= bound + 1e-9
+                r.mapping.validate(wl.n, pf.p)
+
+
+def test_fixed_latency_failure_iff_below_optimal():
+    """H5/H6 fail exactly when L_fix < L_opt (explains the paper's Table-1
+    observation that their failure thresholds coincide)."""
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        wl, pf = _rand_instance(rng)
+        lopt = optimal_latency(wl, pf)
+        for code in ("H5", "H6"):
+            assert not run_heuristic(code, wl, pf, lopt * 0.999).feasible
+            assert run_heuristic(code, wl, pf, lopt * 1.001).feasible
+
+
+def test_initial_state_is_optimal_latency():
+    wl = make_workload([3, 4, 5], [1, 1, 1, 1])
+    pf = make_platform([2.0, 8.0, 4.0], b=10.0)
+    r = run_heuristic("H5", wl, pf, optimal_latency(wl, pf))
+    assert r.feasible
+    assert r.latency == pytest.approx(optimal_latency(wl, pf))
+    assert r.mapping.alloc == (1,)       # fastest processor
+
+
+def test_trajectory_matches_direct_runs():
+    """result(H, P_fix) == first trajectory state with period <= P_fix."""
+    rng = np.random.default_rng(11)
+    for _ in range(15):
+        wl, pf = _rand_instance(rng)
+        for code in ["H1", "H2", "H3"]:
+            traj = split_trajectory(code, wl, pf)
+            assert traj[0][0] >= traj[-1][0] - 1e-12  # period non-increasing
+            for frac in (0.2, 0.5, 0.9):
+                bound = traj[0][0] * frac
+                direct = run_heuristic(code, wl, pf, bound)
+                hit = next(((p, l) for p, l in traj if p <= bound + 1e-12), None)
+                if hit is None:
+                    assert not direct.feasible
+                else:
+                    assert direct.feasible
+                    assert direct.period == pytest.approx(hit[0])
+                    assert direct.latency == pytest.approx(hit[1])
+
+
+def test_splitting_gives_speedup_on_uniform_chain():
+    """Uniform stages on equal-speed processors: H1 run to exhaustion should
+    parallelize substantially (period well below single-processor)."""
+    wl = make_workload([10.0] * 16, [0.0] * 17)
+    pf = make_platform([1.0] * 8, b=1.0)
+    r = run_heuristic("H1", wl, pf, 0.0)   # run to exhaustion (infeasible bound)
+    single = 160.0
+    assert r.period <= single / 4          # at least 4x speedup with 8 procs
+
+
+def test_h4_beats_or_matches_h1_latency():
+    """H4's binary search minimizes latency under the period bound; at equal
+    period bounds its latency should not exceed H1's by much (usually less)."""
+    rng = np.random.default_rng(5)
+    wins = total = 0
+    for _ in range(20):
+        wl, pf = _rand_instance(rng)
+        bound = period(wl, pf, single_processor_mapping(wl, pf.fastest())) * 0.75
+        r1 = run_heuristic("H1", wl, pf, bound)
+        r4 = run_heuristic("H4", wl, pf, bound)
+        if r1.feasible and r4.feasible:
+            total += 1
+            if r4.latency <= r1.latency + 1e-9:
+                wins += 1
+    assert total > 5
+    assert wins / total >= 0.5

@@ -1,0 +1,77 @@
+"""Eq. (1)/(2) metric correctness and Mapping validation."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Mapping, Workload, Platform, evaluate, latency,
+                        make_platform, make_workload, optimal_latency, period,
+                        single_processor_mapping, intervals_from_cuts,
+                        all_interval_partitions)
+
+
+def test_period_latency_hand_computed():
+    # 3 stages, delta = [4, 2, 6, 8], w = [10, 20, 30]; b = 2
+    wl = make_workload([10, 20, 30], [4, 2, 6, 8])
+    pf = make_platform([5.0, 10.0], b=2.0)
+    # intervals: [1,1] on P0, [2,3] on P1
+    mp = Mapping(((1, 1), (2, 3)), (0, 1))
+    # cycle(1,1,P0) = 4/2 + 10/5 + 2/2 = 2+2+1 = 5
+    # cycle(2,3,P1) = 2/2 + 50/10 + 8/2 = 1+5+4 = 10
+    assert period(wl, pf, mp) == pytest.approx(10.0)
+    # latency = (4/2 + 10/5) + (2/2 + 50/10) + 8/2 = 4 + 6 + 4 = 14
+    assert latency(wl, pf, mp) == pytest.approx(14.0)
+
+
+def test_single_processor_mapping():
+    wl = make_workload([1, 2, 3], [1, 1, 1, 1])
+    pf = make_platform([2.0, 4.0], b=1.0)
+    mp = single_processor_mapping(wl, pf.fastest())
+    assert mp.alloc == (1,)
+    # period == latency for a single interval
+    per, lat = evaluate(wl, pf, mp)
+    assert per == pytest.approx(1 / 1 + 6 / 4 + 1 / 1)
+    assert lat == pytest.approx(per)
+
+
+def test_optimal_latency_is_fastest_processor():
+    wl = make_workload([5, 5], [0, 0, 0])
+    pf = make_platform([1.0, 10.0, 2.0], b=1.0)
+    assert optimal_latency(wl, pf) == pytest.approx(1.0)
+
+
+def test_mapping_validation():
+    wl = make_workload([1, 1, 1], [0, 0, 0, 0])
+    Mapping(((1, 2), (3, 3)), (0, 1)).validate(3, 2)
+    with pytest.raises(ValueError):
+        Mapping(((1, 1), (3, 3)), (0, 1)).validate(3, 2)  # gap
+    with pytest.raises(ValueError):
+        Mapping(((1, 2), (3, 3)), (0, 0)).validate(3, 2)  # dup processor
+    with pytest.raises(ValueError):
+        Mapping(((1, 3),), (5,)).validate(3, 2)           # proc out of range
+    with pytest.raises(ValueError):
+        Mapping(((2, 3),), (0,)).validate(3, 2)           # must start at 1
+
+
+def test_intervals_from_cuts_and_enumeration():
+    assert intervals_from_cuts(5, [2, 3]) == ((1, 2), (3, 3), (4, 5))
+    parts = list(all_interval_partitions(4, 2))
+    assert ((1, 1), (2, 4)) in parts and ((1, 3), (4, 4)) in parts
+    assert len(parts) == 3
+    # m intervals of n stages: C(n-1, m-1)
+    assert len(list(all_interval_partitions(6, 3))) == 10
+
+
+def test_workload_platform_validation():
+    with pytest.raises(ValueError):
+        make_workload([1, 2], [1, 1])          # delta too short
+    with pytest.raises(ValueError):
+        make_workload([-1], [0, 0])            # negative work
+    with pytest.raises(ValueError):
+        make_platform([0.0], b=1.0)            # zero speed
+    with pytest.raises(ValueError):
+        make_platform([1.0], b=0.0)            # zero bandwidth
+
+
+def test_sorted_indices_stable_ties():
+    pf = make_platform([3.0, 5.0, 5.0, 1.0], b=1.0)
+    assert list(pf.sorted_indices()) == [1, 2, 0, 3]

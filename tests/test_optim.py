@@ -1,0 +1,95 @@
+"""Optimizer, schedules, clipping, gradient compression."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
+                         ef_compress_update, ef_init, global_norm,
+                         int8_compress, int8_decompress, linear_warmup_cosine,
+                         topk_compress, topk_decompress)
+
+
+def test_adamw_minimizes_quadratic():
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for _ in range(300):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(params, g, state, lr=0.05, weight_decay=0.0)
+    assert float(loss(params)) < 1e-2
+
+
+def test_adamw_weight_decay_shrinks():
+    params = {"w": jnp.full((4,), 10.0)}
+    state = adamw_init(params)
+    zeros = {"w": jnp.zeros(4)}
+    for _ in range(50):
+        params, state = adamw_update(params, zeros, state, lr=0.1,
+                                     weight_decay=0.5)
+    assert float(jnp.abs(params["w"]).max()) < 10.0
+
+
+def test_clip_by_global_norm():
+    tree = {"a": jnp.full((3,), 100.0), "b": jnp.full((2,), -100.0)}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert float(norm) == pytest.approx(float(global_norm(tree)))
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+    small = {"a": jnp.full((3,), 1e-3)}
+    c2, _ = clip_by_global_norm(small, 1.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), np.asarray(small["a"]))
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(linear_warmup_cosine(jnp.asarray(s), base_lr=1.0,
+                                      warmup_steps=10, total_steps=100))
+           for s in range(100)]
+    assert lrs[0] == pytest.approx(0.0)
+    assert lrs[10] == pytest.approx(1.0, rel=0.1)
+    assert lrs[99] < 0.2
+    assert max(lrs) <= 1.0 + 1e-6
+
+
+def test_topk_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(32, 16)))
+    vals, idx, shape = topk_compress(x, frac=0.25)
+    dense = topk_decompress(vals, idx, shape)
+    # kept entries are the largest-magnitude quarter
+    kept = np.count_nonzero(np.asarray(dense))
+    assert kept == 32 * 16 // 4
+    mask = np.asarray(dense) != 0
+    thresh = np.quantile(np.abs(np.asarray(x)), 0.75)
+    assert np.abs(np.asarray(x)[mask]).min() >= thresh * 0.9
+
+
+def test_int8_roundtrip_error_bounded():
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(64,)) * 3)
+    q, scale = int8_compress(x)
+    back = int8_decompress(q, scale)
+    assert q.dtype == jnp.int8
+    assert float(jnp.max(jnp.abs(back - x))) <= float(scale) * 0.51 + 1e-6
+
+
+def test_error_feedback_accumulates_everything():
+    """Over many rounds, EF top-k transmits (in total) everything: the sum of
+    decompressed messages converges to the sum of gradients."""
+    rng = np.random.default_rng(2)
+    g_total = np.zeros((50,))
+    sent_total = np.zeros((50,))
+    grads = {"g": jnp.zeros(50)}
+    state = ef_init(grads)
+    for _ in range(60):
+        g = rng.normal(size=(50,))
+        g_total += g
+        comp, state = ef_compress_update({"g": jnp.asarray(g)}, state, frac=0.1)
+        vals, idx, shape = comp["g"]
+        sent_total += np.asarray(topk_decompress(vals, idx, shape))
+    residual = np.asarray(state.residual["g"])
+    np.testing.assert_allclose(sent_total + residual, g_total, atol=1e-4)
+    # residual stays bounded (does not blow up)
+    assert np.abs(residual).max() < np.abs(g_total).max() + 10

@@ -1,0 +1,106 @@
+"""Pipeline runtime: schedule math (in-process) and pipelined-vs-sequential
+equivalence (subprocess with 8 fake devices, so the main test process keeps
+its single-device view)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.core import Mapping, Objective, Platform, StagePlan, plan
+from repro.core.planner import _realize
+from repro.pipeline.schedule import bubble_fraction, gpipe_ticks, stage_microbatch
+
+SRC = str(pathlib.Path(__file__).resolve().parents[1] / "src")
+
+
+def test_gpipe_schedule_math():
+    assert gpipe_ticks(4, 8) == 11
+    assert stage_microbatch(5, 2) == 3
+    assert bubble_fraction(4, 8) == pytest.approx(3 / 11)
+    assert bubble_fraction(1, 8) == 0.0
+
+
+def test_make_stage_params_packing():
+    import jax.numpy as jnp
+
+    from repro.pipeline.runtime import make_stage_params
+
+    L, d = 5, 3
+    layers = {"w": jnp.arange(L * d, dtype=jnp.float32).reshape(L, d)}
+    mapping = Mapping(((1, 2), (3, 3), (4, 5)), (1, 0, 3))
+    pl = _realize(mapping, 1.0, 2.0, "test")
+    stages, mask = make_stage_params(layers, pl, num_pods=4)
+    assert stages["w"].shape == (4, 2, 3)
+    # interval 1 (layers 0,1) -> pod 1; interval 2 (layer 2) -> pod 0; 3 -> pod 3
+    np.testing.assert_array_equal(np.asarray(stages["w"][1]),
+                                  np.arange(6).reshape(2, 3))
+    np.testing.assert_array_equal(np.asarray(stages["w"][0, 0]),
+                                  np.arange(6, 9))
+    np.testing.assert_array_equal(np.asarray(mask),
+                                  [[True, False], [True, True],
+                                   [False, False], [True, True]])
+    # padding rows are zero
+    assert float(np.abs(np.asarray(stages["w"][2])).sum()) == 0.0
+
+
+_SUBPROC = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import warnings; warnings.filterwarnings("ignore")
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.core import Platform, Objective, plan
+    from repro.models import ModelConfig
+    from repro.models.transformer import init_params
+    from repro.models.registry import lm_workload
+    from repro.models.common import ShapeSpec
+    from repro.pipeline.runtime import (make_stage_params, pipelined_loss_fn,
+                                        sequential_loss_fn)
+    from repro.launch.mesh import make_mesh
+
+    cfg = ModelConfig(arch_id="pipe-test", family="dense", n_layers=6,
+                      d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                      vocab_size=256, remat="none")
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    wl = lm_workload(cfg, ShapeSpec("t", "train", 64, 8))
+    pf = Platform(np.array([4.0, 4.0, 2.0, 4.0]), b=1e9)
+    pl = plan(wl, pf, Objective("period"), mode="auto")
+    stages, mask = make_stage_params(params["layers"], pl, num_pods=4)
+    pipe_params = {"embed": params["embed"], "stages": stages,
+                   "ln_f": params["ln_f"]}
+    mesh = make_mesh((4, 2), ("stage", "data"))
+    rng = np.random.default_rng(0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, 256, (8, 64)), jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, 256, (8, 64)), jnp.int32)}
+    with jax.set_mesh(mesh):
+        lf = pipelined_loss_fn(cfg, pl, num_microbatches=4, mask=mask, mesh=mesh)
+        loss_pipe = float(jax.jit(lf)(pipe_params, batch))
+        g = jax.jit(jax.grad(lf))(pipe_params, batch)
+    loss_seq = float(jax.jit(sequential_loss_fn(cfg))(params, batch))
+    gn = float(jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                            for l in jax.tree.leaves(g))))
+    assert abs(loss_pipe - loss_seq) < 2e-3, (loss_pipe, loss_seq)
+    assert np.isfinite(gn) and gn > 0
+    # gradients for padded (masked) slots must be zero
+    pad_g = np.asarray(g["stages"]["mlp"]["wi"])[2]   # pod 2 unused by plan? ensure via mask
+    mask_np = np.asarray(mask)
+    for pod in range(4):
+        for slot in range(mask_np.shape[1]):
+            if not mask_np[pod, slot]:
+                blk = np.asarray(g["stages"]["mlp"]["wi"])[pod, slot]
+                assert np.abs(blk).max() == 0.0, (pod, slot)
+    print("SUBPROCESS_OK", loss_pipe, loss_seq, gn)
+""")
+
+
+@pytest.mark.slow
+def test_pipelined_equals_sequential_subprocess():
+    env = dict(os.environ, PYTHONPATH=SRC)
+    r = subprocess.run([sys.executable, "-c", _SUBPROC], env=env,
+                       capture_output=True, text=True, timeout=540)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "SUBPROCESS_OK" in r.stdout

@@ -1,0 +1,89 @@
+"""Planner API, straggler replanning, elastic scaling."""
+
+import numpy as np
+import pytest
+
+from repro.core import (InfeasiblePlan, Objective, Platform, make_platform,
+                        make_workload, period, plan, replan_for_straggler,
+                        run_heuristic, interval_cycle_times)
+from repro.models.common import SHAPES
+from repro.models.registry import lm_workload
+from repro.configs import get_config
+from repro.pipeline.replan import StragglerMonitor, elastic_replan, replan_stages
+
+
+def test_auto_dominates_single_heuristics():
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        n, p = int(rng.integers(4, 16)), int(rng.integers(3, 8))
+        wl = make_workload(rng.integers(1, 21, n).astype(float),
+                           rng.integers(1, 51, n + 1).astype(float))
+        pf = make_platform(rng.integers(1, 21, p).astype(float), 10.0)
+        auto = plan(wl, pf, Objective("period"), mode="auto")
+        for code in ("H5", "H6"):
+            r = run_heuristic(code, wl, pf, float("inf"))
+            if r.feasible:
+                assert auto.period <= r.period + 1e-9
+
+
+def test_infeasible_raises():
+    wl = make_workload([10.0], [0, 0])
+    pf = make_platform([1.0], 1.0)
+    with pytest.raises(InfeasiblePlan):
+        plan(wl, pf, Objective("latency", bound=0.001), mode="auto")
+
+
+def test_arch_workload_plan():
+    """Planner runs on a real architecture workload (qwen3-4b, train_4k)."""
+    cfg = get_config("qwen3-4b")
+    wl = lm_workload(cfg, SHAPES["train_4k"])
+    assert wl.n == cfg.n_layers
+    pf = make_platform([1e15, 1e15, 0.5e15, 1e15], b=25e9)   # one slow pod
+    p = plan(wl, pf, Objective("period"), mode="auto")
+    # the slow pod must get fewer layers than the fastest pods
+    sizes_by_proc = dict(zip(p.mapping.alloc, p.stage_sizes))
+    if 2 in sizes_by_proc and 0 in sizes_by_proc:
+        assert sizes_by_proc[2] <= sizes_by_proc[0]
+
+
+def test_straggler_replan_improves_period():
+    cfg = get_config("qwen3-4b")
+    wl = lm_workload(cfg, SHAPES["train_4k"])
+    pf = make_platform([1e15] * 4, b=25e9)
+    p0 = plan(wl, pf, Objective("period"), mode="auto")
+    # pod serving stage 1 degrades 2x: observed times double there
+    predicted = interval_cycle_times(wl, pf, p0.mapping)
+    observed = predicted.copy()
+    observed[1] *= 2.0
+    new_plan, degraded = replan_for_straggler(wl, pf, p0, observed)
+    new_pred = interval_cycle_times(wl, degraded, new_plan.mapping)
+    old_pred_degraded = interval_cycle_times(wl, degraded, p0.mapping)
+    assert new_pred.max() <= old_pred_degraded.max() + 1e-6
+
+
+def test_straggler_monitor_flags():
+    mon = StragglerMonitor(num_stages=3, alpha=1.0, threshold=1.3)
+    mon.observe([1.0, 2.9, 1.0])
+    assert mon.stragglers([1.0, 2.0, 1.0]) == [1]
+    assert mon.stragglers([1.0, 3.0, 1.0]) == []
+
+
+def test_replan_stages_no_straggler_is_noop():
+    cfg = get_config("qwen3-4b")
+    wl = lm_workload(cfg, SHAPES["train_4k"])
+    pf = make_platform([1e15] * 4, b=25e9)
+    p0 = plan(wl, pf, Objective("period"), mode="auto")
+    mon = StragglerMonitor(num_stages=p0.num_stages, alpha=1.0)
+    mon.observe(interval_cycle_times(wl, pf, p0.mapping))
+    new_plan, _ = replan_stages(wl, pf, p0, mon)
+    assert new_plan is None
+
+
+def test_elastic_replan_changes_pod_count():
+    cfg = get_config("qwen3-4b")
+    wl = lm_workload(cfg, SHAPES["train_4k"])
+    pf = make_platform([1e15] * 4, b=25e9)
+    p8 = elastic_replan(wl, pf, 8)
+    assert p8.num_stages <= 8
+    p2 = elastic_replan(wl, pf, 2)
+    assert p2.num_stages <= 2

@@ -1,0 +1,111 @@
+"""Hypothesis property tests over the core system invariants."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Mapping, Objective, all_interval_partitions,
+                        exact_min_period, latency, make_platform,
+                        make_workload, optimal_latency, pareto_front, period,
+                        plan, run_heuristic, single_processor_mapping)
+
+settings.register_profile("ci", max_examples=40, deadline=None)
+settings.load_profile("ci")
+
+
+@st.composite
+def instances(draw, n_max=12, p_max=8):
+    n = draw(st.integers(2, n_max))
+    p = draw(st.integers(2, p_max))
+    w = draw(st.lists(st.floats(0.1, 100), min_size=n, max_size=n))
+    delta = draw(st.lists(st.floats(0.0, 100), min_size=n + 1, max_size=n + 1))
+    s = draw(st.lists(st.floats(0.5, 20), min_size=p, max_size=p))
+    b = draw(st.floats(0.5, 50))
+    return make_workload(w, delta), make_platform(s, b)
+
+
+@given(instances())
+def test_latency_lower_bound_is_fastest_processor(inst):
+    """Lemma 1: no mapping has latency below all-on-fastest."""
+    wl, pf = inst
+    lopt = optimal_latency(wl, pf)
+    # check several random-ish mappings
+    for m in range(1, min(wl.n, pf.p, 4) + 1):
+        for intervals in list(all_interval_partitions(wl.n, m))[:5]:
+            procs = tuple(np.argsort(-pf.s)[:m])
+            mp = Mapping(intervals, procs)
+            assert latency(wl, pf, mp) >= lopt - 1e-9
+
+
+@given(instances())
+def test_period_at_most_latency(inst):
+    """For any single mapping, the max cycle (period) never exceeds the sum
+    (latency) plus output-comm asymmetry allowance."""
+    wl, pf = inst
+    mp = single_processor_mapping(wl, pf.fastest())
+    assert period(wl, pf, mp) <= latency(wl, pf, mp) + 1e-9
+
+
+@given(instances(n_max=10, p_max=6))
+def test_heuristics_feasibility_contract(inst):
+    wl, pf = inst
+    single_per = period(wl, pf, single_processor_mapping(wl, pf.fastest()))
+    for code in ("H1", "H2", "H3"):
+        r = run_heuristic(code, wl, pf, single_per)  # always feasible bound
+        assert r.feasible
+        assert r.period <= single_per + 1e-9
+        r.mapping.validate(wl.n, pf.p)
+    lopt = optimal_latency(wl, pf)
+    for code in ("H5", "H6"):
+        r = run_heuristic(code, wl, pf, lopt * 1.5)
+        assert r.feasible
+        assert r.latency <= lopt * 1.5 + 1e-9
+
+
+@given(instances(n_max=8, p_max=6))
+def test_more_processors_never_hurt_h1(inst):
+    """Adding a processor cannot worsen H1's exhaustion-run period."""
+    wl, pf = inst
+    r_small = run_heuristic("H1", wl, pf, 0.0)
+    s2 = np.concatenate([pf.s, [pf.s.max()]])
+    pf2 = make_platform(s2, pf.b)
+    r_big = run_heuristic("H1", wl, pf2, 0.0)
+    assert r_big.period <= r_small.period + 1e-9
+
+
+@given(st.lists(st.tuples(st.floats(0.1, 100), st.floats(0.1, 100)),
+                min_size=1, max_size=50))
+def test_pareto_front_nondominated(points):
+    front = pareto_front(points)
+    # every front point must be non-dominated by any input point
+    for fp in front:
+        for q in points:
+            assert not (q[0] < fp[0] * (1 - 1e-9) and q[1] < fp[1] * (1 - 1e-9))
+    # front sorted and strictly improving in latency
+    for a, b in zip(front, front[1:]):
+        assert a[0] <= b[0] and a[1] >= b[1]
+
+
+@given(instances(n_max=6, p_max=4))
+def test_exact_min_period_dominates_heuristics(inst):
+    wl, pf = inst
+    opt = exact_min_period(wl, pf)
+    assert opt is not None
+    opt_per = period(wl, pf, opt)
+    for code in ("H1", "H2", "H3"):
+        r = run_heuristic(code, wl, pf, 0.0)
+        assert r.period >= opt_per - 1e-9
+
+
+@given(instances(n_max=10, p_max=6))
+def test_planner_auto_objective(inst):
+    wl, pf = inst
+    p = plan(wl, pf, Objective("period"), mode="auto")
+    p.mapping.validate(wl.n, pf.p)
+    assert sum(p.stage_sizes) == wl.n
+    assert p.max_stage_size == max(p.stage_sizes)
+    assert 0.0 <= p.padding_overhead < 1.0
+    # planner's period is realized by its own mapping
+    assert period(wl, pf, p.mapping) == pytest.approx(p.period)

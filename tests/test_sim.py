@@ -1,0 +1,58 @@
+"""Simulation-harness correctness + qualitative reproduction of paper claims."""
+
+import numpy as np
+import pytest
+
+from repro.sim import EXPERIMENTS, failure_thresholds, gen_instance, run_experiment
+
+
+def test_generator_ranges():
+    for exp in EXPERIMENTS:
+        wl, pf = gen_instance(exp, 20, 10, seed=0)
+        assert wl.n == 20 and pf.p == 10
+        assert pf.b == 10.0
+        assert (1 <= pf.s).all() and (pf.s <= 20).all()
+    wl, _ = gen_instance("E1", 10, 10, 0)
+    assert (wl.delta == 10.0).all()
+    wl, _ = gen_instance("E3", 10, 10, 0)
+    assert wl.w.min() >= 10 and wl.w.max() <= 1000
+    wl, _ = gen_instance("E4", 10, 10, 0)
+    assert wl.w.max() <= 10.0
+
+
+def test_generator_determinism():
+    a = gen_instance("E2", 10, 10, seed=5)
+    b = gen_instance("E2", 10, 10, seed=5)
+    assert np.array_equal(a[0].w, b[0].w)
+    assert np.array_equal(a[1].s, b[1].s)
+
+
+def test_run_experiment_structure():
+    res = run_experiment("E1", 10, 10, n_pairs=5, n_bounds=6)
+    assert set(res.curves) == {"H1", "H2", "H3", "H4", "H5", "H6"}
+    for c, (mp, ml, fr) in res.curves.items():
+        assert len(mp) == 6
+        assert (fr >= 0).all() and (fr <= 1).all()
+    # H5/H6 share failure thresholds (paper Table 1 observation)
+    assert res.thresholds["H5"] == pytest.approx(res.thresholds["H6"])
+
+
+def test_failure_threshold_orderings():
+    """Qualitative Table-1 claims: H1 has the smallest fixed-period failure
+    threshold among H1-H3 (it is the least greedy consumer of processors);
+    H5 == H6."""
+    thr = failure_thresholds(exps=("E1",), ns=(10, 20), p=10, n_pairs=15)["E1"]
+    for n in (10, 20):
+        assert thr["H1"][n] <= thr["H2"][n] + 1e-9
+        assert thr["H5"][n] == pytest.approx(thr["H6"][n])
+
+
+def test_latency_period_tradeoff_direction():
+    """Fixed-latency heuristics: as the latency budget grows, achieved period
+    must not increase (more splitting allowed)."""
+    res = run_experiment("E1", 20, 10, n_pairs=8, n_bounds=8)
+    for code in ("H5", "H6"):
+        mp, ml, fr = res.curves[code]
+        ok = ~np.isnan(mp)
+        mp = mp[ok]
+        assert (np.diff(mp) <= 1e-6).all()
