@@ -1,14 +1,21 @@
 """Planner quality + speed: heuristic optimality gap vs the exact solver on
-small/medium instances, and runtime scaling (name,us_per_call,derived CSV)."""
+small/medium instances, runtime scaling, and the vectorized candidate-
+evaluation speedup (name,us_per_call,derived CSV).
+
+    PYTHONPATH=src python benchmarks/planner_bench.py [--quick]
+"""
 
 from __future__ import annotations
 
+import sys
 import time
 
 import numpy as np
 
-from repro.core import (Objective, exact_min_period, make_platform,
-                        make_workload, period, plan, run_heuristic)
+from repro.core import (Objective, PlanRequest, auto_request, evaluate,
+                        evaluate_batch, exact_min_period, make_platform,
+                        make_workload, pareto_exact, period, plan_request,
+                        solve)
 from repro.sim.generators import gen_instance
 
 
@@ -25,40 +32,89 @@ def optimality_gaps(n_inst: int = 20, seed: int = 0) -> dict:
         pf = make_platform(rng.integers(1, 21, p).astype(float), 10.0)
         opt = period(wl, pf, exact_min_period(wl, pf))
         for code in ("H1", "H2", "H3"):
-            r = run_heuristic(code, wl, pf, 0.0)  # run to exhaustion
-            gaps[code].append(r.period / opt - 1)
-        a = plan(wl, pf, Objective("period"), mode="auto")
-        gaps["auto"].append(a.period / opt - 1)
+            # run to exhaustion: an unreachable period bound minimizes period
+            c = solve(code, wl, pf, Objective("latency", bound=0.0))
+            gaps[code].append(c.period / opt - 1)
+        rep = plan_request(auto_request(wl, pf, Objective("period")))
+        gaps["auto"].append(rep.plan.period / opt - 1)
     return {c: float(np.mean(v)) for c, v in gaps.items()}
 
 
 def timing(reps: int = 10) -> list:
-    """us_per_call for each heuristic at the paper's largest size (n=40, p=100)."""
+    """us_per_call for each solver at the paper's largest size (n=40, p=100),
+    plus the full request/report portfolio."""
     rows = []
     wl, pf = gen_instance("E2", 40, 100, seed=1)
     for code in ("H1", "H2", "H3", "H5", "H6"):
-        bound = 0.0 if code in ("H1", "H2", "H3") else 1e18
+        obj = (Objective("latency", bound=0.0) if code in ("H1", "H2", "H3")
+               else Objective("period", bound=1e18))
         t0 = time.perf_counter()
         for _ in range(reps):
-            run_heuristic(code, wl, pf, bound)
+            solve(code, wl, pf, obj)
         us = (time.perf_counter() - t0) / reps * 1e6
         rows.append((f"heuristic_{code}_n40_p100", us, ""))
     t0 = time.perf_counter()
-    plan(wl, pf, Objective("period"), mode="auto")
+    plan_request(auto_request(wl, pf, Objective("period")))
     rows.append(("planner_auto_n40_p100", (time.perf_counter() - t0) * 1e6, ""))
+    t0 = time.perf_counter()
+    plan_request(PlanRequest(wl, pf, Objective("period")))
+    rows.append(("plan_request_n40_p100", (time.perf_counter() - t0) * 1e6, ""))
     return rows
 
 
-def run() -> list:
-    rows = timing()
-    gaps = optimality_gaps()
+def vectorized_eval(reps: int = 5, seed: int = 3) -> list:
+    """The tentpole perf claim: batch candidate evaluation vs the per-mapping
+    Python loop, on the full mapping enumeration of a small instance (the
+    workload of portfolio tables, sweeps, and pareto_exact)."""
+    import itertools
+
+    from repro.core import Mapping, all_interval_partitions
+
+    rng = np.random.default_rng(seed)
+    n, p = 8, 5
+    wl = make_workload(rng.integers(1, 21, n).astype(float),
+                       rng.integers(1, 51, n + 1).astype(float))
+    pf = make_platform(rng.integers(1, 21, p).astype(float), 10.0)
+    mappings = [Mapping(iv, procs)
+                for m in range(1, min(n, p) + 1)
+                for iv in all_interval_partitions(n, m)
+                for procs in itertools.permutations(range(p), m)]
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        loop = np.array([evaluate(wl, pf, mp) for mp in mappings])
+    us_loop = (time.perf_counter() - t0) / reps * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        batch = evaluate_batch(wl, pf, mappings)
+    us_batch = (time.perf_counter() - t0) / reps * 1e6
+    assert np.allclose(loop, batch)
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        pareto_exact(wl, pf)
+    us_pex = (time.perf_counter() - t0) / reps * 1e6
+
+    k = len(mappings)
+    return [
+        (f"evaluate_loop_{k}_mappings", us_loop, ""),
+        (f"evaluate_batch_{k}_mappings", us_batch,
+         f"speedup={us_loop / us_batch:.1f}x"),
+        (f"pareto_exact_n{n}_p{p}", us_pex, "vectorized enumeration"),
+    ]
+
+
+def run(quick: bool = False) -> list:
+    rows = timing(reps=2 if quick else 10)
+    rows += vectorized_eval(reps=2 if quick else 5)
+    gaps = optimality_gaps(n_inst=4 if quick else 20)
     for c, g in gaps.items():
         rows.append((f"gap_vs_exact_{c}", 0.0, f"{g:.4f}"))
     return rows
 
 
 def main() -> None:
-    for name, us, derived in run():
+    for name, us, derived in run(quick="--quick" in sys.argv):
         print(f"{name},{us:.1f},{derived}")
 
 

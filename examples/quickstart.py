@@ -2,8 +2,9 @@
 
 1. Build a pipeline workload (here: qwen3-4b's 36 transformer blocks at the
    train_4k shape) and a heterogeneous platform (4 pods, one degraded).
-2. Run the paper's heuristics + the auto portfolio planner.
-3. Inspect the period/latency trade-off and the resulting stage plan.
+2. Run the paper's heuristics, then the solver-registry portfolio through
+   the PlanRequest -> PlanReport protocol (full per-solver provenance).
+3. Inspect the period/latency Pareto front and the resulting stage plan.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,8 +12,9 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import (NAMES, Objective, make_platform, optimal_latency,
-                        plan, plan_with_deal, run_heuristic, tradeoff_curves)
+from repro.core import (NAMES, Objective, PlanRequest, make_platform,
+                        optimal_latency, plan_pareto, plan_request,
+                        plan_with_deal, solve, solver_names)
 from repro.models.common import SHAPES
 from repro.models.registry import lm_workload
 
@@ -21,6 +23,7 @@ def main() -> None:
     cfg = get_config("qwen3-4b")
     wl = lm_workload(cfg, SHAPES["train_4k"])
     print(f"workload: {wl.n} stages, {wl.total_work/1e12:.1f} TFLOP per step")
+    print(f"registered solvers: {', '.join(solver_names())}")
 
     # 4 pods at 25.2 PF/s effective each; pod 2 is thermally degraded 1.6x
     pf = make_platform([25.2e15, 25.2e15, 25.2e15 / 1.6, 25.2e15], b=25e9)
@@ -28,24 +31,32 @@ def main() -> None:
     print("\n--- paper heuristics, fixed period = 1.5x ideal ---")
     ideal = wl.total_work / pf.s.sum()
     for code in ("H1", "H2", "H3", "H4"):
-        r = run_heuristic(code, wl, pf, ideal * 1.5)
-        status = "ok " if r.feasible else "FAIL"
-        print(f"{code} {NAMES[code]:14s} [{status}] period={r.period*1e3:7.2f}ms "
-              f"latency={r.latency*1e3:7.2f}ms splits={r.splits}")
+        c = solve(code, wl, pf, Objective("latency", bound=ideal * 1.5))
+        status = "ok " if c.feasible else "FAIL"
+        print(f"{code} {NAMES[code]:14s} [{status}] period={c.period*1e3:7.2f}ms "
+              f"latency={c.latency*1e3:7.2f}ms wall={c.wall_time*1e3:.1f}ms")
 
     print("\n--- fixed latency = 1.2x optimal ---")
     lopt = optimal_latency(wl, pf)
     for code in ("H5", "H6"):
-        r = run_heuristic(code, wl, pf, lopt * 1.2)
-        print(f"{code} {NAMES[code]:14s} period={r.period*1e3:7.2f}ms "
-              f"latency={r.latency*1e3:7.2f}ms")
+        c = solve(code, wl, pf, Objective("period", bound=lopt * 1.2))
+        print(f"{code} {NAMES[code]:14s} period={c.period*1e3:7.2f}ms "
+              f"latency={c.latency*1e3:7.2f}ms")
 
-    print("\n--- auto portfolio planner (min period) ---")
-    p = plan(wl, pf, Objective("period"), mode="auto")
-    print(f"planner={p.planner} stages={p.stage_sizes} on pods {p.mapping.alloc}")
+    print("\n--- PlanRequest -> PlanReport (min period, full provenance) ---")
+    report = plan_request(PlanRequest(wl, pf, Objective("period")))
+    print(report.summary())
+    p = report.plan
+    print(f"\nplanner={p.planner} stages={p.stage_sizes} on pods {p.mapping.alloc}")
     print(f"period={p.period*1e3:.2f}ms latency={p.latency*1e3:.2f}ms "
           f"padding_overhead={p.padding_overhead:.1%}")
     print("note: the degraded pod receives the smallest interval")
+
+    print("\n--- Pareto-first planning (knee selection) ---")
+    pr = plan_pareto(wl, pf, k=8)
+    for per, lat in pr.pareto:
+        mark = " <== knee" if (per, lat) == pr.chosen.point else ""
+        print(f"  period={per*1e3:7.2f}ms latency={lat*1e3:7.2f}ms{mark}")
 
     print("\n--- deal-skeleton extension (the paper's Section-7 future work) ---")
     # A compute-dominated chain (the paper's E3 regime) with one huge stage:
@@ -53,7 +64,7 @@ def main() -> None:
     from repro.sim import gen_instance
 
     wl3, pf3 = gen_instance("E3", n=8, p=10, seed=7)
-    base3 = plan(wl3, pf3, Objective("period"), mode="auto")
+    base3 = plan_request(PlanRequest(wl3, pf3, Objective("period"))).plan
     dealt = plan_with_deal(wl3, pf3, Objective("period"))
     print(f"base:   m={base3.num_stages} stages, period={base3.period:.2f}")
     print(f"dealt:  groups={dealt.groups}")

@@ -12,7 +12,8 @@ Run:  PYTHONPATH=src python examples/replan_straggler.py
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import Objective, interval_cycle_times, make_platform, plan
+from repro.core import (Objective, PlanRequest, interval_cycle_times,
+                        make_platform, plan_request)
 from repro.models.common import SHAPES
 from repro.models.registry import lm_workload
 from repro.pipeline.replan import StragglerMonitor, replan_stages
@@ -23,9 +24,11 @@ def main() -> None:
     wl = lm_workload(cfg, SHAPES["train_4k"])
     pf = make_platform([25.2e15] * 4, b=25e9)
 
-    p0 = plan(wl, pf, Objective("period"), mode="auto")
+    report = plan_request(PlanRequest(wl, pf, Objective("period")))
+    p0 = report.plan
     pred = interval_cycle_times(wl, pf, p0.mapping)
-    print(f"initial plan: stages={p0.stage_sizes} period={p0.period*1e3:.2f}ms")
+    print(f"initial plan: stages={p0.stage_sizes} period={p0.period*1e3:.2f}ms "
+          f"(chosen from {len(report.candidates)} candidates)")
 
     # pod serving stage 1 degrades 1.8x
     mon = StragglerMonitor(num_stages=p0.num_stages, alpha=0.5)

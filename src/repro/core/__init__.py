@@ -1,30 +1,52 @@
-"""Core paper library: Benoit/Rehn-Sonigo/Robert 2007, bi-criteria pipeline mapping."""
+"""Core paper library: Benoit/Rehn-Sonigo/Robert 2007, bi-criteria pipeline mapping.
+
+The planning surface is the solver registry (:mod:`repro.core.solvers`) plus
+the request/report protocol (:mod:`repro.core.planner`):
+
+    req = PlanRequest(workload, platform, Objective("period"))
+    report = plan_request(req)        # -> PlanReport with provenance + Pareto
+    front = plan_pareto(workload, platform)   # Pareto-first planning
+
+``plan()`` / ``plan_with_deal()`` remain as thin back-compat facades.  New
+algorithms plug in via ``@register_solver`` without touching any consumer.
+"""
 
 from .workload import Workload, make_workload, uniform_workload
 from .platform import Platform, make_platform, homogeneous_platform, tpu_pod_platform
-from .metrics import (Mapping, period, latency, evaluate, interval_cycle_times,
-                      optimal_latency, single_processor_mapping,
-                      intervals_from_cuts, all_interval_partitions)
+from .metrics import (Mapping, period, latency, evaluate, evaluate_batch,
+                      interval_cycle_times, optimal_latency,
+                      single_processor_mapping, intervals_from_cuts,
+                      all_interval_partitions)
 from .heuristics import (HeuristicResult, run_heuristic, NAMES,
                          FIXED_PERIOD_HEURISTICS, FIXED_LATENCY_HEURISTICS,
                          sp_mono_p, explo3_mono, explo3_bi, sp_bi_p, sp_mono_l, sp_bi_l)
-from .exact import (brute_force, exact_min_period, dp_homogeneous_period,
-                    dp_speed_ordered, pareto_exact)
-from .pareto import pareto_front, tradeoff_curves, sweep_heuristic
-from .planner import Objective, StagePlan, plan, replan_for_straggler, InfeasiblePlan
+from .exact import (brute_force, exact_min_period, exact_min_latency,
+                    dp_homogeneous_period, dp_speed_ordered, pareto_exact)
+from .pareto import pareto_front, tradeoff_curves, sweep_heuristic, sweep_solver
+from .solvers import (Candidate, Solution, SolverSpec, applicable, get_solver,
+                      register_solver, registered_solvers, solve, solver_names)
+from .planner import (AUTO_PORTFOLIO, InfeasiblePlan, Objective, PlanReport,
+                      PlanRequest, SELECTION_POLICIES, StagePlan, auto_request,
+                      plan, plan_pareto, plan_request, register_selection,
+                      replan_for_straggler)
 from .deal import DealPlan, plan_with_deal
 
 __all__ = [
     "Workload", "make_workload", "uniform_workload",
     "Platform", "make_platform", "homogeneous_platform", "tpu_pod_platform",
-    "Mapping", "period", "latency", "evaluate", "interval_cycle_times",
-    "optimal_latency", "single_processor_mapping", "intervals_from_cuts",
-    "all_interval_partitions",
+    "Mapping", "period", "latency", "evaluate", "evaluate_batch",
+    "interval_cycle_times", "optimal_latency", "single_processor_mapping",
+    "intervals_from_cuts", "all_interval_partitions",
     "HeuristicResult", "run_heuristic", "NAMES",
     "FIXED_PERIOD_HEURISTICS", "FIXED_LATENCY_HEURISTICS",
     "sp_mono_p", "explo3_mono", "explo3_bi", "sp_bi_p", "sp_mono_l", "sp_bi_l",
-    "brute_force", "exact_min_period", "dp_homogeneous_period", "dp_speed_ordered",
-    "pareto_exact", "pareto_front", "tradeoff_curves", "sweep_heuristic",
-    "Objective", "StagePlan", "plan", "replan_for_straggler", "InfeasiblePlan",
+    "brute_force", "exact_min_period", "exact_min_latency",
+    "dp_homogeneous_period", "dp_speed_ordered", "pareto_exact",
+    "pareto_front", "tradeoff_curves", "sweep_heuristic", "sweep_solver",
+    "Candidate", "Solution", "SolverSpec", "applicable", "get_solver",
+    "register_solver", "registered_solvers", "solve", "solver_names",
+    "AUTO_PORTFOLIO", "InfeasiblePlan", "Objective", "PlanReport", "PlanRequest",
+    "SELECTION_POLICIES", "StagePlan", "auto_request", "plan", "plan_pareto",
+    "plan_request", "register_selection", "replan_for_straggler",
     "DealPlan", "plan_with_deal",
 ]

@@ -30,8 +30,9 @@ from typing import Optional
 import numpy as np
 
 from .metrics import Mapping
-from .planner import Objective, StagePlan, plan
+from .planner import Objective, StagePlan, auto_request, plan, plan_request
 from .platform import Platform
+from .solvers import Solution, register_solver
 from .workload import Workload
 
 
@@ -67,9 +68,22 @@ def _deal_metrics(workload: Workload, platform: Platform, mapping: Mapping,
 def plan_with_deal(workload: Workload, platform: Platform,
                    objective: Optional[Objective] = None,
                    mode: str = "auto") -> DealPlan:
-    """Base interval plan + greedy deal-replication of the bottleneck stage."""
+    """Base interval plan + greedy deal-replication of the bottleneck stage.
+
+    Back-compat facade: the base plan goes through the PlanRequest portfolio
+    (explicit heuristic/exact modes fall back to the ``plan()`` facade)."""
     objective = objective or Objective("period")
-    base = plan(workload, platform, objective, mode=mode)
+    if mode == "auto":
+        from .planner import InfeasiblePlan
+
+        report = plan_request(auto_request(workload, platform, objective))
+        if report.plan is None:
+            raise InfeasiblePlan(
+                f"no planner produced a feasible mapping for {objective}")
+        base = dataclasses.replace(report.plan,
+                                   planner=f"auto({report.chosen.solver})")
+    else:
+        base = plan(workload, platform, objective, mode=mode)
     used = set(base.mapping.alloc)
     free = [int(u) for u in platform.sorted_indices() if int(u) not in used]
     groups = [[u] for u in base.mapping.alloc]
@@ -98,3 +112,14 @@ def plan_with_deal(workload: Workload, platform: Platform,
         free.pop(0)
     return DealPlan(base=base, groups=tuple(tuple(g) for g in groups),
                     period=per, latency=lat)
+
+
+@register_solver("deal", optimizes="period", supports_groups=True,
+                 description="interval plan + greedy deal-replication of the "
+                             "bottleneck stage over unused processors")
+def _solve_deal(workload, platform, objective):
+    """Registry entry for the deal extension: only selected by requests with
+    ``allow_groups=True`` (or an explicit include)."""
+    dp = plan_with_deal(workload, platform, objective)
+    return Solution(mapping=dp.base.mapping, groups=dp.groups,
+                    period=dp.period, latency=dp.latency)

@@ -23,7 +23,7 @@ from typing import Optional
 
 import numpy as np
 
-from .metrics import Mapping, all_interval_partitions, evaluate, latency, period
+from .metrics import Mapping, all_interval_partitions, latency
 from .platform import Platform
 from .workload import Workload
 
@@ -41,6 +41,33 @@ def _cycle_table(workload: Workload, platform: Platform) -> np.ndarray:
     return cyc
 
 
+def _latency_table(workload: Workload, platform: Platform,
+                   cyc: np.ndarray) -> np.ndarray:
+    """lat[d-1, e-1, u] = interval [d,e]'s Eq. (2) term on processor u
+    (input comm + compute; the final-output term is added by callers).
+    Derived from the cycle table: the cycle just adds the output comm."""
+    return cyc - (workload.delta[1:] / platform.b)[None, :, None]
+
+
+def _enumerated_metrics(workload: Workload, platform: Platform, m: int,
+                        cyc_t: np.ndarray, lat_t: np.ndarray) -> tuple:
+    """Stack every (partition into m intervals, distinct-processor assignment)
+    and evaluate them all at once: returns (parts (C,m,2), procs (P,m),
+    per (C,P), lat (C,P)).  Row-major (partition-major) order matches the
+    nested loops of the scalar enumeration, so stable argmins agree."""
+    n, p = workload.n, platform.p
+    parts = np.array(list(all_interval_partitions(n, m)), dtype=np.intp)
+    procs = np.array(list(itertools.permutations(range(p), m)), dtype=np.intp)
+    if parts.ndim == 2:            # m == 1: (C, 2) -> (C, 1, 2)
+        parts = parts[:, None, :]
+    D = parts[:, None, :, 0] - 1
+    E = parts[:, None, :, 1] - 1
+    U = procs[None, :, :]
+    per = cyc_t[D, E, U].max(axis=-1)
+    lat = lat_t[D, E, U].sum(axis=-1) + workload.delta[n] / platform.b
+    return parts, procs, per, lat
+
+
 # ---------------------------------------------------------------------------
 # Brute force (tiny)
 # ---------------------------------------------------------------------------
@@ -55,34 +82,47 @@ def brute_force(
 ) -> Optional[Mapping]:
     """Enumerate all (partition, distinct-processor assignment); return the best
     mapping under the caps, minimizing ``objective`` ('period' or 'latency'),
-    breaking ties on the other criterion.  None if infeasible."""
+    breaking ties on the other criterion.  None if infeasible.
+
+    The enumeration is evaluated in stacked numpy batches (one per interval
+    count) rather than per-mapping Python loops; tie-breaking order is
+    identical to the scalar enumeration."""
     n, p = workload.n, platform.p
+    cyc_t = _cycle_table(workload, platform)
+    lat_t = _latency_table(workload, platform, cyc_t)
     best: Optional[Mapping] = None
     best_key = (math.inf, math.inf)
     for m in range(1, min(n, p) + 1):
-        for intervals in all_interval_partitions(n, m):
-            for procs in itertools.permutations(range(p), m):
-                mp = Mapping(intervals, procs)
-                per, lat = evaluate(workload, platform, mp)
-                if per > period_cap + 1e-12 or lat > latency_cap + 1e-12:
-                    continue
-                key = (per, lat) if objective == "period" else (lat, per)
-                if key < best_key:
-                    best, best_key = mp, key
+        parts, procs, per, lat = _enumerated_metrics(workload, platform, m, cyc_t, lat_t)
+        ok = (per <= period_cap + 1e-12) & (lat <= latency_cap + 1e-12)
+        if not ok.any():
+            continue
+        a, c = (per, lat) if objective == "period" else (lat, per)
+        a = np.where(ok, a, np.inf).ravel()
+        c = np.where(ok, c, np.inf).ravel()
+        first = np.lexsort((c, a))[0]
+        key = (float(a[first]), float(c[first]))
+        if key < best_key:
+            ci, pi = divmod(int(first), procs.shape[0])
+            best = Mapping(tuple(map(tuple, parts[ci])), tuple(int(u) for u in procs[pi]))
+            best_key = key
     return best
 
 
 def pareto_exact(workload: Workload, platform: Platform) -> list:
-    """All Pareto-optimal (period, latency) points over every mapping (tiny instances)."""
+    """All Pareto-optimal (period, latency) points over every mapping (tiny
+    instances).  Candidate evaluation is fully vectorized over the stacked
+    enumeration."""
     n, p = workload.n, platform.p
+    cyc_t = _cycle_table(workload, platform)
+    lat_t = _latency_table(workload, platform, cyc_t)
     pts = []
     for m in range(1, min(n, p) + 1):
-        for intervals in all_interval_partitions(n, m):
-            for procs in itertools.permutations(range(p), m):
-                pts.append(evaluate(workload, platform, Mapping(intervals, procs)))
+        _, _, per, lat = _enumerated_metrics(workload, platform, m, cyc_t, lat_t)
+        pts.append(np.stack([per.ravel(), lat.ravel()], axis=1))
     from .pareto import pareto_front
 
-    return pareto_front(pts)
+    return pareto_front(np.concatenate(pts))
 
 
 # ---------------------------------------------------------------------------
@@ -208,6 +248,21 @@ def _feasible_with_latency(
         return None
     items = overall[1]
     return Mapping(tuple((d, e) for d, e, _ in items), tuple(u for _, _, u in items))
+
+
+def exact_min_latency(
+    workload: Workload, platform: Platform, period_cap: float = math.inf
+) -> Optional[Mapping]:
+    """Exact minimum-latency mapping subject to ``period <= period_cap``.
+
+    DP over (stages consumed, processor mask) minimizing the Eq. (2) sum with
+    every interval cycle <= the cap — the same machinery as the latency-capped
+    feasibility check of :func:`exact_min_period`, with the roles of the two
+    criteria swapped.  Exponential in p; None when the cap is infeasible.
+    Without a cap this reduces to Lemma 1 (whole chain on the fastest
+    processor)."""
+    cyc = _cycle_table(workload, platform)
+    return _feasible_with_latency(cyc, workload, platform, float(period_cap), math.inf)
 
 
 # ---------------------------------------------------------------------------

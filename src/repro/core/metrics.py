@@ -95,6 +95,37 @@ def evaluate(workload: Workload, platform: Platform, mapping: Mapping) -> tuple:
     return (period(workload, platform, mapping), latency(workload, platform, mapping))
 
 
+def evaluate_batch(workload: Workload, platform: Platform,
+                   mappings: Sequence[Mapping]) -> np.ndarray:
+    """Vectorized ``evaluate`` over a batch of mappings.
+
+    Returns an array of shape (len(mappings), 2): column 0 the period (Eq. 1),
+    column 1 the latency (Eq. 2).  Mappings are stacked into (B, m) index
+    arrays per interval count so the cycle and latency terms of the whole
+    batch are computed with numpy instead of per-mapping Python loops — this
+    is what makes portfolio and sweep evaluation cheap.
+    """
+    out = np.empty((len(mappings), 2))
+    if not len(mappings):
+        return out
+    pre = workload.prefix_w()
+    delta, b, s = workload.delta, platform.b, platform.s
+    tail = delta[workload.n] / b
+    by_m: dict = {}
+    for i, mp in enumerate(mappings):
+        by_m.setdefault(mp.m, []).append(i)
+    for idxs in by_m.values():
+        iv = np.array([mappings[i].intervals for i in idxs])   # (B, m, 2)
+        al = np.array([mappings[i].alloc for i in idxs])       # (B, m)
+        D, E = iv[:, :, 0], iv[:, :, 1]
+        lat_terms = delta[D - 1] / b + (pre[E] - pre[D - 1]) / s[al]
+        cyc = lat_terms + delta[E] / b
+        ix = np.asarray(idxs)
+        out[ix, 0] = cyc.max(axis=1)
+        out[ix, 1] = lat_terms.sum(axis=1) + tail
+    return out
+
+
 def single_processor_mapping(workload: Workload, proc: int) -> Mapping:
     return Mapping(intervals=((1, workload.n),), alloc=(proc,))
 

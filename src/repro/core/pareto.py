@@ -1,5 +1,5 @@
 """Bi-criteria sweeps: trace (period, latency) trade-off curves with the
-paper's heuristics, and compute Pareto fronts."""
+registered bounded solvers, and compute Pareto fronts."""
 
 from __future__ import annotations
 
@@ -7,8 +7,7 @@ from typing import Iterable, Sequence
 
 import numpy as np
 
-from .heuristics import (FIXED_LATENCY_HEURISTICS, FIXED_PERIOD_HEURISTICS,
-                         HeuristicResult, run_heuristic)
+from .heuristics import run_heuristic
 from .platform import Platform
 from .workload import Workload
 
@@ -40,6 +39,23 @@ def sweep_heuristic(
     return [run_heuristic(code, workload, platform, float(b)) for b in bounds]
 
 
+def sweep_solver(
+    name: str,
+    workload: Workload,
+    platform: Platform,
+    bounds: Sequence[float],
+) -> list:
+    """Registry-level sweep: run a bounded solver for every bound, returning
+    one provenance :class:`~repro.core.solvers.Candidate` per bound."""
+    from .planner import Objective
+    from .solvers import get_solver, solve
+
+    spec = get_solver(name)
+    minimize = "latency" if spec.optimizes == "latency" else "period"
+    return [solve(name, workload, platform, Objective(minimize, bound=float(b)))
+            for b in bounds]
+
+
 def default_period_grid(workload: Workload, platform: Platform, k: int = 20) -> np.ndarray:
     """Geometric grid of fixed-period bounds between the best single-processor
     cycle / p and the single-processor period."""
@@ -59,16 +75,18 @@ def default_latency_grid(workload: Workload, platform: Platform, k: int = 20) ->
 
 
 def tradeoff_curves(workload: Workload, platform: Platform, k: int = 20) -> dict:
-    """For each heuristic, the list of achieved (period, latency) points over a
-    grid of bounds (the paper's Figures 2-7 are averages of these across
-    random instances)."""
+    """For each registered bounded solver, the list of achieved feasible
+    (period, latency) points over a grid of bounds (the paper's Figures 2-7
+    are averages of these across random instances)."""
+    from .solvers import registered_solvers
+
     out = {}
     pgrid = default_period_grid(workload, platform, k)
     lgrid = default_latency_grid(workload, platform, k)
-    for code in FIXED_PERIOD_HEURISTICS:
-        res = sweep_heuristic(code, workload, platform, pgrid)
-        out[code] = [(r.period, r.latency) for r in res if r.feasible]
-    for code in FIXED_LATENCY_HEURISTICS:
-        res = sweep_heuristic(code, workload, platform, lgrid)
-        out[code] = [(r.period, r.latency) for r in res if r.feasible]
+    for spec in registered_solvers():
+        if not spec.needs_bound:
+            continue
+        grid = pgrid if spec.optimizes == "latency" else lgrid
+        res = sweep_solver(spec.name, workload, platform, grid)
+        out[spec.name] = [(c.period, c.latency) for c in res if c.feasible]
     return out

@@ -21,8 +21,42 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs import get_config, get_smoke_config
+from ..core import Objective, PlanRequest, plan_request, tpu_pod_platform
 from ..models import get_model
 from ..models.transformer import prefill as tf_prefill
+
+
+def plan_serving(arch: str, pods: int, smoke: bool = True,
+                 shape_name: str = "decode_32k") -> dict:
+    """Plan the pipeline placement of ``arch`` over ``pods`` pods via the
+    solver-registry portfolio; returns a JSON-able digest of the PlanReport
+    (chosen mapping + per-solver provenance)."""
+    from ..models.common import SHAPES
+    from ..models.registry import lm_workload
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    wl = lm_workload(cfg, SHAPES[shape_name])
+    pf = tpu_pod_platform(pods)
+    report = plan_request(PlanRequest(wl, pf, Objective("period")))
+    digest = {
+        "feasible": report.feasible,
+        "pareto": [list(pt) for pt in report.pareto],
+        "candidates": [
+            {"solver": c.solver, "period": c.period, "latency": c.latency,
+             "feasible": c.feasible, "wall_ms": c.wall_time * 1e3,
+             **({"error": c.error} if c.error else {})}
+            for c in report.candidates
+        ],
+    }
+    if report.feasible:
+        digest.update(
+            planner=report.plan.planner,
+            stage_sizes=list(report.plan.stage_sizes),
+            pods=[int(u) for u in report.plan.mapping.alloc],
+            period=report.plan.period,
+            latency=report.plan.latency,
+        )
+    return digest
 
 
 @dataclasses.dataclass
@@ -36,8 +70,13 @@ class Request:
 
 def serve_pool(arch: str = "qwen3-4b", smoke: bool = True, n_requests: int = 16,
                batch: int = 4, prompt_len: int = 16, max_new: int = 32,
-               capacity: int = 128, seed: int = 0, greedy: bool = True) -> dict:
-    """Run a request pool to completion; returns throughput metrics."""
+               capacity: int = 128, seed: int = 0, greedy: bool = True,
+               pods: int = 0) -> dict:
+    """Run a request pool to completion; returns throughput metrics.
+
+    With ``pods > 0`` the metrics include a ``plan`` digest: the pipeline
+    placement of the served model across that many pods, computed through the
+    PlanRequest portfolio (provenance included)."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(seed))
@@ -96,7 +135,7 @@ def serve_pool(arch: str = "qwen3-4b", smoke: bool = True, n_requests: int = 16,
             state = admit(state)
 
     dt = time.time() - t0
-    return {
+    out = {
         "requests": n_requests,
         "decode_steps": steps,
         "tokens_generated": tokens_out,
@@ -104,6 +143,9 @@ def serve_pool(arch: str = "qwen3-4b", smoke: bool = True, n_requests: int = 16,
         "wall_s": dt,
         "all_done": all(r.done for r in reqs),
     }
+    if pods > 0:
+        out["plan"] = plan_serving(arch, pods, smoke=smoke)
+    return out
 
 
 def main() -> None:
@@ -114,10 +156,12 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--pods", type=int, default=0,
+                    help="also plan pipeline placement over this many pods")
     args = ap.parse_args()
     out = serve_pool(arch=args.arch, smoke=args.smoke, n_requests=args.requests,
                      batch=args.batch, prompt_len=args.prompt_len,
-                     max_new=args.max_new)
+                     max_new=args.max_new, pods=args.pods)
     print(json.dumps(out, indent=2))
 
 

@@ -13,8 +13,9 @@ from typing import Optional
 
 import numpy as np
 
-from ..core import (Objective, Platform, StagePlan, Workload,
-                    interval_cycle_times, plan, replan_for_straggler)
+from ..core import (InfeasiblePlan, Objective, Platform, StagePlan, Workload,
+                    auto_request, interval_cycle_times, plan_request,
+                    replan_for_straggler)
 
 
 @dataclasses.dataclass
@@ -60,7 +61,11 @@ def replan_stages(workload: Workload, platform: Platform, current: StagePlan,
 def elastic_replan(workload: Workload, old_platform: Platform,
                    new_num_pods: int) -> StagePlan:
     """Elastic scaling: the pod count changed (preemption / capacity add);
-    re-run the planner on the resized platform."""
+    re-run the planner portfolio on the resized platform."""
     s = np.full(new_num_pods, float(np.median(old_platform.s)))
     pf = Platform(s, old_platform.b, name=f"elastic-{new_num_pods}")
-    return plan(workload, pf, Objective("period"), mode="auto")
+    report = plan_request(auto_request(workload, pf, Objective("period")))
+    if report.plan is None:
+        raise InfeasiblePlan(f"elastic replan found no feasible mapping "
+                             f"for {new_num_pods} pods")
+    return report.plan

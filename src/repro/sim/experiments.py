@@ -23,7 +23,7 @@ from typing import Optional
 
 import numpy as np
 
-from ..core import (Platform, Workload, optimal_latency, run_heuristic)
+from ..core import Objective, Platform, Workload, optimal_latency, solve
 from ..core.heuristics import split_trajectory, sp_bi_p
 from ..core.metrics import period as eval_period
 from ..core.metrics import single_processor_mapping
@@ -105,9 +105,9 @@ def run_experiment(
         for c in codes_l:
             thresholds[c].append(l_opt)
             for bi, lb in enumerate(lgrid):
-                r = run_heuristic(c, wl, pf, lb)
-                if r.feasible:
-                    acc[c][bi].append((r.period, r.latency))
+                cand = solve(c, wl, pf, Objective("period", bound=float(lb)))
+                if cand.feasible:
+                    acc[c][bi].append((cand.period, cand.latency))
 
     curves = {}
     for c, cols in acc.items():
