@@ -7,6 +7,12 @@ Emits (to results/paper_sim/):
 
 Default sizes are reduced for CI speed; pass --full for the paper's 50 pairs
 and every (n, p) point.
+
+Engines: ``--engine batched`` (default) runs the whole study through the
+stacked-instance campaign engine (one lockstep pass over all four experiment
+families per (n, p) point — see ``repro.core.batched``); ``--engine scalar``
+uses the per-instance reference path.  Both produce byte-identical CSVs;
+the batched engine is what makes ``--full`` (and larger future sweeps) cheap.
 """
 
 from __future__ import annotations
@@ -17,12 +23,16 @@ import time
 
 import numpy as np
 
-from repro.sim import failure_thresholds, run_experiment, summarize_experiment
+from repro.sim import run_experiment
+from repro.sim.experiments import run_campaign, summarize_experiment
 
 OUT = pathlib.Path(__file__).resolve().parent.parent / "results" / "paper_sim"
 
+HEURISTICS = ("H1", "H2", "H3", "H4", "H5", "H6")
 
-def run(full: bool = False, out_dir: pathlib.Path = OUT) -> dict:
+
+def run(full: bool = False, out_dir: pathlib.Path = OUT,
+        engine: str = "batched", backend: str = "numpy") -> dict:
     out_dir.mkdir(parents=True, exist_ok=True)
     n_pairs = 50 if full else 15
     ns = (5, 10, 20, 40) if full else (5, 20)
@@ -31,20 +41,33 @@ def run(full: bool = False, out_dir: pathlib.Path = OUT) -> dict:
     t0 = time.time()
 
     results = {}
-    for exp in exps:
-        for n in ns:
-            for p in ps:
-                res = run_experiment(exp, n, p, n_pairs=n_pairs,
-                                     n_bounds=12 if full else 8,
-                                     include_h4=full or (n <= 20))
+    for n in ns:
+        for p in ps:
+            include_h4 = full or (n <= 20)
+            n_bounds = 12 if full else 8
+            if engine == "batched":
+                camp = run_campaign(exps, n, p, n_pairs=n_pairs,
+                                    n_bounds=n_bounds, include_h4=include_h4,
+                                    backend=backend)
+            else:
+                camp = {exp: run_experiment(exp, n, p, n_pairs=n_pairs,
+                                            n_bounds=n_bounds,
+                                            include_h4=include_h4,
+                                            engine=engine)
+                        for exp in exps}
+            for exp in exps:
+                res = camp[exp]
                 results[(exp, n, p)] = res
                 (out_dir / f"curves_{exp}_n{n}_p{p}.csv").write_text(
                     summarize_experiment(res))
 
-    thr = failure_thresholds(exps=exps, ns=ns, p=10, n_pairs=n_pairs)
+    # Table 1: failure thresholds at p=10, straight from the campaign results
+    # (mean over the same instances the curves used).
+    thr = {exp: {c: {n: results[(exp, n, 10)].thresholds[c][0] for n in ns}
+                 for c in HEURISTICS} for exp in exps}
     lines = ["exp,heuristic," + ",".join(f"n{n}" for n in ns)]
     for exp in exps:
-        for code in ("H1", "H2", "H3", "H4", "H5", "H6"):
+        for code in HEURISTICS:
             vals = ",".join(f"{thr[exp][code][n]:.2f}" for n in ns)
             lines.append(f"{exp},{code},{vals}")
     (out_dir / "table1_thresholds.csv").write_text("\n".join(lines))
@@ -97,17 +120,21 @@ def run(full: bool = False, out_dir: pathlib.Path = OUT) -> dict:
 
     (out_dir / "claims.txt").write_text("\n".join(claims))
     return {"claims": claims, "elapsed_s": round(time.time() - t0, 1),
-            "points": len(results)}
+            "points": len(results), "engine": engine}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--engine", choices=("batched", "scalar"), default="batched")
+    ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
+                    help="array backend for the batched engine's scoring kernels")
     args = ap.parse_args()
-    out = run(full=args.full)
+    out = run(full=args.full, engine=args.engine, backend=args.backend)
     for c in out["claims"]:
         print(c)
-    print(f"paper_sim: {out['points']} experiment points in {out['elapsed_s']}s")
+    print(f"paper_sim[{out['engine']}]: {out['points']} experiment points "
+          f"in {out['elapsed_s']}s")
 
 
 if __name__ == "__main__":

@@ -1,12 +1,19 @@
 """Planner quality + speed: heuristic optimality gap vs the exact solver on
-small/medium instances, runtime scaling, and the vectorized candidate-
-evaluation speedup (name,us_per_call,derived CSV).
+small/medium instances, runtime scaling, the vectorized candidate-evaluation
+speedup, and the batched-vs-scalar campaign-engine speedup.
+
+Prints ``name,us_per_call,derived`` CSV rows and writes the same rows as
+machine-readable ``BENCH_planner.json`` at the repo root so the perf
+trajectory is tracked across PRs.  Quality-only rows (optimality gaps) carry
+no ``us_per_call`` — gaps are reported in ``derived`` only.
 
     PYTHONPATH=src python benchmarks/planner_bench.py [--quick]
 """
 
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
 import time
 
@@ -16,7 +23,11 @@ from repro.core import (Objective, PlanRequest, auto_request, evaluate,
                         evaluate_batch, exact_min_period, make_platform,
                         make_workload, pareto_exact, period, plan_request,
                         solve)
+from repro.sim.experiments import run_campaign, run_experiment, summarize_experiment
 from repro.sim.generators import gen_instance
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_JSON = REPO_ROOT / "BENCH_planner.json"
 
 
 def optimality_gaps(n_inst: int = 20, seed: int = 0) -> dict:
@@ -104,18 +115,74 @@ def vectorized_eval(reps: int = 5, seed: int = 3) -> list:
     ]
 
 
+def campaign_speedup(quick: bool = False) -> list:
+    """The batched campaign engine vs the per-instance reference path on a
+    representative Section-5 slice (all four experiment families, paper batch
+    size, small and large (n, p) points), asserting identical outputs while
+    timing both."""
+    if quick:
+        points = ((10, 10),)
+        kw = dict(n_pairs=4, n_bounds=4, h4_iters=4, include_h4=True)
+    else:
+        points = ((10, 10), (20, 100), (40, 100))
+        kw = dict(n_pairs=50, n_bounds=12, h4_iters=10, include_h4=True)
+    exps = ("E1", "E2", "E3", "E4")
+    t0 = time.perf_counter()
+    scal = {(e, n, p): run_experiment(e, n, p, engine="scalar", **kw)
+            for n, p in points for e in exps}
+    us_scal = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    batc = {}
+    for n, p in points:
+        camp = run_campaign(exps, n, p, **kw)
+        for e in exps:
+            batc[(e, n, p)] = camp[e]
+    us_batc = (time.perf_counter() - t0) * 1e6
+    for key in scal:
+        assert summarize_experiment(scal[key]) == summarize_experiment(batc[key]), key
+    tag = "E1-E4_" + "_".join(f"n{n}p{p}" for n, p in points)
+    return [
+        (f"campaign_scalar_{tag}", us_scal, "per-instance reference path"),
+        (f"campaign_batched_{tag}", us_batc,
+         f"speedup={us_scal / us_batc:.1f}x vs scalar, identical outputs"),
+    ]
+
+
 def run(quick: bool = False) -> list:
     rows = timing(reps=2 if quick else 10)
     rows += vectorized_eval(reps=2 if quick else 5)
+    rows += campaign_speedup(quick=quick)
     gaps = optimality_gaps(n_inst=4 if quick else 20)
     for c, g in gaps.items():
-        rows.append((f"gap_vs_exact_{c}", 0.0, f"{g:.4f}"))
+        # quality-only rows: no us_per_call, the gap lives in `derived`
+        rows.append((f"gap_vs_exact_{c}", None, f"gap={g:.4f}"))
     return rows
 
 
+def write_bench_json(rows, path: pathlib.Path = BENCH_JSON,
+                     mode: str = "full") -> None:
+    """Persist benchmark rows as {name: {us_per_call, derived}} JSON.
+
+    ``_meta.mode`` records quick vs full so cross-PR comparisons never mix
+    the two (they use different reps/instance counts under the same names).
+    """
+    payload = {name: {"us_per_call": us, "derived": derived}
+               for name, us, derived in rows}
+    payload["_meta"] = {"mode": mode}
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+def format_row(name, us, derived) -> str:
+    return f"{name},{'' if us is None else f'{us:.1f}'},{derived}"
+
+
 def main() -> None:
-    for name, us, derived in run(quick="--quick" in sys.argv):
-        print(f"{name},{us:.1f},{derived}")
+    quick = "--quick" in sys.argv
+    rows = run(quick=quick)
+    for row in rows:
+        print(format_row(*row))
+    write_bench_json(rows, mode="quick" if quick else "full")
+    print(f"# wrote {BENCH_JSON}")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,6 @@
 """Benchmark driver: one section per paper table/figure + system benches.
-Prints ``name,us_per_call,derived`` CSV rows."""
+Prints ``name,us_per_call,derived`` CSV rows and writes the planner rows to
+``BENCH_planner.json`` at the repo root (perf trajectory across PRs)."""
 
 from __future__ import annotations
 
@@ -8,18 +9,20 @@ import traceback
 
 
 def main() -> None:
-    sections = []
-
     from benchmarks import kernel_bench, paper_sim, planner_bench, roofline
 
     print("# paper_sim: Section 5 simulation study (Figures 2-7 + Table 1)")
     out = paper_sim.run(full="--full" in sys.argv)
     for c in out["claims"]:
-        print(f"paper_claim,{0.0},{c}")
+        print(f"paper_claim,,{c}")
 
-    print("# planner_bench: heuristic timing + optimality gaps")
-    for name, us, derived in planner_bench.run():
-        print(f"{name},{us:.1f},{derived}")
+    print("# planner_bench: heuristic timing + campaign speedup + optimality gaps")
+    full = "--full" in sys.argv
+    planner_rows = planner_bench.run(quick=not full)
+    for row in planner_rows:
+        print(planner_bench.format_row(*row))
+    planner_bench.write_bench_json(planner_rows, mode="full" if full else "quick")
+    print(f"# wrote {planner_bench.BENCH_JSON}")
 
     print("# kernel_bench: kernel reference timings + schedule density")
     for name, us, derived in kernel_bench.run():

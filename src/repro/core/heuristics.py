@@ -64,6 +64,15 @@ class _State:
         # items: list of [d, e, proc], 1-indexed inclusive intervals, chain order.
         self.items: list = [[1, workload.n, fastest]]
         self._prefix = workload.prefix_w()
+        # Incrementally-maintained metrics: one cycle time and one latency term
+        # per item, plus the running latency sum.  ``replace`` keeps these in
+        # sync (O(parts) per accepted split) so the splitting loop never
+        # recomputes cycles()/latency() over all intervals per iteration.
+        t0 = self.latency_term(1, workload.n, fastest)
+        self._cycles: list = [self.cycle(1, workload.n, fastest)]
+        self._lat_terms: list = [t0]
+        self._lat_sum = t0
+        self._tail = workload.delta[workload.n] / platform.b
 
     # -- elementary quantities ------------------------------------------------
     def interval_w(self, d: int, e: int) -> float:
@@ -74,22 +83,20 @@ class _State:
         return wl.delta[d - 1] / pf.b + self.interval_w(d, e) / pf.s[proc] + wl.delta[e] / pf.b
 
     def cycles(self) -> np.ndarray:
-        return np.array([self.cycle(d, e, u) for d, e, u in self.items])
+        return np.asarray(self._cycles)
 
     def period(self) -> float:
-        return float(self.cycles().max())
+        return float(max(self._cycles))
 
     def latency(self) -> float:
-        wl, pf = self.wl, self.pf
-        tot = sum(wl.delta[d - 1] / pf.b + self.interval_w(d, e) / pf.s[u] for d, e, u in self.items)
-        return float(tot + wl.delta[wl.n] / pf.b)
+        return float(self._lat_sum + self._tail)
 
     def latency_term(self, d: int, e: int, proc: int) -> float:
         """This interval's contribution to Eq. (2) (input comm + compute)."""
         return self.wl.delta[d - 1] / self.pf.b + self.interval_w(d, e) / self.pf.s[proc]
 
     def worst_index(self) -> int:
-        return int(np.argmax(self.cycles()))
+        return self._cycles.index(max(self._cycles))
 
     def peek_procs(self, k: int) -> Optional[list]:
         """The next k fastest unused processors, or None if fewer remain."""
@@ -102,6 +109,14 @@ class _State:
 
     def replace(self, idx: int, parts: list) -> None:
         self.items[idx : idx + 1] = [list(p) for p in parts]
+        new_terms = [self.latency_term(d, e, u) for d, e, u in parts]
+        new_cycles = [self.cycle(d, e, u) for d, e, u in parts]
+        add = 0.0
+        for t in new_terms:
+            add += t
+        self._lat_sum = self._lat_sum - self._lat_terms[idx] + add
+        self._lat_terms[idx : idx + 1] = new_terms
+        self._cycles[idx : idx + 1] = new_cycles
 
     def mapping(self) -> Mapping:
         return Mapping(
@@ -200,6 +215,49 @@ def _pick_bi(candidates, old_cycle: float, lat_limit: float, cur_lat: float):
 
 
 # ---------------------------------------------------------------------------
+# Shared scoring kernels — the arithmetic core of the fast paths, written
+# shape-agnostically (leading batch dimensions broadcast) so the scalar path
+# below and the batched campaign engine (:mod:`repro.core.batched`) evaluate
+# candidates through the *same* code and cannot drift.  Pure elementwise array
+# math + concatenate/sum/max, hence jax.jit-able with ``xp=jax.numpy``.
+# ---------------------------------------------------------------------------
+
+def score_2way_kernel(pre_d1, pre_C, pre_e, delta_d1, delta_C, delta_e, b,
+                      inv_j, inv_p, xp=np):
+    """Cycle times and latency delta of every 2-way split of interval [d, e].
+
+    ``pre_C``/``delta_C`` hold the prefix-sum and delta values at the cut
+    points along the last axis; scalars (or per-row columns, batched) for the
+    interval ends.  Returns ``(cyc1, cyc2, dlat)`` with the two placement
+    orders concatenated along the last axis: first all cuts with the original
+    processor ``j`` on the first part, then all cuts with ``j`` and the new
+    processor ``jp`` swapped.
+    """
+    W1 = pre_C - pre_d1
+    W2 = pre_e - pre_C
+    dIn = delta_d1 / b
+    dMid = delta_C / b
+    dOut = delta_e / b
+    # order A: first part on j, second on jp; order B: swapped.
+    cyc1 = xp.concatenate([dIn + W1 * inv_j + dMid, dIn + W1 * inv_p + dMid], axis=-1)
+    cyc2 = xp.concatenate([dMid + W2 * inv_p + dOut, dMid + W2 * inv_j + dOut], axis=-1)
+    dlat = xp.concatenate([dMid + W2 * (inv_p - inv_j), dMid + W1 * (inv_p - inv_j)], axis=-1)
+    return cyc1, cyc2, dlat
+
+
+def score_3way_kernel(dI, W, dO, invp, base_term, xp=np):
+    """Cycle times, latency delta, and max cycle of 3-way splits for ONE
+    processor permutation.  ``dI``/``W``/``dO``/``invp`` carry the three parts
+    on axis -2 and the (c1, c2) cut pairs on axis -1; ``base_term`` is the
+    replaced interval's latency term.  Returns ``(cyc, dlat, mx)``."""
+    comp = dI + W * invp
+    cyc = comp + dO
+    dlat = comp.sum(axis=-2) - base_term
+    mx = cyc.max(axis=-2)
+    return cyc, dlat, mx
+
+
+# ---------------------------------------------------------------------------
 # Vectorized fast paths (numpy) — bit-identical to the generator versions,
 # asserted by tests/test_heuristics.py::test_fast_paths_match_reference.
 # ---------------------------------------------------------------------------
@@ -211,20 +269,9 @@ def _best_split_2way_fast(st: _State, idx: int, jp: int, mode: str,
         return None
     pre, delta, b, s = st._prefix, st.wl.delta, st.pf.b, st.pf.s
     C = np.arange(d, e)                       # cut points
-    W1 = pre[C] - pre[d - 1]
-    W2 = pre[e] - pre[C]
-    dIn, dMid, dOut = delta[d - 1] / b, delta[C] / b, delta[e] / b
-    inv_j, inv_p = 1.0 / s[j], 1.0 / s[jp]
-    # order A: first part on j, second on jp; order B: swapped.
-    cyc1A = dIn + W1 * inv_j + dMid
-    cyc2A = dMid + W2 * inv_p + dOut
-    cyc1B = dIn + W1 * inv_p + dMid
-    cyc2B = dMid + W2 * inv_j + dOut
-    dlatA = dMid + W2 * (inv_p - inv_j)
-    dlatB = dMid + W1 * (inv_p - inv_j)
-    cyc1 = np.concatenate([cyc1A, cyc1B])
-    cyc2 = np.concatenate([cyc2A, cyc2B])
-    dlat = np.concatenate([dlatA, dlatB])
+    cyc1, cyc2, dlat = score_2way_kernel(
+        pre[d - 1], pre[C], pre[e], delta[d - 1], delta[C], delta[e], b,
+        1.0 / s[j], 1.0 / s[jp])
     cuts = np.concatenate([C, C])
     order = np.concatenate([np.zeros(len(C)), np.ones(len(C))])
     mx = np.maximum(cyc1, cyc2)
@@ -272,9 +319,7 @@ def _best_split_3way_fast(st: _State, idx: int, jp: int, jpp: int, mode: str,
     best_choice, best_key = None, None
     for pi, perm in enumerate(_PERMS3):
         invp = inv[list(perm)][:, None]                                          # (3, 1)
-        cyc = dI + W * invp + dO                                                # (3, K)
-        dlat = (dI + W * invp).sum(axis=0) - base_term
-        mx = cyc.max(axis=0)
+        cyc, dlat, mx = score_3way_kernel(dI, W, dO, invp, base_term)           # (3, K)
         okay = (mx < old_cycle - _EPS) & (cur_lat + dlat <= lat_limit + _EPS)
         if not okay.any():
             continue
@@ -307,6 +352,7 @@ def _splitting_loop(
     pick: Callable,
     stop_when_period_leq: float = -math.inf,
     lat_limit: float = math.inf,
+    on_split: Optional[Callable] = None,
 ) -> int:
     """Run the paper's splitting loop on state ``st``.
 
@@ -318,7 +364,8 @@ def _splitting_loop(
 
     ``pick``/``gen_candidates`` identify the strategy; the loop dispatches to
     the vectorized fast paths (identical results, see tests) unless
-    ``st.force_reference`` is set.
+    ``st.force_reference`` is set.  ``on_split(st)``, when given, is invoked
+    after every accepted split (trajectory recording).
     """
     mode = "mono" if pick is _pick_mono else "bi"
     fast = not getattr(st, "force_reference", False)
@@ -351,6 +398,8 @@ def _splitting_loop(
         used = {u for _, _, u in parts} - {j}
         st.consume_procs(n_new_procs if len(used) == n_new_procs else len(used))
         splits += 1
+        if on_split is not None:
+            on_split(st)
     return splits
 
 
@@ -502,7 +551,6 @@ def split_trajectory(code: str, workload: Workload, platform: Platform) -> list:
     """
     st = _State(workload, platform)
     traj = [(st.period(), st.latency())]
-    st_trace = traj
     if code == "H1":
         gen, pick, k = _two_way_candidates, _pick_mono, 1
     elif code == "H2":
@@ -513,32 +561,10 @@ def split_trajectory(code: str, workload: Workload, platform: Platform) -> list:
         gen, pick, k = _two_way_candidates, _pick_bi, 1
     else:
         raise KeyError(f"trajectories are for fixed-period heuristics, not {code}")
-    # Re-run the loop manually so we can record each accepted state.
-    while True:
-        idx = st.worst_index()
-        d, e, j = st.items[idx]
-        if e == d:
-            break
-        new_procs = st.peek_procs(k)
-        if new_procs is None:
-            break
-        old_cycle = st.cycle(d, e, j)
-        cur_lat = st.latency()
-        mode = "mono" if pick is _pick_mono else "bi"
-        if not _State.force_reference and k == 1:
-            choice = _best_split_2way_fast(st, idx, new_procs[0], mode, old_cycle, math.inf, cur_lat)
-        elif not _State.force_reference and k == 2:
-            choice = _best_split_3way_fast(st, idx, new_procs[0], new_procs[1], mode,
-                                           old_cycle, math.inf, cur_lat)
-        else:
-            choice = pick(gen(st, idx, *new_procs), old_cycle, math.inf, cur_lat)
-        if choice is None:
-            break
-        parts, _, _ = choice
-        st.replace(idx, parts)
-        used = {u for _, _, u in parts} - {j}
-        st.consume_procs(k if len(used) == k else len(used))
-        st_trace.append((st.period(), st.latency()))
+    _splitting_loop(
+        st, n_new_procs=k, gen_candidates=gen, pick=pick,
+        on_split=lambda s: traj.append((s.period(), s.latency())),
+    )
     return traj
 
 

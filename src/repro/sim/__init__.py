@@ -1,9 +1,10 @@
 """Paper simulation study (Section 5): random instance generators E1-E4,
 experiment runner, failure thresholds."""
 
-from .generators import EXPERIMENTS, gen_instance
+from .generators import EXPERIMENTS, InstanceBatch, gen_instance, gen_instance_batch
 from .experiments import (run_experiment, failure_thresholds, trajectory,
                           summarize_experiment)
 
-__all__ = ["EXPERIMENTS", "gen_instance", "run_experiment", "failure_thresholds",
-           "trajectory", "summarize_experiment"]
+__all__ = ["EXPERIMENTS", "InstanceBatch", "gen_instance", "gen_instance_batch",
+           "run_experiment", "failure_thresholds", "trajectory",
+           "summarize_experiment"]

@@ -13,6 +13,17 @@ Fixed-period heuristics H1-H3 (and H4's inner splitter) are evaluated via a
 single exhaustion-run *trajectory* per instance (see
 ``repro.core.heuristics.split_trajectory``), which is exact and ~20x faster
 than re-running per bound.
+
+Two engines produce identical outputs (asserted by tests/test_batched.py):
+
+  - ``engine="batched"`` (default): the whole campaign runs through the
+    lockstep stacked-instance engine (:mod:`repro.core.batched`) — one
+    trajectory pass per heuristic over all instances, H5/H6 over the full
+    (instance x bound) grid in one pass, and an H4 binary search probing all
+    feasible (instance, bound) problems per bisection step.
+  - ``engine="scalar"``: the per-instance reference path (one Python loop per
+    instance/bound), kept as the behavioral reference in the same spirit as
+    ``heuristics.reference_mode``.
 """
 
 from __future__ import annotations
@@ -24,10 +35,13 @@ from typing import Optional
 import numpy as np
 
 from ..core import Objective, Platform, Workload, optimal_latency, solve
+from ..core.batched import (ProblemBatch, _as_problem_batch,
+                            _fixed_latency_state, batched_sp_bi_p,
+                            batched_trajectory_sets, evaluate_state_rows)
 from ..core.heuristics import split_trajectory, sp_bi_p
 from ..core.metrics import period as eval_period
 from ..core.metrics import single_processor_mapping
-from .generators import gen_instance
+from .generators import gen_instance, gen_instance_batch
 
 N_STAGES_DEFAULT = (5, 10, 20, 40)
 N_PROCS_DEFAULT = (10, 100)
@@ -66,15 +80,40 @@ def run_experiment(
     seed0: int = 1234,
     h4_iters: int = 10,
     include_h4: bool = True,
+    engine: str = "batched",
+    backend: str = "numpy",
 ) -> ExperimentResult:
     period_fracs = np.geomspace(0.04, 1.0, n_bounds)     # x single-processor period
     latency_mults = np.linspace(1.0, 3.0, n_bounds)      # x optimal latency
 
+    if engine == "batched":
+        return run_campaign([exp], n, p, n_pairs=n_pairs, n_bounds=n_bounds,
+                            seed0=seed0, h4_iters=h4_iters,
+                            include_h4=include_h4, backend=backend)[exp]
+    if engine != "scalar":
+        raise ValueError(f"unknown engine {engine!r}; use 'batched' or 'scalar'")
     codes_p = ["H1", "H2", "H3"] + (["H4"] if include_h4 else [])
     codes_l = ["H5", "H6"]
     acc = {c: [[] for _ in range(n_bounds)] for c in codes_p + codes_l}
     thresholds = {c: [] for c in codes_p + codes_l}
+    _run_scalar(exp, n, p, n_pairs, seed0, h4_iters, include_h4,
+                period_fracs, latency_mults, codes_l, acc, thresholds)
 
+    curves = {}
+    for c, cols in acc.items():
+        mean_per = np.array([np.mean([a for a, _ in col]) if col else np.nan for col in cols])
+        mean_lat = np.array([np.mean([b for _, b in col]) if col else np.nan for col in cols])
+        frac = np.array([len(col) / n_pairs for col in cols])
+        curves[c] = (mean_per, mean_lat, frac)
+
+    thr = {c: (float(np.mean(v)), float(np.max(v))) for c, v in thresholds.items()}
+    grid = period_fracs  # stored for reference; latency grids are the mults
+    return ExperimentResult(exp, n, p, n_pairs, grid, curves, thr)
+
+
+def _run_scalar(exp, n, p, n_pairs, seed0, h4_iters, include_h4,
+                period_fracs, latency_mults, codes_l, acc, thresholds) -> None:
+    """Per-instance reference path: one Python loop per (instance, bound)."""
     for k in range(n_pairs):
         wl, pf = gen_instance(exp, n, p, seed=seed0 + k)
         hi = eval_period(wl, pf, single_processor_mapping(wl, pf.fastest()))
@@ -109,16 +148,141 @@ def run_experiment(
                 if cand.feasible:
                     acc[c][bi].append((cand.period, cand.latency))
 
-    curves = {}
-    for c, cols in acc.items():
-        mean_per = np.array([np.mean([a for a, _ in col]) if col else np.nan for col in cols])
-        mean_lat = np.array([np.mean([b for _, b in col]) if col else np.nan for col in cols])
-        frac = np.array([len(col) / n_pairs for col in cols])
-        curves[c] = (mean_per, mean_lat, frac)
 
-    thr = {c: (float(np.mean(v)), float(np.max(v))) for c, v in thresholds.items()}
-    grid = period_fracs  # stored for reference; latency grids are the mults
-    return ExperimentResult(exp, n, p, n_pairs, grid, curves, thr)
+def _campaign_core(pb, workloads, platforms, pgrids, lgrids, n_bounds,
+                   h4_iters, include_h4, backend):
+    """Batched-engine evaluation of G stacked instances (any mix of
+    experiment families sharing (n, p)) over per-instance bound grids.
+
+    Returns ``(points, thr)``: ``points[code][g][bi]`` is the accumulated
+    (period, latency) or None, ``thr[code][g]`` the failure threshold — both
+    bit-identical to what the scalar path produces per instance.
+    """
+    G = len(workloads)
+    codes_p = ["H1", "H2", "H3"] + (["H4"] if include_h4 else [])
+    points = {c: [[None] * n_bounds for _ in range(G)] for c in codes_p + ["H5", "H6"]}
+    thr = {}
+
+    trajs = batched_trajectory_sets(codes_p, pb, backend=backend)
+    for c in ["H1", "H2", "H3"]:
+        thr[c] = [min(per for per, _ in trajs[c][g]) for g in range(G)]
+        for g in range(G):
+            for bi in range(n_bounds):
+                points[c][g][bi] = _result_from_trajectory(trajs[c][g], pgrids[g][bi])
+    if include_h4:
+        thr["H4"] = [min(per for per, _ in trajs["H4"][g]) for g in range(G)]
+        # One lockstep binary search over every (instance, bound) problem that
+        # the trajectory proves feasible.
+        todo = [(g, bi) for g in range(G) for bi in range(n_bounds)
+                if _result_from_trajectory(trajs["H4"][g], pgrids[g][bi]) is not None]
+        if todo:
+            sub = pb.take([g for g, _ in todo])
+            bounds = [pgrids[g][bi] for g, bi in todo]
+            res4 = batched_sp_bi_p(sub, bounds, iters=h4_iters, backend=backend,
+                                   with_mappings=False,
+                                   groups=[g for g, _ in todo])
+            for (g, bi), r in zip(todo, res4):
+                if r.feasible:
+                    points["H4"][g][bi] = (r.period, r.latency)
+
+    # H5/H6 over the (instance x bound) grid.  The running latency of the
+    # splitting loop is monotone non-decreasing (new processors are never
+    # faster than enrolled ones, so dlat >= 0), hence every bound at or above
+    # the *unconstrained* run's final latency provably reproduces that run —
+    # one lockstep pass per instance covers the whole tail of its bound grid,
+    # and only the binding bounds run individually.
+    for c in ("H5", "H6"):
+        st_inf, _ = _fixed_latency_state(c, pb, np.full(G, np.inf), backend)
+        m_inf = st_inf.latency()
+        metr_inf = evaluate_state_rows(workloads, platforms, st_inf)
+        # safety margin: the loop's cur_lat+dlat feasibility probe can exceed
+        # the post-step state latency by a few ulps
+        cut = m_inf + 1e-9 * np.maximum(1.0, np.abs(m_inf))
+        con = [(g, bi) for g in range(G) for bi in range(n_bounds)
+               if lgrids[g][bi] < cut[g]]
+        metr_con = {}
+        if con:
+            sub = pb.take([g for g, _ in con])
+            bnds = np.array([lgrids[g][bi] for g, bi in con])
+            st_c, failed_c = _fixed_latency_state(c, sub, bnds, backend)
+            mc = evaluate_state_rows([workloads[g] for g, _ in con],
+                                     [platforms[g] for g, _ in con],
+                                     st_c, skip=failed_c)
+            for row, gb in enumerate(con):
+                metr_con[gb] = None if failed_c[row] else (mc[row, 0], mc[row, 1])
+        # Replicate the solve() layer: candidate metrics come from
+        # metrics.evaluate on the mapping, feasibility from meets_bound.
+        for g in range(G):
+            for bi in range(n_bounds):
+                v = metr_con.get((g, bi), (metr_inf[g, 0], metr_inf[g, 1]))
+                if v is None:
+                    continue
+                per, lat = float(v[0]), float(v[1])
+                if (math.isfinite(per) and math.isfinite(lat)
+                        and lat <= float(lgrids[g][bi]) + 1e-12):
+                    points[c][g][bi] = (per, lat)
+    return points, thr
+
+
+def run_campaign(
+    exps,
+    n: int,
+    p: int,
+    n_pairs: int = 50,
+    n_bounds: int = 16,
+    seed0: int = 1234,
+    h4_iters: int = 10,
+    include_h4: bool = True,
+    backend: str = "numpy",
+) -> dict:
+    """Batched engine entry point: run SEVERAL experiment families sharing
+    (n, p) as ONE stacked-instance campaign and return {exp: ExperimentResult}.
+
+    All instances of all families are stacked into a single ProblemBatch, so
+    every lockstep pass (trajectories, H4 bisection, H5/H6 grid) amortizes its
+    per-iteration overhead over ``len(exps) * n_pairs`` rows instead of
+    ``n_pairs`` — this cross-family batching is where most of the campaign
+    speedup over the scalar path comes from.  Outputs are bit-identical to
+    per-exp ``run_experiment(engine="scalar")`` runs.
+    """
+    exps = list(exps)
+    period_fracs = np.geomspace(0.04, 1.0, n_bounds)     # x single-processor period
+    latency_mults = np.linspace(1.0, 3.0, n_bounds)      # x optimal latency
+    seeds = [seed0 + k for k in range(n_pairs)]
+    batches = [gen_instance_batch(exp, n, p, seeds) for exp in exps]
+    workloads = [wl for b in batches for wl in b.workloads]
+    platforms = [pf for b in batches for pf in b.platforms]
+    pb = ProblemBatch.concat(batches)
+    his = [eval_period(wl, pf, single_processor_mapping(wl, pf.fastest()))
+           for wl, pf in zip(workloads, platforms)]
+    lopts = [optimal_latency(wl, pf) for wl, pf in zip(workloads, platforms)]
+    pgrids = [hi * period_fracs for hi in his]
+    lgrids = [l_opt * latency_mults for l_opt in lopts]
+
+    points, thr_vals = _campaign_core(pb, workloads, platforms, pgrids, lgrids,
+                                      n_bounds, h4_iters, include_h4, backend)
+    thr_vals = dict(thr_vals)
+    for c in ("H5", "H6"):
+        thr_vals[c] = lopts
+
+    out = {}
+    codes = ["H1", "H2", "H3"] + (["H4"] if include_h4 else []) + ["H5", "H6"]
+    for ei, exp in enumerate(exps):
+        lo = ei * n_pairs
+        curves = {}
+        for c in codes:
+            cols = [[points[c][g][bi] for g in range(lo, lo + n_pairs)
+                     if points[c][g][bi] is not None] for bi in range(n_bounds)]
+            mean_per = np.array([np.mean([a for a, _ in col]) if col else np.nan
+                                 for col in cols])
+            mean_lat = np.array([np.mean([b for _, b in col]) if col else np.nan
+                                 for col in cols])
+            frac = np.array([len(col) / n_pairs for col in cols])
+            curves[c] = (mean_per, mean_lat, frac)
+        thr = {c: (float(np.mean(thr_vals[c][lo:lo + n_pairs])),
+                   float(np.max(thr_vals[c][lo:lo + n_pairs]))) for c in codes}
+        out[exp] = ExperimentResult(exp, n, p, n_pairs, period_fracs, curves, thr)
+    return out
 
 
 def failure_thresholds(
@@ -127,12 +291,33 @@ def failure_thresholds(
     p: int = 10,
     n_pairs: int = 50,
     seed0: int = 1234,
+    engine: str = "batched",
+    backend: str = "numpy",
 ) -> dict:
     """The paper's Table 1: per (experiment, heuristic, n), the failure
     threshold, averaged over instances.  Returns {exp: {code: {n: value}}}."""
-    out: dict = {}
+    exps = list(exps)
+    out: dict = {exp: {c: {} for c in ["H1", "H2", "H3", "H4", "H5", "H6"]}
+                 for exp in exps}
+    if engine == "batched":
+        # one stacked pass per n across ALL experiment families
+        seeds = [seed0 + k for k in range(n_pairs)]
+        for n in ns:
+            batches = [gen_instance_batch(exp, n, p, seeds) for exp in exps]
+            pb = ProblemBatch.concat(batches)
+            trajsets = batched_trajectory_sets(["H1", "H2", "H3", "H4"], pb,
+                                               backend=backend)
+            for c, trajs in trajsets.items():
+                for ei, exp in enumerate(exps):
+                    sl = trajs[ei * n_pairs:(ei + 1) * n_pairs]
+                    out[exp][c][n] = float(np.mean([min(per for per, _ in t)
+                                                    for t in sl]))
+            for ei, exp in enumerate(exps):
+                lopts = [optimal_latency(wl, pf) for wl, pf in batches[ei]]
+                out[exp]["H5"][n] = float(np.mean(lopts))
+                out[exp]["H6"][n] = float(np.mean(lopts))
+        return out
     for exp in exps:
-        out[exp] = {c: {} for c in ["H1", "H2", "H3", "H4", "H5", "H6"]}
         for n in ns:
             vals = {c: [] for c in out[exp]}
             for k in range(n_pairs):

@@ -15,7 +15,7 @@ E4's range [0.01, 10] is continuous.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -67,4 +67,55 @@ def gen_instance(exp: str, n: int, p: int, seed: int) -> tuple:
     return (
         Workload(w, delta, name=f"{exp}-n{n}-seed{seed}"),
         Platform(s, BANDWIDTH, name=f"{exp}-p{p}-seed{seed}"),
+    )
+
+
+@dataclasses.dataclass
+class InstanceBatch:
+    """A campaign's instances as stacked structure-of-arrays state.
+
+    Rows are the instances of :func:`gen_instance` for ``seeds`` (identical
+    draws — the per-instance objects are kept in ``workloads``/``platforms``
+    for the scalar reference path and for tests).  ``prefix`` (stage-work
+    prefix sums) and ``order`` (speed-sorted processor indices) are
+    precomputed once here; the batched engine (:mod:`repro.core.batched`)
+    consumes this object directly.
+    """
+
+    exp: str
+    n: int
+    p: int
+    seeds: tuple
+    w: np.ndarray          # (B, n)
+    delta: np.ndarray      # (B, n+1)
+    s: np.ndarray          # (B, p)
+    b: float
+    prefix: np.ndarray     # (B, n+1)
+    order: np.ndarray      # (B, p) int
+    workloads: tuple       # per-instance Workload objects
+    platforms: tuple       # per-instance Platform objects
+
+    def __len__(self) -> int:
+        return len(self.seeds)
+
+    def __iter__(self):
+        return iter(zip(self.workloads, self.platforms))
+
+    def instance(self, i: int) -> tuple:
+        return self.workloads[i], self.platforms[i]
+
+
+def gen_instance_batch(exp: str, n: int, p: int, seeds: Sequence[int]) -> InstanceBatch:
+    """B random instances stacked for the batched campaign engine."""
+    pairs = [gen_instance(exp, n, p, seed=int(sd)) for sd in seeds]
+    return InstanceBatch(
+        exp=exp, n=n, p=p, seeds=tuple(int(sd) for sd in seeds),
+        w=np.stack([wl.w for wl, _ in pairs]),
+        delta=np.stack([wl.delta for wl, _ in pairs]),
+        s=np.stack([pf.s for _, pf in pairs]),
+        b=BANDWIDTH,
+        prefix=np.stack([wl.prefix_w() for wl, _ in pairs]),
+        order=np.stack([pf.sorted_indices() for _, pf in pairs]),
+        workloads=tuple(wl for wl, _ in pairs),
+        platforms=tuple(pf for _, pf in pairs),
     )

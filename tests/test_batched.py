@@ -1,0 +1,150 @@
+"""Batched campaign engine: bit-for-bit equivalence with the per-instance
+path, padding/convergence-mask behavior, and the campaign wiring."""
+
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import make_platform, make_workload, optimal_latency, period
+from repro.core.batched import (batched_fixed_latency, batched_sp_bi_p,
+                                batched_trajectories, batched_trajectory_sets,
+                                stack_instances)
+from repro.core.heuristics import (sp_bi_l, sp_bi_p, sp_mono_l,
+                                   split_trajectory)
+from repro.core.metrics import single_processor_mapping
+from repro.sim import gen_instance_batch
+from repro.sim.experiments import run_campaign, run_experiment, summarize_experiment
+
+SEEDS = range(7000, 7006)
+
+
+def _same_result(a, b):
+    return (a.mapping == b.mapping and a.period == b.period
+            and a.latency == b.latency and a.feasible == b.feasible
+            and a.splits == b.splits)
+
+
+@pytest.mark.parametrize("exp", ["E1", "E2", "E3", "E4"])
+@pytest.mark.parametrize("p", [10, 100])
+def test_trajectories_bitwise_equal(exp, p):
+    """Batched H1-H4 trajectories == per-instance split_trajectory, EXACTLY
+    (float equality, not approx), for every experiment family and both
+    paper processor counts."""
+    batch = gen_instance_batch(exp, 12, p, SEEDS)
+    for code in ("H1", "H2", "H3", "H4"):
+        bt = batched_trajectories(code, batch)
+        for i, (wl, pf) in enumerate(batch):
+            assert bt[i] == split_trajectory(code, wl, pf), (code, i)
+
+
+def test_trajectory_sets_group_codes():
+    """Grouped runs (H1+H4 and H2+H3 share lockstep batches) return the same
+    trajectories as separate runs."""
+    batch = gen_instance_batch("E2", 15, 10, SEEDS)
+    grouped = batched_trajectory_sets(["H1", "H2", "H3", "H4"], batch)
+    for code in ("H1", "H2", "H3", "H4"):
+        assert grouped[code] == batched_trajectories(code, batch), code
+
+
+@pytest.mark.parametrize("exp", ["E1", "E2", "E3", "E4"])
+@pytest.mark.parametrize("p", [10, 100])
+def test_fixed_latency_bitwise_equal(exp, p):
+    """Batched H5/H6 == sp_mono_l/sp_bi_l per instance, with per-problem
+    bounds spanning infeasible (below L_opt) through exhaustion."""
+    batch = gen_instance_batch(exp, 12, p, SEEDS)
+    mults = [0.9, 1.0, 1.2, 1.6, 2.2, 3.0]
+    bounds = [optimal_latency(wl, pf) * m
+              for (wl, pf), m in zip(batch, mults)]
+    for code, fn in (("H5", sp_mono_l), ("H6", sp_bi_l)):
+        rs = batched_fixed_latency(code, batch, bounds)
+        for i, (wl, pf) in enumerate(batch):
+            assert _same_result(rs[i], fn(wl, pf, bounds[i])), (code, i)
+
+
+@pytest.mark.parametrize("exp", ["E2", "E4"])
+@pytest.mark.parametrize("p", [10, 100])
+def test_h4_binary_search_bitwise_equal(exp, p):
+    """The lockstep H4 binary search (all problems probed per bisection step)
+    == per-instance sp_bi_p, including infeasible bounds."""
+    batch = gen_instance_batch(exp, 10, p, SEEDS)
+    fracs = [0.05, 0.2, 0.4, 0.6, 0.8, 1.0]
+    bounds = [period(wl, pf, single_processor_mapping(wl, pf.fastest())) * f
+              for (wl, pf), f in zip(batch, fracs)]
+    rs = batched_sp_bi_p(batch, bounds, iters=8)
+    for i, (wl, pf) in enumerate(batch):
+        assert _same_result(rs[i], sp_bi_p(wl, pf, bounds[i], iters=8)), i
+
+
+def test_padding_mixed_convergence():
+    """A batch mixing an instance that converges immediately (no improving
+    split: every extra processor is uselessly slow) with one that splits many
+    times: per-problem masks must keep trajectories independent and padded
+    state must not leak across rows."""
+    n = 12
+    fast_flat = make_workload([10.0] * n, [0.0] * (n + 1))
+    wl2 = make_workload(list(range(1, n + 1)), [5.0] * (n + 1))
+    pf_stuck = make_platform([20.0] + [0.001] * 9, b=10.0)   # splitting never helps
+    pf_rich = make_platform([20.0, 19.0, 18.0, 17.0, 16.0, 15.0, 14.0, 13.0,
+                             12.0, 11.0], b=10.0)
+    pairs = [(fast_flat, pf_stuck), (fast_flat, pf_rich), (wl2, pf_stuck),
+             (wl2, pf_rich)]
+    pb = stack_instances(pairs)
+    for code in ("H1", "H2", "H3", "H4"):
+        bt = batched_trajectories(code, pb)
+        lengths = [len(t) for t in bt]
+        # stuck instances record only the initial state; rich ones split
+        assert lengths[0] == 1 and lengths[2] == 1, (code, lengths)
+        assert lengths[1] > 1 and lengths[3] > 1, (code, lengths)
+        for i, (wl, pf) in enumerate(pairs):
+            assert bt[i] == split_trajectory(code, wl, pf), (code, i)
+
+
+def test_stack_instances_validates_shapes():
+    wl_a = make_workload([1.0, 2.0], [0.0, 0.0, 0.0])
+    wl_b = make_workload([1.0, 2.0, 3.0], [0.0] * 4)
+    pf = make_platform([1.0, 2.0], 10.0)
+    with pytest.raises(ValueError):
+        stack_instances([(wl_a, pf), (wl_b, pf)])
+    with pytest.raises(ValueError):
+        stack_instances([])
+
+
+def test_run_experiment_engines_identical():
+    """The whole experiment harness (curves + thresholds + feasibility
+    fractions) is byte-identical between engines."""
+    for exp, n, p in (("E1", 5, 10), ("E2", 10, 10), ("E3", 8, 100)):
+        a = run_experiment(exp, n, p, n_pairs=5, n_bounds=5, engine="scalar")
+        b = run_experiment(exp, n, p, n_pairs=5, n_bounds=5, engine="batched")
+        assert summarize_experiment(a) == summarize_experiment(b), (exp, n, p)
+
+
+def test_run_campaign_matches_per_exp():
+    """Cross-family stacking (the 4 experiment families in one batch) changes
+    nothing about per-family results."""
+    camp = run_campaign(("E1", "E2", "E3", "E4"), 8, 10, n_pairs=4, n_bounds=4)
+    for exp in ("E1", "E2", "E3", "E4"):
+        solo = run_experiment(exp, 8, 10, n_pairs=4, n_bounds=4, engine="scalar")
+        assert summarize_experiment(solo) == summarize_experiment(camp[exp]), exp
+
+
+def test_unknown_code_and_engine_raise():
+    batch = gen_instance_batch("E1", 5, 5, [1, 2])
+    with pytest.raises(KeyError):
+        batched_trajectories("H5", batch)
+    with pytest.raises(ValueError):
+        run_experiment("E1", 5, 5, n_pairs=2, n_bounds=3, engine="bogus")
+
+
+def test_jax_backend_agrees():
+    """The scoring kernels under jax.jit (x64) drive the same splits; floats
+    agree to numerical tolerance."""
+    jax = pytest.importorskip("jax")
+    del jax
+    batch = gen_instance_batch("E2", 8, 6, range(3))
+    for code in ("H1", "H2", "H3", "H4"):
+        a = batched_trajectories(code, batch, backend="numpy")
+        b = batched_trajectories(code, batch, backend="jax")
+        assert [len(t) for t in a] == [len(t) for t in b], code
+        for ta, tb in zip(a, b):
+            assert np.allclose(np.asarray(ta), np.asarray(tb), rtol=1e-12), code
