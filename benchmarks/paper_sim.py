@@ -1,18 +1,25 @@
 """Paper reproduction: the simulation study of Section 5.
 
 Emits (to results/paper_sim/):
-  - curves_<exp>_n<k>_p<P>.csv   — the trade-off curves behind Figures 2-7
-  - table1_thresholds.csv        — the failure-threshold table (Table 1)
-  - claims.txt                   — machine-checked qualitative claims
+  - curves_<exp>_n<k>_p<P>.csv      — the trade-off curves behind Figures 2-7
+  - curves_<exp>_n<k>_p<P>_ci.csv   — mean +/- 95% CI across seed banks
+                                      (only with --replications R > 1)
+  - table1_thresholds.csv           — the failure-threshold table (Table 1)
+  - table1_thresholds_ci.csv        — its replication CIs (with --replications)
+  - claims.txt                      — machine-checked qualitative claims
 
 Default sizes are reduced for CI speed; pass --full for the paper's 50 pairs
-and every (n, p) point.
+and every (n, p) point.  --large-grid adds the follow-up study's
+n in {80, 160}, p = 1000 families (reduced pair count, see --large-pairs).
 
 Engines: ``--engine batched`` (default) runs the whole study through the
 stacked-instance campaign engine (one lockstep pass over all four experiment
-families per (n, p) point — see ``repro.core.batched``); ``--engine scalar``
-uses the per-instance reference path.  Both produce byte-identical CSVs;
-the batched engine is what makes ``--full`` (and larger future sweeps) cheap.
+families per (n, p) point — see ``repro.core.batched``); ``--engine fused``
+compiles every lockstep loop into a single ``jax.jit`` ``lax.while_loop``
+(``repro.core.fused``, O(1) host dispatches per heuristic arity — the engine
+for accelerators and the large-grid/replication sweeps); ``--engine scalar``
+uses the per-instance reference path.  All engines produce byte-identical
+CSVs (the fused engine carries an FMA guard so even its floats match).
 """
 
 from __future__ import annotations
@@ -24,15 +31,40 @@ import time
 import numpy as np
 
 from repro.sim import run_experiment
-from repro.sim.experiments import run_campaign, summarize_experiment
+from repro.sim.experiments import (N_PROCS_LARGE, N_STAGES_LARGE,
+                                   _campaign_backend, run_campaign,
+                                   run_replicated, summarize_experiment,
+                                   summarize_replicated)
 
 OUT = pathlib.Path(__file__).resolve().parent.parent / "results" / "paper_sim"
 
 HEURISTICS = ("H1", "H2", "H3", "H4", "H5", "H6")
 
 
+def _run_point(exps, n, p, n_pairs, n_bounds, include_h4, engine, backend,
+               replications):
+    """One (n, p) grid point through the selected engine; returns
+    (single-bank {exp: ExperimentResult}, {exp: ReplicatedResult} or None)."""
+    if replications > 1:
+        rep, first = run_replicated(exps, n, p, n_pairs=n_pairs,
+                                    replications=replications,
+                                    n_bounds=n_bounds, include_h4=include_h4,
+                                    engine=engine, backend=backend)
+        return first, rep
+    if engine == "scalar":
+        return {exp: run_experiment(exp, n, p, n_pairs=n_pairs,
+                                    n_bounds=n_bounds, include_h4=include_h4,
+                                    engine="scalar")
+                for exp in exps}, None
+    return run_campaign(exps, n, p, n_pairs=n_pairs, n_bounds=n_bounds,
+                        include_h4=include_h4,
+                        backend=_campaign_backend(engine, backend)), None
+
+
 def run(full: bool = False, out_dir: pathlib.Path = OUT,
-        engine: str = "batched", backend: str = "numpy") -> dict:
+        engine: str = "batched", backend: str = "numpy",
+        replications: int = 1, large_grid: bool = False,
+        large_pairs: int = 6) -> dict:
     out_dir.mkdir(parents=True, exist_ok=True)
     n_pairs = 50 if full else 15
     ns = (5, 10, 20, 40) if full else (5, 20)
@@ -40,26 +72,26 @@ def run(full: bool = False, out_dir: pathlib.Path = OUT,
     exps = ("E1", "E2", "E3", "E4")
     t0 = time.time()
 
+    points = [(n, p, n_pairs, 12 if full else 8, full or (n <= 20))
+              for n in ns for p in ps]
+    if large_grid:
+        points += [(n, p, large_pairs, 8, True)
+                   for n in N_STAGES_LARGE for p in N_PROCS_LARGE]
+
     results = {}
-    for n in ns:
-        for p in ps:
-            include_h4 = full or (n <= 20)
-            n_bounds = 12 if full else 8
-            if engine == "batched":
-                camp = run_campaign(exps, n, p, n_pairs=n_pairs,
-                                    n_bounds=n_bounds, include_h4=include_h4,
-                                    backend=backend)
-            else:
-                camp = {exp: run_experiment(exp, n, p, n_pairs=n_pairs,
-                                            n_bounds=n_bounds,
-                                            include_h4=include_h4,
-                                            engine=engine)
-                        for exp in exps}
-            for exp in exps:
-                res = camp[exp]
-                results[(exp, n, p)] = res
-                (out_dir / f"curves_{exp}_n{n}_p{p}.csv").write_text(
-                    summarize_experiment(res))
+    rep_results = {}
+    for n, p, pairs, n_bounds, include_h4 in points:
+        camp, rep = _run_point(exps, n, p, pairs, n_bounds, include_h4,
+                               engine, backend, replications)
+        for exp in exps:
+            res = camp[exp]
+            results[(exp, n, p)] = res
+            (out_dir / f"curves_{exp}_n{n}_p{p}.csv").write_text(
+                summarize_experiment(res))
+            if rep is not None:
+                rep_results[(exp, n, p)] = rep[exp]
+                (out_dir / f"curves_{exp}_n{n}_p{p}_ci.csv").write_text(
+                    summarize_replicated(rep[exp]))
 
     # Table 1: failure thresholds at p=10, straight from the campaign results
     # (mean over the same instances the curves used).
@@ -71,6 +103,18 @@ def run(full: bool = False, out_dir: pathlib.Path = OUT,
             vals = ",".join(f"{thr[exp][code][n]:.2f}" for n in ns)
             lines.append(f"{exp},{code},{vals}")
     (out_dir / "table1_thresholds.csv").write_text("\n".join(lines))
+
+    if replications > 1:
+        lines = ["exp,heuristic,"
+                 + ",".join(f"n{n}_mean,n{n}_ci95" for n in ns)]
+        for exp in exps:
+            for code in HEURISTICS:
+                cells = []
+                for n in ns:
+                    m, ci = rep_results[(exp, n, 10)].thresholds[code]
+                    cells.append(f"{m:.2f},{ci:.3f}")
+                lines.append(f"{exp},{code}," + ",".join(cells))
+        (out_dir / "table1_thresholds_ci.csv").write_text("\n".join(lines))
 
     # --- machine-checked qualitative claims from the paper -----------------
     claims = []
@@ -120,21 +164,37 @@ def run(full: bool = False, out_dir: pathlib.Path = OUT,
 
     (out_dir / "claims.txt").write_text("\n".join(claims))
     return {"claims": claims, "elapsed_s": round(time.time() - t0, 1),
-            "points": len(results), "engine": engine}
+            "points": len(results), "engine": engine,
+            "replications": replications}
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--engine", choices=("batched", "scalar"), default="batched")
+    ap.add_argument("--engine", choices=("batched", "fused", "scalar"),
+                    default="batched")
     ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
-                    help="array backend for the batched engine's scoring kernels")
+                    help="array backend for the batched engine's scoring "
+                         "kernels (ignored by --engine fused, which is "
+                         "always fully traced)")
+    ap.add_argument("--replications", type=int, default=1, metavar="R",
+                    help="run each grid point over R disjoint seed banks and "
+                         "emit mean +/- 95%% CI CSVs next to the point CSVs")
+    ap.add_argument("--large-grid", action="store_true",
+                    help="add the n in {80, 160}, p = 1000 follow-up "
+                         "families (reduced pair count)")
+    ap.add_argument("--large-pairs", type=int, default=6,
+                    help="instance pairs per large-grid point (default 6)")
     args = ap.parse_args()
-    out = run(full=args.full, engine=args.engine, backend=args.backend)
+    out = run(full=args.full, engine=args.engine, backend=args.backend,
+              replications=args.replications, large_grid=args.large_grid,
+              large_pairs=args.large_pairs)
     for c in out["claims"]:
         print(c)
+    extra = (f", {out['replications']} replications"
+             if out["replications"] > 1 else "")
     print(f"paper_sim[{out['engine']}]: {out['points']} experiment points "
-          f"in {out['elapsed_s']}s")
+          f"in {out['elapsed_s']}s{extra}")
 
 
 if __name__ == "__main__":

@@ -116,10 +116,12 @@ def vectorized_eval(reps: int = 5, seed: int = 3) -> list:
 
 
 def campaign_speedup(quick: bool = False) -> list:
-    """The batched campaign engine vs the per-instance reference path on a
-    representative Section-5 slice (all four experiment families, paper batch
-    size, small and large (n, p) points), asserting identical outputs while
-    timing both."""
+    """The batched and fused campaign engines vs the per-instance reference
+    path on a representative Section-5 slice (all four experiment families,
+    paper batch size, small and large (n, p) points), asserting identical
+    outputs while timing all three.  The fused engine is timed twice: cold
+    (including its one-off jit traces) and warm (the steady-state cost every
+    further campaign of the same shapes pays)."""
     if quick:
         points = ((10, 10),)
         kw = dict(n_pairs=4, n_bounds=4, h4_iters=4, include_h4=True)
@@ -131,20 +133,105 @@ def campaign_speedup(quick: bool = False) -> list:
     scal = {(e, n, p): run_experiment(e, n, p, engine="scalar", **kw)
             for n, p in points for e in exps}
     us_scal = (time.perf_counter() - t0) * 1e6
-    t0 = time.perf_counter()
-    batc = {}
-    for n, p in points:
-        camp = run_campaign(exps, n, p, **kw)
-        for e in exps:
-            batc[(e, n, p)] = camp[e]
-    us_batc = (time.perf_counter() - t0) * 1e6
+
+    def run_engine(backend):
+        t0 = time.perf_counter()
+        out = {}
+        for n, p in points:
+            camp = run_campaign(exps, n, p, backend=backend, **kw)
+            for e in exps:
+                out[(e, n, p)] = camp[e]
+        return out, (time.perf_counter() - t0) * 1e6
+
+    batc, us_batc = run_engine("numpy")
+    fusd, us_cold = run_engine("fused")    # includes jit traces
+    _, us_fusd = run_engine("fused")       # warm: traces cached
     for key in scal:
         assert summarize_experiment(scal[key]) == summarize_experiment(batc[key]), key
+        assert summarize_experiment(scal[key]) == summarize_experiment(fusd[key]), key
     tag = "E1-E4_" + "_".join(f"n{n}p{p}" for n, p in points)
     return [
         (f"campaign_scalar_{tag}", us_scal, "per-instance reference path"),
         (f"campaign_batched_{tag}", us_batc,
          f"speedup={us_scal / us_batc:.1f}x vs scalar, identical outputs"),
+        (f"campaign_fused_{tag}", us_fusd,
+         f"warm; speedup={us_scal / us_fusd:.1f}x vs scalar, "
+         f"cold_with_traces_us={us_cold:.0f}, identical outputs"),
+    ]
+
+
+def fused_large_grid(quick: bool = False) -> list:
+    """The n in {80, 160}, p = 1000 follow-up families under the fused
+    engine (the campaign shape the batched engine was host-bound on),
+    asserting byte-identical outputs vs the numpy lockstep path."""
+    if quick:
+        points, n_pairs = ((80, 1000),), 2
+    else:
+        points, n_pairs = ((80, 1000), (160, 1000)), 4
+    exps = ("E1", "E2", "E3", "E4")
+    kw = dict(n_pairs=n_pairs, n_bounds=8, h4_iters=6, include_h4=True)
+    rows = []
+    for n, p in points:
+        t0 = time.perf_counter()
+        ref = run_campaign(exps, n, p, backend="numpy", **kw)
+        us_np = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        run_campaign(exps, n, p, backend="fused", **kw)   # cold: jit traces
+        us_cold = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        fus = run_campaign(exps, n, p, backend="fused", **kw)
+        us_warm = (time.perf_counter() - t0) * 1e6
+        for e in exps:
+            assert summarize_experiment(ref[e]) == summarize_experiment(fus[e]), (e, n)
+        rows.append((f"campaign_fused_largegrid_E1-E4_n{n}p{p}", us_warm,
+                     f"warm; numpy_batched_us={us_np:.0f}, "
+                     f"cold_with_traces_us={us_cold:.0f}, identical outputs"))
+    return rows
+
+
+def deal_speedup(quick: bool = False) -> list:
+    """Satellite before/after: the deal extension's candidate enumeration as
+    per-mapping ``_deal_metrics`` Python loops vs the stacked-numpy
+    ``_DealState.candidate_metrics`` batch, on identical enumerations."""
+    from repro.core import Mapping
+    from repro.core.deal import _DealState, _deal_metrics
+
+    rng = np.random.default_rng(7)
+    n, p = 24, 64
+    wl = make_workload(rng.integers(1, 21, n).astype(float),
+                       rng.integers(1, 51, n + 1).astype(float))
+    pf = make_platform(rng.integers(1, 21, p).astype(float), 10.0)
+    m = 8
+    cuts = sorted(rng.choice(np.arange(2, n), size=m - 1, replace=False))
+    iv, prev = [], 1
+    for c in list(cuts) + [n]:
+        iv.append((prev, int(c)))
+        prev = int(c) + 1
+    mapping = Mapping(tuple(iv), tuple(range(m)))
+    free = list(range(m, p))
+    st = _DealState(wl, pf, mapping)
+    j = 0
+    reps = 20 if quick else 200
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        loop = np.array([
+            _deal_metrics(wl, pf, mapping,
+                          [[u] if t != j else [u, cand]
+                           for t, u in enumerate(mapping.alloc)])
+            for cand in free])
+    us_loop = (time.perf_counter() - t0) / reps * 1e6
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        batch = st.candidate_metrics(j, pf.s[np.asarray(free)])
+    us_batch = (time.perf_counter() - t0) / reps * 1e6
+    assert np.array_equal(loop, batch)
+    k = len(free)
+    return [
+        (f"deal_enum_loop_{k}_candidates", us_loop,
+         "per-candidate _deal_metrics Python loops"),
+        (f"deal_enum_batched_{k}_candidates", us_batch,
+         f"speedup={us_loop / us_batch:.1f}x, identical metrics"),
     ]
 
 
@@ -152,6 +239,8 @@ def run(quick: bool = False) -> list:
     rows = timing(reps=2 if quick else 10)
     rows += vectorized_eval(reps=2 if quick else 5)
     rows += campaign_speedup(quick=quick)
+    rows += fused_large_grid(quick=quick)
+    rows += deal_speedup(quick=quick)
     gaps = optimality_gaps(n_inst=4 if quick else 20)
     for c, g in gaps.items():
         # quality-only rows: no us_per_call, the gap lives in `derived`

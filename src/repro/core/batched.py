@@ -25,10 +25,13 @@ Public surface:
   - :func:`batched_sp_bi_p` — H4 whose binary search probes all B problems
     per bisection step
 
-Backends: ``backend="numpy"`` (default, bit-exact) or ``backend="jax"``
-(scoring kernels under ``jax.jit`` with x64 enabled; same splits on all
-tested instances, floats agree to ulp-level but are not contractually
-bit-exact).
+Backends: ``backend="numpy"`` (default, bit-exact), ``backend="jax"``
+(scoring kernels under ``jax.jit`` with x64 enabled), or ``backend="fused"``
+(the ENTIRE lockstep loop as one jitted ``lax.while_loop`` —
+:mod:`repro.core.fused` — with O(1) host dispatches per heuristic arity).
+Both jit backends carry the kernels' runtime-zero FMA guard, so their split
+trajectories AND floats match the numpy reference exactly on all tested
+instances; numpy remains the contractual bit-exact reference.
 """
 
 from __future__ import annotations
@@ -167,10 +170,16 @@ class _Backend:
             jax.config.update("jax_enable_x64", True)
             import jax.numpy as jnp
 
-            self.score2 = jax.jit(functools.partial(score_2way_kernel, xp=jnp))
-            self.score3 = jax.jit(functools.partial(score_3way_kernel, xp=jnp))
+            # zero is passed as a *runtime* scalar so the kernels' FMA guard
+            # survives XLA constant folding (see score_2way_kernel docstring)
+            j2 = jax.jit(functools.partial(score_2way_kernel, xp=jnp))
+            j3 = jax.jit(functools.partial(score_3way_kernel, xp=jnp))
+            zero = np.float64(0.0)
+            self.score2 = lambda *a: j2(*a, zero=zero)
+            self.score3 = lambda *a: j3(*a, zero=zero)
         else:
-            raise ValueError(f"unknown backend {name!r}; use 'numpy' or 'jax'")
+            raise ValueError(f"unknown backend {name!r}; use 'numpy', 'jax', "
+                             "or 'fused'")
 
 
 _BACKENDS: dict = {}
@@ -556,7 +565,19 @@ def _run_loop(state: _BatchState, k: int, bi_mode: np.ndarray, stop: np.ndarray,
     heuristics sharing a split arity run together in one pass.
     ``record(rows, periods, latencies)`` is invoked after each lockstep apply
     with the rows that accepted a split.
+
+    ``backend="fused"`` hands the whole loop to the device-resident traced
+    engine (:mod:`repro.core.fused`): one jitted ``lax.while_loop`` executes
+    every iteration on-device and this function returns after a single
+    dispatch per row-chunk, instead of O(iterations) host round-trips.
     """
+    if backend == "fused":
+        from . import fused
+
+        fused.run_fused(state, k, np.asarray(bi_mode, dtype=bool),
+                        np.asarray(stop, dtype=float),
+                        np.asarray(lat_limit, dtype=float), record)
+        return
     pb = state.pb
     be = _get_backend(backend)
     rows = np.nonzero(state.active)[0]

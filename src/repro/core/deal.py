@@ -52,6 +52,12 @@ class DealPlan:
 
 def _deal_metrics(workload: Workload, platform: Platform, mapping: Mapping,
                   groups) -> tuple:
+    """Per-candidate Python-loop reference for grouped-mapping metrics.
+
+    Kept as the behavioral reference (and the "before" side of the
+    deal-extension benchmark): the vectorized greedy below must reproduce it
+    bit-for-bit, which it does because both accumulate group rates in
+    append order and latency terms in chain order."""
     w, delta, b, s = workload.w, workload.delta, platform.b, platform.s
     per = 0.0
     lat = 0.0
@@ -65,13 +71,73 @@ def _deal_metrics(workload: Workload, platform: Platform, mapping: Mapping,
     return float(per), float(lat)
 
 
+class _DealState:
+    """Stacked per-interval state for the greedy deal loop (cf.
+    ``metrics.evaluate_batch``): interval constants are computed ONCE as
+    arrays, groups are summarized by their aggregate ``rate`` and slowest
+    member ``smin``, and every candidate evaluation is elementwise numpy
+    instead of a per-mapping Python loop over intervals."""
+
+    def __init__(self, workload: Workload, platform: Platform, mapping: Mapping):
+        w, delta, b = workload.w, workload.delta, platform.b
+        iv = np.asarray(mapping.intervals, dtype=np.int64)
+        D, E = iv[:, 0], iv[:, 1]
+        # same reduction as the reference's w[d-1:e].sum(), cached per interval
+        self.wsum = np.array([w[d - 1:e].sum() for d, e in iv])
+        self.din = delta[D - 1] / b
+        self.dout = delta[E] / b
+        self.tail = delta[workload.n] / b
+        alloc = np.asarray(mapping.alloc, dtype=np.int64)
+        self.rate = platform.s[alloc].astype(float)   # append-order running sums
+        self.smin = platform.s[alloc].astype(float)
+
+    def metrics(self, rate: np.ndarray, smin: np.ndarray) -> tuple:
+        """(period, latency) of one group summary — elementwise arrays, with
+        the reference's chain-order latency accumulation."""
+        cyc = self.din + self.wsum / rate + self.dout
+        lat_terms = self.din + self.wsum / smin
+        lat = 0.0
+        for t in lat_terms:            # reference order: interval chain, then tail
+            lat += float(t)
+        return float(max(cyc.max(), 0.0)), float(lat + self.tail)
+
+    def candidate_metrics(self, j: int, cand_speeds: np.ndarray) -> np.ndarray:
+        """Stacked enumeration: (period, latency) for EVERY candidate
+        processor joining bottleneck group ``j``, in one (F, m) numpy
+        evaluation — the deal analogue of ``evaluate_batch`` replacing the
+        per-candidate ``_deal_metrics`` Python loops.  Returns (F, 2)."""
+        F = cand_speeds.size
+        rate = np.broadcast_to(self.rate, (F, self.rate.size)).copy()
+        smin = np.broadcast_to(self.smin, (F, self.smin.size)).copy()
+        rate[:, j] = self.rate[j] + cand_speeds
+        smin[:, j] = np.minimum(self.smin[j], cand_speeds)
+        cyc = self.din[None] + self.wsum[None] / rate + self.dout[None]
+        lat_terms = self.din[None] + self.wsum[None] / smin
+        out = np.empty((F, 2))
+        out[:, 0] = np.maximum(cyc.max(axis=1), 0.0)
+        for f in range(F):             # chain-order accumulation per candidate
+            lat = 0.0
+            for t in lat_terms[f]:
+                lat += float(t)
+            out[f, 1] = lat + self.tail
+        return out
+
+    def accept(self, j: int, speed: float) -> None:
+        self.rate[j] += speed
+        self.smin[j] = min(self.smin[j], speed)
+
+
 def plan_with_deal(workload: Workload, platform: Platform,
                    objective: Optional[Objective] = None,
                    mode: str = "auto") -> DealPlan:
     """Base interval plan + greedy deal-replication of the bottleneck stage.
 
     Back-compat facade: the base plan goes through the PlanRequest portfolio
-    (explicit heuristic/exact modes fall back to the ``plan()`` facade)."""
+    (explicit heuristic/exact modes fall back to the ``plan()`` facade).
+    Candidate evaluation runs through the stacked-numpy :class:`_DealState`
+    (one array expression per greedy step over all free candidates) instead
+    of per-mapping Python loops; results are bit-identical to the
+    ``_deal_metrics`` reference (asserted by tests/test_deal.py)."""
     objective = objective or Objective("period")
     if mode == "auto":
         from .planner import InfeasiblePlan
@@ -88,28 +154,26 @@ def plan_with_deal(workload: Workload, platform: Platform,
     free = [int(u) for u in platform.sorted_indices() if int(u) not in used]
     groups = [[u] for u in base.mapping.alloc]
 
-    per, lat = _deal_metrics(workload, platform, base.mapping, groups)
+    st = _DealState(workload, platform, base.mapping)
+    per, lat = st.metrics(st.rate, st.smin)
     while free:
-        # find the bottleneck interval
-        cycles = []
-        for (d, e), grp in zip(base.mapping.intervals, groups):
-            wsum = workload.w[d - 1: e].sum()
-            rate = sum(platform.s[u] for u in grp)
-            cycles.append(workload.delta[d - 1] / platform.b + wsum / rate
-                          + workload.delta[e] / platform.b)
-        j = int(np.argmax(cycles))
-        cand = free[0]
-        trial = [list(g) for g in groups]
-        trial[j].append(cand)
-        new_per, new_lat = _deal_metrics(workload, platform, base.mapping, trial)
+        # bottleneck interval under the current group rates
+        cyc = st.din + st.wsum / st.rate + st.dout
+        j = int(np.argmax(cyc))
+        # the greedy only ever enrolls the fastest free processor, so only
+        # that one candidate is evaluated (stacked-numpy interval math); the
+        # full-enumeration batch lives in candidate_metrics for sweep callers
+        cands = st.candidate_metrics(j, platform.s[free[:1]])
+        new_per, new_lat = float(cands[0, 0]), float(cands[0, 1])
         if new_per >= per - 1e-12:
             break                      # bottleneck is communication-bound
         if objective.minimize == "period" and objective.bound is not None \
                 and new_lat > objective.bound + 1e-12:
             break
-        groups = trial
+        cand = free.pop(0)
+        groups[j].append(cand)
+        st.accept(j, float(platform.s[cand]))
         per, lat = new_per, new_lat
-        free.pop(0)
     return DealPlan(base=base, groups=tuple(tuple(g) for g in groups),
                     period=per, latency=lat)
 

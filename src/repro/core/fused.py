@@ -1,0 +1,464 @@
+"""Fused device-resident campaign engine: the whole lockstep loop under jit.
+
+The batched engine (:mod:`repro.core.batched`) runs B problems in lockstep,
+but only the inner scoring kernels run under ``jax.jit`` — every iteration
+still round-trips through Python for worst-interval selection, candidate-grid
+construction, and state updates, so a campaign issues O(iterations) host
+dispatches and cannot live on an accelerator.  This module traces the ENTIRE
+splitting loop — stop checks, worst-interval argmax, span-padded masked
+candidate scoring through the shared ``score_2way_kernel``/``score_3way_kernel``,
+exact lexicographic tie-breaks, and structure-of-arrays state updates — into
+one ``jax.jit``-compiled ``lax.while_loop``, so a whole campaign run is O(1)
+host dispatches per (shape, heuristic-arity) pair.
+
+Design differences from the numpy lockstep loop (same *choices*, fixed shape):
+
+  - Candidate grids are STATIC: 2-way splits score all cuts ``1..n-1`` and
+    3-way splits all pairs ``c1 < c2`` in ``1..n-1`` every iteration, with
+    validity masks selecting the worst interval's span — no data-dependent
+    span compaction (which would retrace).  Masked lanes use clamped gathers
+    and are excluded by the same feasibility masks the numpy path uses.
+  - The 2-stage 3-way fallback (scalar generator in the numpy engine) is six
+    extra static lanes with the scalar path's enumeration-order tie-break.
+  - Convergence is a per-row mask; the loop exits when every row is done,
+    recording per-iteration (period, latency, accepted) into fixed (T, S)
+    buffers (T = max possible splits) for trajectory assembly on the host.
+  - Batches are padded to a fixed chunk size S per (n, arity), so EVERY call
+    of a campaign — trajectories, H4 bisection probes on shrinking subsets,
+    H5/H6 bound-grid runs — reuses one trace per arity.  The module counts
+    traces (:func:`trace_count`) so tests can assert the O(1) contract.
+
+Equivalence contract: split trajectories — the accepted splits AND their
+(period, latency) floats — are identical to the numpy engine on all tested
+instances (asserted by tests/test_batched.py).  This requires defeating two
+XLA rewrites that would drift by an ulp and flip exact ties: FMA contraction
+of ``a * b + c`` chains (neutralized by the kernels' runtime-``zero`` guard:
+``fma(a, b, 0) == round(a * b)``) and reduction reordering (the kernels sum
+the 3-part axis with explicit left-associated adds; max/min reductions are
+order-exact).  The numpy engine remains the contractual bit-exact reference;
+the fused engine is validated against it per test grid.
+
+Use via ``backend="fused"`` on any :mod:`repro.core.batched` entry point (the
+lockstep runner dispatches here), or ``engine="fused"`` in
+``repro.sim.experiments`` / ``benchmarks/paper_sim.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import numpy as np
+
+from .heuristics import _EPS, score_2way_kernel, score_3way_kernel
+
+__all__ = ["fused_available", "run_fused", "trace_count", "reset_trace_count"]
+
+# number of traced (compiled) variants of the fused loop since the last reset;
+# incremented from inside the traced function, which Python-executes only
+# while jax is tracing — so this counts actual traces, not dispatches.
+_TRACES = [0]
+
+# lane budget per jitted call: rows_per_chunk * candidate_lanes is held under
+# this so the 3-way pair grid of large n stays cache-/memory-sized.
+_LANE_BUDGET = 4_000_000
+_MAX_CHUNK = 128
+
+_PERMS3 = np.array([(0, 1, 2), (0, 2, 1), (1, 0, 2), (1, 2, 0), (2, 0, 1),
+                    (2, 1, 0)])
+# the scalar 2-stage fallback's candidate order: permutations((j,jp,jpp), 2)
+_FB_A = np.array([0, 0, 1, 1, 2, 2])
+_FB_B = np.array([1, 2, 0, 2, 0, 1])
+
+
+def fused_available() -> bool:
+    try:
+        import jax  # noqa: F401
+    except Exception:  # pragma: no cover - jax is baked into the image
+        return False
+    return True
+
+
+def trace_count() -> int:
+    """Traces of the fused loop since the last :func:`reset_trace_count`."""
+    return _TRACES[0]
+
+
+def reset_trace_count() -> None:
+    _TRACES[0] = 0
+
+
+def chunk_rows(n: int, k: int) -> int:
+    """Fixed rows-per-call for shape (n, arity k) — deterministic so every
+    call of a campaign pads to the same chunk shape and shares one trace."""
+    if k == 1:
+        lanes = max(2 * (n - 1), 1)
+    else:
+        lanes = 18 * ((n - 1) * (n - 2) // 2) + 6
+    return int(max(1, min(_MAX_CHUNK, _LANE_BUDGET // max(lanes, 1))))
+
+
+def _lex_argmin_traced(xp, keys, mask):
+    """Traced mirror of ``batched._lex_argmin``: per-row first index of the
+    lexicographically smallest key tuple among masked lanes (no early exit —
+    extra key passes only re-filter ties, so the winner is identical)."""
+    has = mask.any(axis=1)
+    m = mask
+    for key in keys:
+        kmin = xp.where(m, key, xp.inf).min(axis=1)
+        m = m & (key == kmin[:, None])
+    return xp.argmax(m, axis=1), has
+
+
+@functools.lru_cache(maxsize=None)
+def _get_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
+    """Build (and cache) the jitted fused loop for static shape (n, p, k).
+
+    Returned callable:
+        fn(w, delta, s, b, prefix, order, bi_mode, stop, lat_limit, active0)
+        -> (arr, m, next_idx, lat_sum, splits, per_rec, lat_rec, acc_rec, t)
+    with arr (S, n, 5) in the ``_BatchState`` field layout and the records
+    (T, S) per lockstep iteration.
+    """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from jax import lax
+
+    rows = jnp.arange(S)
+    col = jnp.arange(n)[None, :]
+    # static 2-way cut grid (absolute cuts 1..n-1, both placement orders)
+    C2 = np.arange(1, n)
+    cutorder = np.concatenate([C2 * 2.0, C2 * 2.0 + 1.0])[None, :]
+    # static 3-way pair grid (absolute cuts, c1 < c2 in 1..n-1) + its exact
+    # integer tie-break key (c1, c2, perm), matching batched._choose_3way
+    if n >= 3:
+        o1, o2 = np.triu_indices(n - 1, k=1)
+        C31, C32 = o1 + 1, o2 + 1
+        K3 = C31.size
+        ccp = ((C31 * (n + 1) + C32)[None, :] * 6
+               + np.arange(6)[:, None]).astype(float).reshape(1, 6 * K3)
+    else:
+        C31 = C32 = np.zeros(0, dtype=np.int64)
+        K3 = 0
+        ccp = np.zeros((1, 0))
+    fb_key = np.arange(6, dtype=float)[None, :]
+
+    def take1(A, idx):
+        return jnp.take_along_axis(A, idx[:, None], axis=1)[:, 0]
+
+    def choose_2way(prefix, delta, s, b, zero, d, e, j, jp_, bi, old_cycle,
+                    cur_lat, lat_lim, live):
+        valid = (C2[None, :] >= d[:, None]) & (C2[None, :] < e[:, None])
+        pre_d1 = take1(prefix, d - 1)
+        pre_e = take1(prefix, e)
+        del_d1 = take1(delta, d - 1)
+        del_e = take1(delta, e)
+        inv_j = 1.0 / take1(s, j)
+        inv_p = 1.0 / take1(s, jp_)
+        cyc1, cyc2, dlat = score_2way_kernel(
+            pre_d1[:, None], prefix[:, 1:n], pre_e[:, None],
+            del_d1[:, None], delta[:, 1:n], del_e[:, None], b,
+            inv_j[:, None], inv_p[:, None], xp=jnp, zero=zero)
+        mx = jnp.maximum(cyc1, cyc2)
+        okay = (mx < old_cycle[:, None] - _EPS)
+        okay &= cur_lat[:, None] + dlat <= lat_lim[:, None] + _EPS
+        okay &= jnp.concatenate([valid, valid], axis=1)
+        okay &= live[:, None]
+        ratio = jnp.maximum(
+            dlat / jnp.maximum(old_cycle[:, None] - cyc1, _EPS),
+            dlat / jnp.maximum(old_cycle[:, None] - cyc2, _EPS))
+        bc = bi[:, None]
+        keys = [jnp.where(bc, ratio, mx), jnp.where(bc, mx, dlat),
+                jnp.broadcast_to(cutorder, mx.shape)]
+        q, has = _lex_argmin_traced(jnp, keys, okay)
+        c = jnp.take(jnp.asarray(C2), q % (n - 1), mode="clip")
+        swapped = q >= (n - 1)
+        pa = jnp.where(swapped, jp_, j)
+        pb2 = jnp.where(swapped, j, jp_)
+        pd = jnp.stack([d, c + 1, c + 1], axis=1)
+        pe = jnp.stack([c, e, e], axis=1)
+        pu = jnp.stack([pa, pb2, pb2], axis=1)
+        nparts = jnp.full((S,), 2, dtype=jnp.int64)
+        consumed = jnp.ones((S,), dtype=jnp.int64)
+        return has, pd, pe, pu, nparts, consumed
+
+    def choose_3way(prefix, delta, s, b, zero, d, e, j, jp_, jpp, bi,
+                    old_cycle, cur_lat, lat_lim, live):
+        pre_d1 = take1(prefix, d - 1)
+        pre_e = take1(prefix, e)
+        del_d1 = take1(delta, d - 1)
+        del_e = take1(delta, e)
+        sj = take1(s, j)
+        s3 = jnp.stack([sj, take1(s, jp_), take1(s, jpp)], axis=1)   # (S, 3)
+        base_term = del_d1 / b + (pre_e - pre_d1) / sj
+        procs3 = jnp.stack([j, jp_, jpp], axis=1)                    # (S, 3)
+        span2 = (e - d + 1) == 2
+
+        # --- >=3-stage lanes: all (c1, c2) pairs x 6 permutations ----------
+        if K3:
+            valid = ((C31[None, :] >= d[:, None])
+                     & (C32[None, :] <= (e - 1)[:, None]))
+            pre_c1 = prefix[:, C31]
+            pre_c2 = prefix[:, C32]
+            del_c1 = delta[:, C31]
+            del_c2 = delta[:, C32]
+            W = jnp.stack([pre_c1 - pre_d1[:, None], pre_c2 - pre_c1,
+                           pre_e[:, None] - pre_c2], axis=1)         # (S, 3, K)
+            dI = jnp.stack([jnp.broadcast_to(del_d1[:, None], (S, K3)),
+                            del_c1, del_c2], axis=1) / b
+            dO = jnp.stack([del_c1, del_c2,
+                            jnp.broadcast_to(del_e[:, None], (S, K3))],
+                           axis=1) / b
+            invp = (1.0 / s3)[:, _PERMS3][:, :, :, None]             # (S,6,3,1)
+            cyc, dlat, mx = score_3way_kernel(
+                dI[:, None], W[:, None], dO[:, None], invp,
+                base_term[:, None, None], xp=jnp, zero=zero)
+            ratio = (dlat[:, :, None, :]
+                     / jnp.maximum(old_cycle[:, None, None, None] - cyc,
+                                   _EPS)).max(axis=2)
+            mx_f = mx.reshape(S, 6 * K3)
+            dlat_f = dlat.reshape(S, 6 * K3)
+            ratio_f = ratio.reshape(S, 6 * K3)
+            okay3 = mx_f < old_cycle[:, None] - _EPS
+            okay3 &= cur_lat[:, None] + dlat_f <= lat_lim[:, None] + _EPS
+            okay3 &= jnp.broadcast_to(valid[:, None, :],
+                                      (S, 6, K3)).reshape(S, 6 * K3)
+            okay3 &= (live & ~span2)[:, None]
+
+        # --- 2-stage fallback lanes: permutations((j,jp,jpp), 2) at cut d ---
+        # (division-based like the scalar generator the numpy engine calls)
+        pre_dd = take1(prefix, jnp.minimum(d, n))
+        del_dd = take1(delta, jnp.minimum(d, n))
+        W1 = (pre_dd - pre_d1)[:, None]
+        W2 = (pre_e - pre_dd)[:, None]
+        spa = s3[:, _FB_A]
+        spb = s3[:, _FB_B]
+        t1 = del_d1[:, None] / b + W1 / spa
+        cyc1_fb = t1 + del_dd[:, None] / b
+        t2 = del_dd[:, None] / b + W2 / spb
+        cyc2_fb = t2 + del_e[:, None] / b
+        dlat_fb = (t1 + t2) - base_term[:, None]
+        mx_fb = jnp.maximum(cyc1_fb, cyc2_fb)
+        okay_fb = mx_fb < old_cycle[:, None] - _EPS
+        okay_fb &= cur_lat[:, None] + dlat_fb <= lat_lim[:, None] + _EPS
+        okay_fb &= (live & span2)[:, None]
+        ratio_fb = jnp.maximum(
+            dlat_fb / jnp.maximum(old_cycle[:, None] - cyc1_fb, _EPS),
+            dlat_fb / jnp.maximum(old_cycle[:, None] - cyc2_fb, _EPS))
+
+        # one lex-argmin over the concatenated lanes; per row only one lane
+        # family is unmasked, so the key families never compete
+        bc = bi[:, None]
+        if K3:
+            key1 = jnp.concatenate(
+                [jnp.where(bc, ratio_f, mx_f), jnp.where(bc, ratio_fb, mx_fb)],
+                axis=1)
+            key2 = jnp.concatenate(
+                [jnp.where(bc, mx_f, dlat_f), jnp.where(bc, mx_fb, dlat_fb)],
+                axis=1)
+            key3 = jnp.concatenate(
+                [jnp.broadcast_to(ccp, (S, 6 * K3)),
+                 jnp.broadcast_to(fb_key, (S, 6))], axis=1)
+            okay = jnp.concatenate([okay3, okay_fb], axis=1)
+        else:
+            key1 = jnp.where(bc, ratio_fb, mx_fb)
+            key2 = jnp.where(bc, mx_fb, dlat_fb)
+            key3 = jnp.broadcast_to(fb_key, (S, 6))
+            okay = okay_fb
+        q, has = _lex_argmin_traced(jnp, [key1, key2, key3], okay)
+
+        fb = q >= 6 * K3
+        # grid winner
+        pi = jnp.minimum(q // max(K3, 1), 5)
+        kk = q % max(K3, 1)
+        c1b = jnp.take(jnp.asarray(C31), kk, mode="clip") if K3 else d
+        c2b = jnp.take(jnp.asarray(C32), kk, mode="clip") if K3 else d
+        perm = jnp.asarray(_PERMS3)[pi]                              # (S, 3)
+        u_grid = jnp.take_along_axis(procs3, perm, axis=1)
+        pd_g = jnp.stack([d, c1b + 1, c2b + 1], axis=1)
+        pe_g = jnp.stack([c1b, c2b, e], axis=1)
+        # fallback winner
+        qf = jnp.where(fb, q - 6 * K3, 0)
+        ia = jnp.asarray(_FB_A)[qf]
+        ib = jnp.asarray(_FB_B)[qf]
+        pu0 = jnp.take_along_axis(procs3, ia[:, None], axis=1)[:, 0]
+        pu1 = jnp.take_along_axis(procs3, ib[:, None], axis=1)[:, 0]
+        pd_f = jnp.stack([d, d + 1, d + 1], axis=1)
+        pe_f = jnp.stack([d, e, e], axis=1)
+        pu_f = jnp.stack([pu0, pu1, pu1], axis=1)
+        cons_f = jnp.where((ia != 0) & (ib != 0), 2, 1).astype(jnp.int64)
+
+        fbc = fb[:, None]
+        pd = jnp.where(fbc, pd_f, pd_g)
+        pe = jnp.where(fbc, pe_f, pe_g)
+        pu = jnp.where(fbc, pu_f, u_grid)
+        nparts = jnp.where(fb, 2, 3).astype(jnp.int64)
+        consumed = jnp.where(fb, cons_f, 2).astype(jnp.int64)
+        return has, pd, pe, pu, nparts, consumed
+
+    def fn(w, delta, s, b, zero, prefix, order, bi_mode, stop, lat_limit,
+           active0):
+        _TRACES[0] += 1  # Python-executes only while tracing
+        del w  # stage works enter via their prefix sums
+        fastest = order[:, 0]
+        term0 = delta[:, 0] / b + (prefix[:, n] - prefix[:, 0]) / take1(s, fastest)
+        tail = delta[:, n] / b
+        arr = jnp.full((S, n, 5), 0.0).at[:, :, 3].set(-jnp.inf)
+        arr = arr.at[:, 0, 0].set(1.0)
+        arr = arr.at[:, 0, 1].set(float(n))
+        arr = arr.at[:, 0, 2].set(fastest.astype(jnp.float64))
+        arr = arr.at[:, 0, 3].set(term0 + tail)
+        arr = arr.at[:, 0, 4].set(term0)
+        m0 = jnp.ones(S, dtype=jnp.int64)
+        nx0 = jnp.ones(S, dtype=jnp.int64)
+        sp0 = jnp.zeros(S, dtype=jnp.int64)
+        per_rec = jnp.zeros((T, S))
+        lat_rec = jnp.zeros((T, S))
+        acc_rec = jnp.zeros((T, S), dtype=bool)
+
+        def cond(carry):
+            t, active = carry[0], carry[5]
+            return (t < T) & active.any()
+
+        def body(carry):
+            (t, arr, m, next_idx, lat_sum, active,
+             per_rec, lat_rec, acc_rec) = carry[:9]
+            splits = carry[9]
+            cyc = arr[:, :, 3]
+            per = cyc.max(axis=1)
+            live = active & (per > stop + _EPS)
+            widx = jnp.argmax(cyc, axis=1)
+            item = jnp.take_along_axis(arr, widx[:, None, None], axis=1)[:, 0, :]
+            d = jnp.clip(item[:, 0].astype(jnp.int64), 1, n)
+            e = jnp.clip(item[:, 1].astype(jnp.int64), 1, n)
+            j = jnp.clip(item[:, 2].astype(jnp.int64), 0, p - 1)
+            live &= (item[:, 1] > item[:, 0]) & (next_idx + k <= p)
+            old_cycle = item[:, 3]
+            old_term = item[:, 4]
+            cur_lat = lat_sum + tail
+            jp_ = take1(order, jnp.clip(next_idx, 0, p - 1))
+            if k == 1:
+                has, pd, pe, pu, nparts, consumed = choose_2way(
+                    prefix, delta, s, b, zero, d, e, j, jp_, bi_mode,
+                    old_cycle, cur_lat, lat_limit, live)
+            else:
+                jpp = take1(order, jnp.clip(next_idx + 1, 0, p - 1))
+                has, pd, pe, pu, nparts, consumed = choose_3way(
+                    prefix, delta, s, b, zero, d, e, j, jp_, jpp, bi_mode,
+                    old_cycle, cur_lat, lat_limit, live)
+            accept = live & has
+
+            # apply splits (same division-based expressions as _apply_splits)
+            pdc = jnp.clip(pd, 1, n)
+            pec = jnp.clip(pe, 1, n)
+            puc = jnp.clip(pu, 0, p - 1)
+            del_pd1 = jnp.take_along_axis(delta, pdc - 1, axis=1)
+            pre_pe = jnp.take_along_axis(prefix, pec, axis=1)
+            pre_pd1 = jnp.take_along_axis(prefix, pdc - 1, axis=1)
+            s_pu = jnp.take_along_axis(s, puc, axis=1)
+            del_pe = jnp.take_along_axis(delta, pec, axis=1)
+            t_parts = del_pd1 / b + (pre_pe - pre_pd1) / s_pu
+            c_parts = t_parts + del_pe / b
+            add = t_parts[:, 0] + t_parts[:, 1]
+            add = jnp.where(nparts == 3, add + t_parts[:, 2], add)
+            new_lat = (lat_sum - old_term) + add
+            sh = (nparts - 1)[:, None]
+            idxc = widx[:, None]
+            src = jnp.where(col <= idxc, col,
+                            jnp.where(col <= idxc + sh, idxc, col - sh))
+            new_arr = jnp.take_along_axis(arr, src[:, :, None], axis=1)
+            parts5 = jnp.stack([pdc.astype(jnp.float64),
+                                pec.astype(jnp.float64),
+                                puc.astype(jnp.float64), c_parts, t_parts],
+                               axis=2)                               # (S, 3, 5)
+            m0_ = (col == idxc)[:, :, None]
+            m1_ = (col == idxc + 1)[:, :, None]
+            m2_ = ((col == idxc + 2) & (nparts == 3)[:, None])[:, :, None]
+            new_arr = jnp.where(m0_, parts5[:, 0][:, None, :], new_arr)
+            new_arr = jnp.where(m1_, parts5[:, 1][:, None, :], new_arr)
+            new_arr = jnp.where(m2_, parts5[:, 2][:, None, :], new_arr)
+
+            acc3 = accept[:, None, None]
+            arr = jnp.where(acc3, new_arr, arr)
+            m = m + jnp.where(accept, nparts - 1, 0)
+            next_idx = next_idx + jnp.where(accept, consumed, 0)
+            lat_sum = jnp.where(accept, new_lat, lat_sum)
+            splits = splits + accept.astype(jnp.int64)
+
+            per_rec = per_rec.at[t].set(arr[:, :, 3].max(axis=1))
+            lat_rec = lat_rec.at[t].set(lat_sum + tail)
+            acc_rec = acc_rec.at[t].set(accept)
+            return (t + 1, arr, m, next_idx, lat_sum, accept,
+                    per_rec, lat_rec, acc_rec, splits)
+
+        init = (jnp.int64(0), arr, m0, nx0, term0, active0,
+                per_rec, lat_rec, acc_rec, sp0)
+        (t, arr, m, next_idx, lat_sum, active,
+         per_rec, lat_rec, acc_rec, splits) = lax.while_loop(cond, body, init)
+        return arr, m, next_idx, lat_sum, splits, per_rec, lat_rec, acc_rec, t
+
+    return jax.jit(fn)
+
+
+def run_fused(state, k: int, bi_mode: np.ndarray, stop: np.ndarray,
+              lat_limit: np.ndarray, record: Optional[Callable] = None) -> None:
+    """Run the fused loop over ``state`` (a ``batched._BatchState``), writing
+    final arrays back and replaying per-iteration ``record`` callbacks — a
+    drop-in replacement for the numpy ``_run_loop`` body with O(1) dispatches.
+    """
+    pb = state.pb
+    B, n, p = pb.B, pb.n, pb.p
+    T = min(n - 1, p - 1)
+    if T <= 0 or not state.active.any():
+        state.active[:] = False
+        return
+    S = chunk_rows(n, k)
+    fn = _get_loop(n, p, k, T, S)
+    b = np.float64(pb.b)
+    bi_mode = np.asarray(bi_mode, dtype=bool)
+    stop = np.asarray(stop, dtype=np.float64)
+    lat_limit = np.asarray(lat_limit, dtype=np.float64)
+    chunks = []  # (rows, per_rec, lat_rec, acc_rec, t_used)
+    for lo in range(0, B, S):
+        rows = np.arange(lo, min(lo + S, B))
+        pad = S - rows.size
+        sel = np.concatenate([rows, np.zeros(pad, dtype=np.int64)]) if pad else rows
+        act = np.zeros(S, dtype=bool)
+        act[:rows.size] = state.active[rows]
+        out = fn(pb.w[sel], pb.delta[sel], pb.s[sel], b, np.float64(0.0),
+                 pb.prefix[sel], pb.order[sel].astype(np.int64), bi_mode[sel],
+                 stop[sel], lat_limit[sel], act)
+        (arr, m, next_idx, lat_sum, splits,
+         per_rec, lat_rec, acc_rec, t_used) = (np.asarray(o) for o in out)
+        r = rows.size
+        state.arr[rows] = arr[:r]
+        state.m[rows] = m[:r]
+        state.next_idx[rows] = next_idx[:r]
+        state.lat_sum[rows] = lat_sum[:r]
+        state.splits[rows] = splits[:r]
+        state.active[rows] = False
+        if record is not None:
+            chunks.append((rows, per_rec[:, :r], lat_rec[:, :r],
+                           acc_rec[:, :r], int(t_used)))
+    if record is None:
+        return
+    # Replay records in global lockstep order: a row's s-th accepted split
+    # always lands at iteration s regardless of which rows share its chunk,
+    # so merging chunk records per iteration reproduces the numpy engine's
+    # record sequence exactly.
+    t_max = max((t for *_, t in chunks), default=0)
+    for t in range(t_max):
+        rsel, pers, lats = [], [], []
+        for rows, per_rec, lat_rec, acc_rec, t_used in chunks:
+            if t >= t_used:
+                continue
+            a = acc_rec[t]
+            if a.any():
+                rsel.append(rows[a])
+                pers.append(per_rec[t][a])
+                lats.append(lat_rec[t][a])
+        if rsel:
+            record(np.concatenate(rsel), np.concatenate(pers),
+                   np.concatenate(lats))

@@ -223,7 +223,7 @@ def _pick_bi(candidates, old_cycle: float, lat_limit: float, cur_lat: float):
 # ---------------------------------------------------------------------------
 
 def score_2way_kernel(pre_d1, pre_C, pre_e, delta_d1, delta_C, delta_e, b,
-                      inv_j, inv_p, xp=np):
+                      inv_j, inv_p, xp=np, zero=0.0):
     """Cycle times and latency delta of every 2-way split of interval [d, e].
 
     ``pre_C``/``delta_C`` hold the prefix-sum and delta values at the cut
@@ -232,6 +232,14 @@ def score_2way_kernel(pre_d1, pre_C, pre_e, delta_d1, delta_C, delta_e, b,
     orders concatenated along the last axis: first all cuts with the original
     processor ``j`` on the first part, then all cuts with ``j`` and the new
     processor ``jp`` swapped.
+
+    ``zero`` exists for the traced backends: every product feeding an add is
+    written ``(a * b + zero)`` so that when XLA contracts it to an FMA the
+    contraction is ``fma(a, b, 0) == round(a * b)`` — the separately-rounded
+    product numpy computes — instead of a single-rounded ``fma(a, b, c)``
+    that would drift from the numpy reference by an ulp.  Callers under jit
+    pass a *runtime* zero scalar (a traced argument cannot be folded away);
+    for numpy ``x + 0.0`` is exact, so the default changes nothing.
     """
     W1 = pre_C - pre_d1
     W2 = pre_e - pre_C
@@ -239,20 +247,28 @@ def score_2way_kernel(pre_d1, pre_C, pre_e, delta_d1, delta_C, delta_e, b,
     dMid = delta_C / b
     dOut = delta_e / b
     # order A: first part on j, second on jp; order B: swapped.
-    cyc1 = xp.concatenate([dIn + W1 * inv_j + dMid, dIn + W1 * inv_p + dMid], axis=-1)
-    cyc2 = xp.concatenate([dMid + W2 * inv_p + dOut, dMid + W2 * inv_j + dOut], axis=-1)
-    dlat = xp.concatenate([dMid + W2 * (inv_p - inv_j), dMid + W1 * (inv_p - inv_j)], axis=-1)
+    cyc1 = xp.concatenate([dIn + (W1 * inv_j + zero) + dMid,
+                           dIn + (W1 * inv_p + zero) + dMid], axis=-1)
+    cyc2 = xp.concatenate([dMid + (W2 * inv_p + zero) + dOut,
+                           dMid + (W2 * inv_j + zero) + dOut], axis=-1)
+    dlat = xp.concatenate([dMid + (W2 * (inv_p - inv_j) + zero),
+                           dMid + (W1 * (inv_p - inv_j) + zero)], axis=-1)
     return cyc1, cyc2, dlat
 
 
-def score_3way_kernel(dI, W, dO, invp, base_term, xp=np):
+def score_3way_kernel(dI, W, dO, invp, base_term, xp=np, zero=0.0):
     """Cycle times, latency delta, and max cycle of 3-way splits for ONE
     processor permutation.  ``dI``/``W``/``dO``/``invp`` carry the three parts
     on axis -2 and the (c1, c2) cut pairs on axis -1; ``base_term`` is the
-    replaced interval's latency term.  Returns ``(cyc, dlat, mx)``."""
-    comp = dI + W * invp
+    replaced interval's latency term.  Returns ``(cyc, dlat, mx)``.
+
+    ``zero`` is the traced-backend FMA guard (see ``score_2way_kernel``);
+    the part sum is spelled as left-associated adds so traced reductions
+    keep numpy's element order (numpy sums 3 elements as ``(c0 + c1) + c2``).
+    """
+    comp = dI + (W * invp + zero)
     cyc = comp + dO
-    dlat = comp.sum(axis=-2) - base_term
+    dlat = (comp[..., 0, :] + comp[..., 1, :] + comp[..., 2, :]) - base_term
     mx = cyc.max(axis=-2)
     return cyc, dlat, mx
 

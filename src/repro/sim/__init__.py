@@ -1,10 +1,13 @@
 """Paper simulation study (Section 5): random instance generators E1-E4,
-experiment runner, failure thresholds."""
+experiment runner (scalar / batched / fused engines), replication sweeps,
+failure thresholds."""
 
 from .generators import EXPERIMENTS, InstanceBatch, gen_instance, gen_instance_batch
-from .experiments import (run_experiment, failure_thresholds, trajectory,
-                          summarize_experiment)
+from .experiments import (ReplicatedResult, failure_thresholds, run_campaign,
+                          run_experiment, run_replicated, summarize_experiment,
+                          summarize_replicated, trajectory)
 
 __all__ = ["EXPERIMENTS", "InstanceBatch", "gen_instance", "gen_instance_batch",
-           "run_experiment", "failure_thresholds", "trajectory",
-           "summarize_experiment"]
+           "ReplicatedResult", "run_experiment", "run_campaign",
+           "run_replicated", "failure_thresholds", "trajectory",
+           "summarize_experiment", "summarize_replicated"]

@@ -14,16 +14,26 @@ single exhaustion-run *trajectory* per instance (see
 ``repro.core.heuristics.split_trajectory``), which is exact and ~20x faster
 than re-running per bound.
 
-Two engines produce identical outputs (asserted by tests/test_batched.py):
+Three engines produce identical outputs (asserted by tests/test_batched.py):
 
   - ``engine="batched"`` (default): the whole campaign runs through the
     lockstep stacked-instance engine (:mod:`repro.core.batched`) — one
     trajectory pass per heuristic over all instances, H5/H6 over the full
     (instance x bound) grid in one pass, and an H4 binary search probing all
     feasible (instance, bound) problems per bisection step.
+  - ``engine="fused"``: the same campaign structure, but every lockstep loop
+    is a single ``jax.jit``-compiled ``lax.while_loop``
+    (:mod:`repro.core.fused`) — O(1) host dispatches per heuristic arity
+    instead of O(iterations), which is what lets campaigns run
+    device-resident and unlocks the large-grid (n in {80, 160}, p = 1000)
+    and many-seed replication sweeps.
   - ``engine="scalar"``: the per-instance reference path (one Python loop per
     instance/bound), kept as the behavioral reference in the same spirit as
     ``heuristics.reference_mode``.
+
+Replication sweeps (:func:`run_replicated`) rerun a campaign over R disjoint
+seed banks and report mean +/- 95% confidence intervals on the Figures 2-7
+curves and Table 1 thresholds.
 """
 
 from __future__ import annotations
@@ -41,10 +51,24 @@ from ..core.batched import (ProblemBatch, _as_problem_batch,
 from ..core.heuristics import split_trajectory, sp_bi_p
 from ..core.metrics import period as eval_period
 from ..core.metrics import single_processor_mapping
-from .generators import gen_instance, gen_instance_batch
+from .generators import gen_instance_batch
 
 N_STAGES_DEFAULT = (5, 10, 20, 40)
 N_PROCS_DEFAULT = (10, 100)
+# the large-grid follow-up families (ROADMAP / "Bi-criteria Pipeline Mappings
+# for Parallel Image Processing" scenarios), unlocked by the fused engine
+N_STAGES_LARGE = (80, 160)
+N_PROCS_LARGE = (1000,)
+
+ENGINES = ("batched", "fused", "scalar")
+
+
+def _campaign_backend(engine: str, backend: str) -> str:
+    """Map the (engine, backend) pair onto the lockstep runner's backend
+    string: the fused engine ignores the kernels-only backend knob."""
+    if engine == "fused":
+        return "fused"
+    return backend
 
 
 def trajectory(code: str, wl: Workload, pf: Platform) -> list:
@@ -86,17 +110,21 @@ def run_experiment(
     period_fracs = np.geomspace(0.04, 1.0, n_bounds)     # x single-processor period
     latency_mults = np.linspace(1.0, 3.0, n_bounds)      # x optimal latency
 
-    if engine == "batched":
+    if engine in ("batched", "fused"):
         return run_campaign([exp], n, p, n_pairs=n_pairs, n_bounds=n_bounds,
                             seed0=seed0, h4_iters=h4_iters,
-                            include_h4=include_h4, backend=backend)[exp]
+                            include_h4=include_h4,
+                            backend=_campaign_backend(engine, backend))[exp]
     if engine != "scalar":
-        raise ValueError(f"unknown engine {engine!r}; use 'batched' or 'scalar'")
+        raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
     codes_p = ["H1", "H2", "H3"] + (["H4"] if include_h4 else [])
     codes_l = ["H5", "H6"]
     acc = {c: [[] for _ in range(n_bounds)] for c in codes_p + codes_l}
     thresholds = {c: [] for c in codes_p + codes_l}
-    _run_scalar(exp, n, p, n_pairs, seed0, h4_iters, include_h4,
+    # one gen_instance_batch serves both engines: the scalar path iterates
+    # its per-instance objects, the batched path consumes its stacked arrays
+    batch = gen_instance_batch(exp, n, p, [seed0 + k for k in range(n_pairs)])
+    _run_scalar(batch, h4_iters, include_h4,
                 period_fracs, latency_mults, codes_l, acc, thresholds)
 
     curves = {}
@@ -111,11 +139,14 @@ def run_experiment(
     return ExperimentResult(exp, n, p, n_pairs, grid, curves, thr)
 
 
-def _run_scalar(exp, n, p, n_pairs, seed0, h4_iters, include_h4,
+def _run_scalar(batch, h4_iters, include_h4,
                 period_fracs, latency_mults, codes_l, acc, thresholds) -> None:
-    """Per-instance reference path: one Python loop per (instance, bound)."""
-    for k in range(n_pairs):
-        wl, pf = gen_instance(exp, n, p, seed=seed0 + k)
+    """Per-instance reference path: one Python loop per (instance, bound),
+    over the per-instance objects of an already-generated InstanceBatch (the
+    same one whose stacked arrays the batched engine would consume — the
+    instances are generated exactly once per campaign, never re-drawn from
+    seeds)."""
+    for wl, pf in batch:
         hi = eval_period(wl, pf, single_processor_mapping(wl, pf.fastest()))
         l_opt = optimal_latency(wl, pf)
         pgrid = hi * period_fracs
@@ -299,14 +330,15 @@ def failure_thresholds(
     exps = list(exps)
     out: dict = {exp: {c: {} for c in ["H1", "H2", "H3", "H4", "H5", "H6"]}
                  for exp in exps}
-    if engine == "batched":
+    if engine in ("batched", "fused"):
         # one stacked pass per n across ALL experiment families
         seeds = [seed0 + k for k in range(n_pairs)]
         for n in ns:
             batches = [gen_instance_batch(exp, n, p, seeds) for exp in exps]
             pb = ProblemBatch.concat(batches)
-            trajsets = batched_trajectory_sets(["H1", "H2", "H3", "H4"], pb,
-                                               backend=backend)
+            trajsets = batched_trajectory_sets(
+                ["H1", "H2", "H3", "H4"], pb,
+                backend=_campaign_backend(engine, backend))
             for c, trajs in trajsets.items():
                 for ei, exp in enumerate(exps):
                     sl = trajs[ei * n_pairs:(ei + 1) * n_pairs]
@@ -320,8 +352,9 @@ def failure_thresholds(
     for exp in exps:
         for n in ns:
             vals = {c: [] for c in out[exp]}
-            for k in range(n_pairs):
-                wl, pf = gen_instance(exp, n, p, seed=seed0 + k)
+            batch = gen_instance_batch(exp, n, p,
+                                       [seed0 + k for k in range(n_pairs)])
+            for wl, pf in batch:
                 for c in ["H1", "H2", "H3", "H4"]:
                     traj = split_trajectory(c, wl, pf)
                     vals[c].append(min(per for per, _ in traj))
@@ -331,6 +364,126 @@ def failure_thresholds(
             for c, v in vals.items():
                 out[exp][c][n] = float(np.mean(v))
     return out
+
+
+# ---------------------------------------------------------------------------
+# Replication sweeps: the Section-5 study across many seed banks, with
+# confidence intervals on the Figures 2-7 curves and Table 1 thresholds.
+# ---------------------------------------------------------------------------
+
+# normal-approximation 95% two-sided quantile; replications are cheap under
+# the batched/fused engines, so R is expected to be large enough (>= ~10)
+# that the t-correction would not change any qualitative call.
+_Z95 = 1.959963984540054
+
+
+@dataclasses.dataclass
+class ReplicatedResult:
+    """Aggregate of R independent campaign replications of one experiment.
+
+    ``curves[code] = (mean_per, ci_per, mean_lat, ci_lat, mean_frac)`` over
+    the bound grid, where the means average each replication's curve point
+    (nan-skipping: a replication with no feasible instance at a bound does
+    not contribute) and ``ci_*`` is the 95% half-width of the mean across
+    replications.  ``thresholds[code] = (mean, ci)`` aggregates the
+    per-replication mean failure thresholds.
+    """
+
+    exp: str
+    n: int
+    p: int
+    n_pairs: int
+    replications: int
+    bounds_rel: np.ndarray
+    curves: dict
+    thresholds: dict
+
+
+def _mean_ci(stack: np.ndarray) -> tuple:
+    """(nan-mean, 95% CI half-width of the mean) along axis 0.  All-NaN
+    columns (a bound infeasible in every replication) stay NaN."""
+    import warnings
+
+    cnt = np.sum(~np.isnan(stack), axis=0)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", RuntimeWarning)
+        mean = np.where(cnt > 0, np.nanmean(stack, axis=0), np.nan)
+        sd = np.where(cnt > 1, np.nanstd(stack, axis=0, ddof=1), np.nan)
+    ci = np.where(cnt > 1, _Z95 * sd / np.sqrt(np.maximum(cnt, 1)), np.nan)
+    return mean, ci
+
+
+def run_replicated(
+    exps,
+    n: int,
+    p: int,
+    n_pairs: int = 50,
+    replications: int = 10,
+    n_bounds: int = 16,
+    seed0: int = 1234,
+    h4_iters: int = 10,
+    include_h4: bool = True,
+    engine: str = "batched",
+    backend: str = "numpy",
+) -> tuple:
+    """Run :func:`run_campaign` over ``replications`` disjoint seed banks
+    (bank r uses seeds ``seed0 + r * n_pairs + k``; bank 0 is exactly the
+    non-replicated campaign) and aggregate mean +/- 95% CI per experiment.
+
+    Returns ``(replicated, first)`` where ``replicated`` maps each exp to a
+    :class:`ReplicatedResult` and ``first`` is bank 0's plain
+    ``{exp: ExperimentResult}`` (so callers can emit the byte-identical
+    single-bank outputs alongside the CI files).
+    """
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
+    if engine == "scalar":  # the reference path replicates per experiment
+        camps = [{exp: run_experiment(exp, n, p, n_pairs=n_pairs,
+                                      n_bounds=n_bounds,
+                                      seed0=seed0 + r * n_pairs,
+                                      h4_iters=h4_iters,
+                                      include_h4=include_h4, engine="scalar")
+                  for exp in exps} for r in range(replications)]
+    else:
+        camps = [run_campaign(exps, n, p, n_pairs=n_pairs, n_bounds=n_bounds,
+                              seed0=seed0 + r * n_pairs, h4_iters=h4_iters,
+                              include_h4=include_h4,
+                              backend=_campaign_backend(engine, backend))
+                 for r in range(replications)]
+    out = {}
+    for exp in exps:
+        reps = [c[exp] for c in camps]
+        codes = sorted(reps[0].curves)
+        curves = {}
+        thr = {}
+        for c in codes:
+            per = np.stack([r.curves[c][0] for r in reps])
+            lat = np.stack([r.curves[c][1] for r in reps])
+            frac = np.stack([r.curves[c][2] for r in reps])
+            mean_per, ci_per = _mean_ci(per)
+            mean_lat, ci_lat = _mean_ci(lat)
+            curves[c] = (mean_per, ci_per, mean_lat, ci_lat, frac.mean(axis=0))
+            tvals = np.array([r.thresholds[c][0] for r in reps])
+            tm, tci = _mean_ci(tvals[:, None])
+            thr[c] = (float(tm[0]), float(tci[0]))
+        out[exp] = ReplicatedResult(exp, n, p, n_pairs, replications,
+                                    reps[0].bounds_rel, curves, thr)
+    return out, camps[0]
+
+
+def summarize_replicated(res: ReplicatedResult) -> str:
+    lines = [f"# {res.exp} n={res.n} p={res.p} pairs={res.n_pairs} "
+             f"replications={res.replications}"]
+    lines.append("heuristic,bound_idx,mean_period,period_ci95,"
+                 "mean_latency,latency_ci95,feasible_frac")
+    for c, (mp, cp, ml, cl, fr) in sorted(res.curves.items()):
+        for i in range(len(mp)):
+            lines.append(f"{c},{i},{mp[i]:.6g},{cp[i]:.6g},{ml[i]:.6g},"
+                         f"{cl[i]:.6g},{fr[i]:.3f}")
+    lines.append("heuristic,threshold_mean,threshold_ci95")
+    for c, (m, ci) in sorted(res.thresholds.items()):
+        lines.append(f"{c},{m:.6g},{ci:.6g}")
+    return "\n".join(lines)
 
 
 def summarize_experiment(res: ExperimentResult) -> str:

@@ -14,7 +14,9 @@ from repro.core.heuristics import (sp_bi_l, sp_bi_p, sp_mono_l,
                                    split_trajectory)
 from repro.core.metrics import single_processor_mapping
 from repro.sim import gen_instance_batch
-from repro.sim.experiments import run_campaign, run_experiment, summarize_experiment
+from repro.sim.experiments import (run_campaign, run_experiment,
+                                   run_replicated, summarize_experiment,
+                                   summarize_replicated)
 
 SEEDS = range(7000, 7006)
 
@@ -137,14 +139,137 @@ def test_unknown_code_and_engine_raise():
 
 
 def test_jax_backend_agrees():
-    """The scoring kernels under jax.jit (x64) drive the same splits; floats
-    agree to numerical tolerance."""
+    """The scoring kernels under jax.jit (x64) drive the same splits; with
+    the kernels' runtime-zero FMA guard the floats are bit-identical too."""
     jax = pytest.importorskip("jax")
     del jax
     batch = gen_instance_batch("E2", 8, 6, range(3))
     for code in ("H1", "H2", "H3", "H4"):
         a = batched_trajectories(code, batch, backend="numpy")
         b = batched_trajectories(code, batch, backend="jax")
-        assert [len(t) for t in a] == [len(t) for t in b], code
-        for ta, tb in zip(a, b):
-            assert np.allclose(np.asarray(ta), np.asarray(tb), rtol=1e-12), code
+        assert a == b, code
+
+
+# ---------------------------------------------------------------------------
+# Fused device-resident engine (repro.core.fused): the whole lockstep loop
+# under one jit'd lax.while_loop, O(1) dispatches per (shape, arity).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("exp", ["E1", "E2", "E3", "E4"])
+@pytest.mark.parametrize("p", [10, 100])
+def test_fused_trajectories_identical(exp, p):
+    """Fused split trajectories == the numpy engine, EXACTLY (same splits AND
+    same floats — the FMA guard defeats XLA's contraction drift), for every
+    experiment family and both paper processor counts."""
+    pytest.importorskip("jax")
+    batch = gen_instance_batch(exp, 12, p, SEEDS)
+    for code in ("H1", "H2", "H3", "H4"):
+        assert (batched_trajectories(code, batch, backend="fused")
+                == batched_trajectories(code, batch, backend="numpy")), code
+
+
+def test_fused_fixed_latency_and_h4_ports():
+    """The H4-H6 bound-grid entry points run device-resident too: fused
+    batched_fixed_latency / batched_sp_bi_p == the scalar heuristics."""
+    pytest.importorskip("jax")
+    batch = gen_instance_batch("E2", 10, 10, SEEDS)
+    mults = [0.9, 1.0, 1.2, 1.6, 2.2, 3.0]
+    lbounds = [optimal_latency(wl, pf) * m for (wl, pf), m in zip(batch, mults)]
+    for code, fn in (("H5", sp_mono_l), ("H6", sp_bi_l)):
+        rs = batched_fixed_latency(code, batch, lbounds, backend="fused")
+        for i, (wl, pf) in enumerate(batch):
+            assert _same_result(rs[i], fn(wl, pf, lbounds[i])), (code, i)
+    fracs = [0.05, 0.2, 0.4, 0.6, 0.8, 1.0]
+    pbounds = [period(wl, pf, single_processor_mapping(wl, pf.fastest())) * f
+               for (wl, pf), f in zip(batch, fracs)]
+    rs = batched_sp_bi_p(batch, pbounds, iters=8, backend="fused")
+    for i, (wl, pf) in enumerate(batch):
+        assert _same_result(rs[i], sp_bi_p(wl, pf, pbounds[i], iters=8)), i
+
+
+def test_fused_padding_mixed_convergence():
+    """Inside the traced loop, converged rows must sit inert (masked) while
+    other rows keep splitting: mix an immediately-stuck instance with rich
+    ones and require per-row trajectories identical to the scalar path."""
+    pytest.importorskip("jax")
+    n = 12
+    fast_flat = make_workload([10.0] * n, [0.0] * (n + 1))
+    wl2 = make_workload(list(range(1, n + 1)), [5.0] * (n + 1))
+    pf_stuck = make_platform([20.0] + [0.001] * 9, b=10.0)
+    pf_rich = make_platform([20.0, 19.0, 18.0, 17.0, 16.0, 15.0, 14.0, 13.0,
+                             12.0, 11.0], b=10.0)
+    pairs = [(fast_flat, pf_stuck), (fast_flat, pf_rich), (wl2, pf_stuck),
+             (wl2, pf_rich)]
+    pb = stack_instances(pairs)
+    for code in ("H1", "H2", "H3", "H4"):
+        bt = batched_trajectories(code, pb, backend="fused")
+        lengths = [len(t) for t in bt]
+        assert lengths[0] == 1 and lengths[2] == 1, (code, lengths)
+        assert lengths[1] > 1 and lengths[3] > 1, (code, lengths)
+        for i, (wl, pf) in enumerate(pairs):
+            assert bt[i] == split_trajectory(code, wl, pf), (code, i)
+
+
+def test_fused_large_grid_smoke():
+    """The large-grid follow-up shape (n=80, p=1000) completes under the
+    fused engine and matches the numpy engine exactly."""
+    pytest.importorskip("jax")
+    batch = gen_instance_batch("E3", 80, 1000, range(2))
+    got = batched_trajectory_sets(["H1", "H4"], batch, backend="fused")
+    ref = batched_trajectory_sets(["H1", "H4"], batch, backend="numpy")
+    assert got == ref
+    assert all(len(t) > 1 for t in got["H1"])
+
+
+def test_fused_trace_count_per_campaign():
+    """The O(1)-dispatch contract: a whole campaign (trajectories for H1-H4,
+    the lockstep H4 bisection, H5/H6 over the bound grid) compiles at most 2
+    fused-loop traces — one per split arity — and a rerun of the same shapes
+    compiles none."""
+    pytest.importorskip("jax")
+    from repro.core import fused
+
+    # a shape no other test uses, so the lru-cached loops are cold
+    kw = dict(n_pairs=3, n_bounds=5, h4_iters=4, include_h4=True)
+    fused.reset_trace_count()
+    camp = run_campaign(("E1", "E2"), 9, 7, backend="fused", **kw)
+    assert fused.trace_count() <= 2
+    fused.reset_trace_count()
+    camp2 = run_campaign(("E1", "E2"), 9, 7, backend="fused", **kw)
+    assert fused.trace_count() == 0  # warm: dispatches only, no re-trace
+    for exp in ("E1", "E2"):
+        assert summarize_experiment(camp[exp]) == summarize_experiment(camp2[exp])
+        solo = run_experiment(exp, 9, 7, engine="scalar", **kw)
+        assert summarize_experiment(solo) == summarize_experiment(camp[exp]), exp
+
+
+def test_fused_campaign_engine_byte_identical():
+    """run_experiment(engine='fused') reproduces the scalar harness output
+    byte-for-byte, including curves, thresholds, and feasibility fractions."""
+    pytest.importorskip("jax")
+    a = run_experiment("E4", 10, 10, n_pairs=5, n_bounds=5, engine="scalar")
+    b = run_experiment("E4", 10, 10, n_pairs=5, n_bounds=5, engine="fused")
+    assert summarize_experiment(a) == summarize_experiment(b)
+
+
+def test_replicated_campaign_cis():
+    """run_replicated: bank 0 equals the plain campaign; CI half-widths are
+    finite where every replication has feasible points; engines agree."""
+    rep, first = run_replicated(("E2",), 8, 10, n_pairs=3, replications=4,
+                                n_bounds=4)
+    camp = run_campaign(("E2",), 8, 10, n_pairs=3, n_bounds=4)
+    assert summarize_experiment(first["E2"]) == summarize_experiment(camp["E2"])
+    r = rep["E2"]
+    assert r.replications == 4
+    mean_per, ci_per, mean_lat, ci_lat, frac = r.curves["H5"]
+    sel = frac == 1.0
+    assert np.isfinite(mean_per[sel]).all() and np.isfinite(ci_per[sel]).all()
+    assert (ci_per[sel] >= 0).all() and (ci_lat[sel] >= 0).all()
+    m, ci = r.thresholds["H1"]
+    assert np.isfinite(m) and np.isfinite(ci) and ci >= 0
+    text = summarize_replicated(r)
+    assert "period_ci95" in text and "threshold_ci95" in text
+    repf, _ = run_replicated(("E2",), 8, 10, n_pairs=3, replications=4,
+                             n_bounds=4, engine="fused")
+    assert summarize_replicated(repf["E2"]) == text
