@@ -115,20 +115,10 @@ def vectorized_eval(reps: int = 5, seed: int = 3) -> list:
     ]
 
 
-def campaign_speedup(quick: bool = False) -> list:
-    """The batched and fused campaign engines vs the per-instance reference
-    path on a representative Section-5 slice (all four experiment families,
-    paper batch size, small and large (n, p) points), asserting identical
-    outputs while timing all three.  The fused engine is timed twice: cold
-    (including its one-off jit traces) and warm (the steady-state cost every
-    further campaign of the same shapes pays)."""
-    if quick:
-        points = ((10, 10),)
-        kw = dict(n_pairs=4, n_bounds=4, h4_iters=4, include_h4=True)
-    else:
-        points = ((10, 10), (20, 100), (40, 100))
-        kw = dict(n_pairs=50, n_bounds=12, h4_iters=10, include_h4=True)
-    exps = ("E1", "E2", "E3", "E4")
+def _engine_comparison_rows(exps, points, kw, row_prefix) -> list:
+    """Time a family set through all three engines (scalar reference, numpy
+    lockstep, fused cold + warm), asserting byte-identical outputs, and emit
+    ``{row_prefix}{scalar,batched,fused}_<tag>`` rows."""
     t0 = time.perf_counter()
     scal = {(e, n, p): run_experiment(e, n, p, engine="scalar", **kw)
             for n, p in points for e in exps}
@@ -149,15 +139,33 @@ def campaign_speedup(quick: bool = False) -> list:
     for key in scal:
         assert summarize_experiment(scal[key]) == summarize_experiment(batc[key]), key
         assert summarize_experiment(scal[key]) == summarize_experiment(fusd[key]), key
-    tag = "E1-E4_" + "_".join(f"n{n}p{p}" for n, p in points)
+    tag = (f"{exps[0]}-{exps[-1]}_"
+           + "_".join(f"n{n}p{p}" for n, p in points))
     return [
-        (f"campaign_scalar_{tag}", us_scal, "per-instance reference path"),
-        (f"campaign_batched_{tag}", us_batc,
+        (f"{row_prefix}scalar_{tag}", us_scal, "per-instance reference path"),
+        (f"{row_prefix}batched_{tag}", us_batc,
          f"speedup={us_scal / us_batc:.1f}x vs scalar, identical outputs"),
-        (f"campaign_fused_{tag}", us_fusd,
+        (f"{row_prefix}fused_{tag}", us_fusd,
          f"warm; speedup={us_scal / us_fusd:.1f}x vs scalar, "
          f"cold_with_traces_us={us_cold:.0f}, identical outputs"),
     ]
+
+
+def campaign_speedup(quick: bool = False) -> list:
+    """The batched and fused campaign engines vs the per-instance reference
+    path on a representative Section-5 slice (all four experiment families,
+    paper batch size, small and large (n, p) points), asserting identical
+    outputs while timing all three.  The fused engine is timed twice: cold
+    (including its one-off jit traces) and warm (the steady-state cost every
+    further campaign of the same shapes pays)."""
+    if quick:
+        points = ((10, 10),)
+        kw = dict(n_pairs=4, n_bounds=4, h4_iters=4, include_h4=True)
+    else:
+        points = ((10, 10), (20, 100), (40, 100))
+        kw = dict(n_pairs=50, n_bounds=12, h4_iters=10, include_h4=True)
+    return _engine_comparison_rows(("E1", "E2", "E3", "E4"), points, kw,
+                                   "campaign_")
 
 
 def fused_large_grid(quick: bool = False) -> list:
@@ -187,6 +195,69 @@ def fused_large_grid(quick: bool = False) -> list:
                      f"warm; numpy_batched_us={us_np:.0f}, "
                      f"cold_with_traces_us={us_cold:.0f}, identical outputs"))
     return rows
+
+
+def image_family_campaign(quick: bool = False) -> list:
+    """The image-processing follow-up families (I1-I4: JPEG encoder profile,
+    bimodal, correlated comm∝comp, uniform-wide) through the campaign
+    engines, asserting byte-identical outputs across scalar/batched/fused."""
+    if quick:
+        points = ((10, 10),)
+        kw = dict(n_pairs=4, n_bounds=4, h4_iters=4, include_h4=True)
+    else:
+        points = ((10, 10), (20, 100))
+        kw = dict(n_pairs=50, n_bounds=12, h4_iters=10, include_h4=True)
+    return _engine_comparison_rows(("I1", "I2", "I3", "I4"), points, kw,
+                                   "image_family_")
+
+
+def fused_h4_bisection(quick: bool = False) -> list:
+    """The fused ``lax.scan`` H4 bisection (one dispatch per row-chunk for
+    the WHOLE binary search) vs the host-driven probe loop it replaced
+    (~iters+1 dispatches), identical outputs — dispatch counts recorded in
+    ``derived`` so the O(1) contract is tracked across PRs."""
+    from repro.core import batched, fused
+    from repro.core.metrics import period, single_processor_mapping
+    from repro.sim import gen_instance_batch
+
+    n, p = (10, 10) if quick else (20, 100)
+    B = 12 if quick else 48
+    iters = 10
+    batch = gen_instance_batch("E2", n, p, range(100, 100 + B))
+    pb = batched._as_problem_batch(batch)
+    fracs = np.tile([0.05, 0.2, 0.4, 0.6, 0.8, 1.0], B)[:B]
+    bounds = np.array(
+        [period(wl, pf, single_processor_mapping(wl, pf.fastest())) * f
+         for (wl, pf), f in zip(batch, fracs)])
+    lo, hi = batched.h4_search_bounds(pb)
+
+    batched.batched_sp_bi_p(pb, bounds, iters=iters,
+                            backend="fused")  # cold: traces
+    fused.reset_dispatch_count()
+    t0 = time.perf_counter()
+    rs_scan = batched.batched_sp_bi_p(pb, bounds, iters=iters, backend="fused")
+    us_scan = (time.perf_counter() - t0) * 1e6
+    d_scan = fused.dispatch_count()
+
+    fused.reset_dispatch_count()
+    t0 = time.perf_counter()
+    rs_loop = batched._sp_bi_p_rowwise(pb, bounds, iters, "fused",
+                                       lo.copy(), hi.copy(), True)
+    us_loop = (time.perf_counter() - t0) * 1e6
+    d_loop = fused.dispatch_count()
+
+    for a, b in zip(rs_scan, rs_loop):
+        assert (a.mapping == b.mapping and a.period == b.period
+                and a.latency == b.latency and a.feasible == b.feasible
+                and a.splits == b.splits)
+    assert d_loop >= 2 * d_scan, (d_loop, d_scan)
+    return [
+        (f"campaign_fused_h4scan_n{n}p{p}_B{B}", us_scan,
+         f"dispatches={d_scan} vs {d_loop} probe-loop "
+         f"({d_loop / d_scan:.0f}x fewer), identical outputs"),
+        (f"campaign_fused_h4probe_loop_n{n}p{p}_B{B}", us_loop,
+         f"PR-3 style host-driven bisection, dispatches={d_loop}"),
+    ]
 
 
 def deal_speedup(quick: bool = False) -> list:
@@ -240,6 +311,8 @@ def run(quick: bool = False) -> list:
     rows += vectorized_eval(reps=2 if quick else 5)
     rows += campaign_speedup(quick=quick)
     rows += fused_large_grid(quick=quick)
+    rows += image_family_campaign(quick=quick)
+    rows += fused_h4_bisection(quick=quick)
     rows += deal_speedup(quick=quick)
     gaps = optimality_gaps(n_inst=4 if quick else 20)
     for c, g in gaps.items():

@@ -51,6 +51,7 @@ from .metrics import Mapping
 __all__ = [
     "ProblemBatch", "stack_instances", "batched_trajectories",
     "batched_trajectory_sets", "batched_fixed_latency", "batched_sp_bi_p",
+    "h4_search_bounds",
 ]
 
 
@@ -794,17 +795,14 @@ def evaluate_state_rows(workloads, platforms, state: "_BatchState",
     return out
 
 
-def batched_sp_bi_p(batch, bounds, iters: int = 40, backend: str = "numpy",
-                    with_mappings: bool = True, groups=None) -> list:
-    """H4 'Sp bi P' for B problems at once: ONE binary search whose every
-    bisection step probes all still-searching problems in lockstep, instead
-    of B independent searches.  Identical results to ``sp_bi_p``.
-    ``with_mappings=False`` skips Mapping materialization (metrics-only
-    campaigns).  ``groups`` (optional, metrics-only) marks rows that share an
-    instance — probe runs are then deduplicated across each instance's period
-    bounds (see ``_sp_bi_p_grouped``)."""
-    pb = _as_problem_batch(batch)
-    p_fix = np.asarray(bounds, dtype=float)
+def h4_search_bounds(pb: ProblemBatch, groups=None) -> tuple:
+    """Initial (lo, hi) authorized-latency bounds of the H4 binary search:
+    lo = the optimal latency (all-on-fastest), hi = every stage its own
+    interval on the slowest processor — the exact per-row mirror of
+    ``sp_bi_p``'s scalar formulas.  Rows sharing a ``groups`` key (same
+    instance tiled across a bound grid) compute the bound once.  Shared by
+    every bisection flavor (host probe loops, the fused scan, benchmarks),
+    so they all provably search the same interval."""
     B = pb.B
     lat_opt = _BatchState(pb).latency()
     if groups is None:
@@ -822,11 +820,58 @@ def batched_sp_bi_p(batch, bounds, iters: int = 40, backend: str = "numpy",
         lat_ub[i] = float(pb.delta[i, :-1].sum() / pb.b
                           + pb.w[i].sum() / s_min
                           + pb.delta[i, -1] / pb.b)
-    lo = lat_opt.copy()
-    hi = np.maximum(lat_ub, lat_opt)
+    return lat_opt, np.maximum(lat_ub, lat_opt)
+
+
+def batched_sp_bi_p(batch, bounds, iters: int = 40, backend: str = "numpy",
+                    with_mappings: bool = True, groups=None) -> list:
+    """H4 'Sp bi P' for B problems at once: ONE binary search whose every
+    bisection step probes all still-searching problems in lockstep, instead
+    of B independent searches.  Identical results to ``sp_bi_p``.
+    ``with_mappings=False`` skips Mapping materialization (metrics-only
+    campaigns).  ``groups`` (optional, metrics-only) marks rows that share an
+    instance — probe runs are then deduplicated across each instance's period
+    bounds (see ``_sp_bi_p_grouped``)."""
+    pb = _as_problem_batch(batch)
+    p_fix = np.asarray(bounds, dtype=float)
+    B = pb.B
+    if groups is None:
+        groups = np.arange(B)
+    groups = np.asarray(groups)
+    lo, hi = h4_search_bounds(pb, groups)
+    if backend == "fused" and min(pb.n - 1, pb.p - 1) > 0:
+        # the bisection itself is fused (one probe0 + lax.scan program per
+        # row-chunk); probe-run dedup is pointless when probes are free, so
+        # `groups` is ignored — results are identical either way.
+        return _sp_bi_p_fused(pb, p_fix, iters, lo, hi, with_mappings)
     if not with_mappings:
         return _sp_bi_p_grouped(pb, p_fix, groups, iters, backend, lo, hi)
     return _sp_bi_p_rowwise(pb, p_fix, iters, backend, lo, hi, with_mappings)
+
+
+def _sp_bi_p_fused(pb, p_fix, iters, lo, hi, with_mappings):
+    """H4 with the binary search fused into one jitted program per row-chunk
+    (:func:`repro.core.fused.run_fused_bisection`): O(1) host dispatches per
+    campaign instead of ~iters+1, outputs identical to the host-driven
+    probe-loop paths (asserted by tests/test_engine_equivalence.py)."""
+    from . import fused
+
+    r = fused.run_fused_bisection(pb, p_fix, lo, hi, iters)
+    out = []
+    for i in range(pb.B):
+        if not r["feas0"][i]:
+            mp = (_mapping_from_rows(r["items0"][i], int(r["m0"][i]))
+                  if with_mappings else None)
+            out.append(HeuristicResult(mp, float(r["per0"][i]),
+                                       float(r["lat0"][i]), False,
+                                       int(r["sp0"][i]), "Sp bi P"))
+        else:
+            mp = (_mapping_from_rows(r["items"][i], int(r["m"][i]))
+                  if with_mappings else None)
+            out.append(HeuristicResult(mp, float(r["per"][i]),
+                                       float(r["lat"][i]), True,
+                                       int(r["sp"][i]), "Sp bi P"))
+    return out
 
 
 def _sp_bi_p_rowwise(pb, p_fix, iters, backend, lo, hi, with_mappings):

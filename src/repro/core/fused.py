@@ -52,12 +52,18 @@ import numpy as np
 
 from .heuristics import _EPS, score_2way_kernel, score_3way_kernel
 
-__all__ = ["fused_available", "run_fused", "trace_count", "reset_trace_count"]
+__all__ = ["fused_available", "run_fused", "run_fused_bisection",
+           "trace_count", "reset_trace_count",
+           "dispatch_count", "reset_dispatch_count"]
 
-# number of traced (compiled) variants of the fused loop since the last reset;
-# incremented from inside the traced function, which Python-executes only
-# while jax is tracing — so this counts actual traces, not dispatches.
+# number of traced (compiled) variants of the fused programs since the last
+# reset; incremented from inside the traced wrappers, which Python-execute
+# only while jax is tracing — so this counts actual traces, not dispatches.
 _TRACES = [0]
+# number of jitted-program dispatches (host -> device calls) since the last
+# reset: one per row-chunk for the lockstep loop, one per row-chunk for the
+# WHOLE H4 bisection (probe-at-hi + the lax.scan over probe iterations).
+_DISPATCHES = [0]
 
 # lane budget per jitted call: rows_per_chunk * candidate_lanes is held under
 # this so the 3-way pair grid of large n stays cache-/memory-sized.
@@ -80,12 +86,22 @@ def fused_available() -> bool:
 
 
 def trace_count() -> int:
-    """Traces of the fused loop since the last :func:`reset_trace_count`."""
+    """Traces of the fused programs since the last :func:`reset_trace_count`."""
     return _TRACES[0]
 
 
 def reset_trace_count() -> None:
     _TRACES[0] = 0
+
+
+def dispatch_count() -> int:
+    """Jitted-program dispatches since :func:`reset_dispatch_count` — the
+    O(1)-dispatch contract is asserted on this counter by the tests."""
+    return _DISPATCHES[0]
+
+
+def reset_dispatch_count() -> None:
+    _DISPATCHES[0] = 0
 
 
 def chunk_rows(n: int, k: int) -> int:
@@ -110,15 +126,15 @@ def _lex_argmin_traced(xp, keys, mask):
     return xp.argmax(m, axis=1), has
 
 
-@functools.lru_cache(maxsize=None)
-def _get_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
-    """Build (and cache) the jitted fused loop for static shape (n, p, k).
+def _build_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
+    """Build the UNJITTED fused loop for static shape (n, p, k).
 
     Returned callable:
         fn(w, delta, s, b, prefix, order, bi_mode, stop, lat_limit, active0)
         -> (arr, m, next_idx, lat_sum, splits, per_rec, lat_rec, acc_rec, t)
     with arr (S, n, 5) in the ``_BatchState`` field layout and the records
-    (T, S) per lockstep iteration.
+    (T, S) per lockstep iteration.  Callers jit it (:func:`_get_loop`) or
+    inline it into a larger traced program (:func:`_get_bisect`).
     """
     import jax
 
@@ -300,7 +316,6 @@ def _get_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
 
     def fn(w, delta, s, b, zero, prefix, order, bi_mode, stop, lat_limit,
            active0):
-        _TRACES[0] += 1  # Python-executes only while tracing
         del w  # stage works enter via their prefix sums
         fastest = order[:, 0]
         term0 = delta[:, 0] / b + (prefix[:, n] - prefix[:, 0]) / take1(s, fastest)
@@ -399,6 +414,90 @@ def _get_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
          per_rec, lat_rec, acc_rec, splits) = lax.while_loop(cond, body, init)
         return arr, m, next_idx, lat_sum, splits, per_rec, lat_rec, acc_rec, t
 
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _get_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
+    """The jitted fused loop for static shape (n, p, k), cached per shape."""
+    import jax
+
+    loop = _build_loop(n, p, k, T, S)
+
+    def counted(*args):
+        _TRACES[0] += 1  # Python-executes only while tracing
+        return loop(*args)
+
+    return jax.jit(counted)
+
+
+@functools.lru_cache(maxsize=None)
+def _get_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
+    """The jitted FUSED H4 bisection for static shape (n, p): the probe at
+    the upper latency bound plus a ``lax.scan`` over ``iters`` probe
+    iterations — each probe an inline :func:`_build_loop` run — carrying the
+    per-row (lo, hi) bound state and the best-so-far probe outcome.  One
+    dispatch replaces the ~iters+1 per-probe dispatches of the host-driven
+    binary search, with bit-identical updates: ``mid = 0.5 * (lo + hi)``,
+    feasibility ``(period <= p_fix + eps) & (latency <= mid + eps)``, and the
+    (latency, then period) best-probe tie-break all mirror
+    ``batched._sp_bi_p_rowwise`` expression for expression.
+
+    Returned callable:
+        fn(w, delta, s, b, zero, prefix, order, p_fix, lo0, hi0, active0)
+        -> (items0, m0, sp0, per0, lat0, feas0,
+            best_items, best_m, best_sp, best_per, best_lat)
+    with items* (S, n, 3) in the ``_BatchState`` (d, e, proc) layout.
+    """
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from jax import lax
+
+    loop = _build_loop(n, p, 1, T, S)
+
+    def fn(w, delta, s, b, zero, prefix, order, p_fix, lo0, hi0, active0):
+        _TRACES[0] += 1  # Python-executes only while tracing
+        all_bi = jnp.ones(S, dtype=bool)
+        tail = delta[:, n] / b
+
+        def probe(limits, act):
+            arr, m, _nx, lat_sum, splits, *_rest = loop(
+                w, delta, s, b, zero, prefix, order, all_bi, p_fix, limits,
+                act)
+            per = arr[:, :, 3].max(axis=1)
+            lat = lat_sum + tail
+            feas = (per <= p_fix + _EPS) & (lat <= limits + _EPS)
+            return arr, m, splits, per, lat, feas
+
+        # Ensure feasibility at the upper end first (the rowwise path's
+        # probe0); its state seeds both the failure outputs and `best`.
+        arr0, m0, sp0, per0, lat0, feas0 = probe(hi0, active0)
+        alive = feas0 & active0
+
+        def body(carry, _):
+            lo, hi, b_it, b_m, b_sp, b_per, b_lat = carry
+            mid = 0.5 * (lo + hi)
+            arr, m, sp, per, lat, feas = probe(mid, alive)
+            good = alive & feas
+            hi = jnp.where(good, mid, hi)
+            lo = jnp.where(alive & ~feas, mid, lo)
+            better = good & ((lat < b_lat - _EPS)
+                             | ((jnp.abs(lat - b_lat) <= _EPS)
+                                & (per < b_per)))
+            bc = better[:, None, None]
+            return (lo, hi, jnp.where(bc, arr[:, :, :3], b_it),
+                    jnp.where(better, m, b_m), jnp.where(better, sp, b_sp),
+                    jnp.where(better, per, b_per),
+                    jnp.where(better, lat, b_lat)), None
+
+        init = (lo0, hi0, arr0[:, :, :3], m0, sp0, per0, lat0)
+        (_lo, _hi, b_it, b_m, b_sp, b_per, b_lat), _ = lax.scan(
+            body, init, None, length=iters)
+        return (arr0[:, :, :3], m0, sp0, per0, lat0, feas0,
+                b_it, b_m, b_sp, b_per, b_lat)
+
     return jax.jit(fn)
 
 
@@ -427,6 +526,7 @@ def run_fused(state, k: int, bi_mode: np.ndarray, stop: np.ndarray,
         sel = np.concatenate([rows, np.zeros(pad, dtype=np.int64)]) if pad else rows
         act = np.zeros(S, dtype=bool)
         act[:rows.size] = state.active[rows]
+        _DISPATCHES[0] += 1
         out = fn(pb.w[sel], pb.delta[sel], pb.s[sel], b, np.float64(0.0),
                  pb.prefix[sel], pb.order[sel].astype(np.int64), bi_mode[sel],
                  stop[sel], lat_limit[sel], act)
@@ -462,3 +562,50 @@ def run_fused(state, k: int, bi_mode: np.ndarray, stop: np.ndarray,
         if rsel:
             record(np.concatenate(rsel), np.concatenate(pers),
                    np.concatenate(lats))
+
+
+def run_fused_bisection(pb, p_fix: np.ndarray, lo: np.ndarray, hi: np.ndarray,
+                        iters: int) -> dict:
+    """Run the ENTIRE H4 binary search device-resident: one jitted
+    probe0 + ``lax.scan`` program per row-chunk (O(1) host dispatches per
+    campaign instead of ~iters+1), bit-identical to the host-driven search.
+
+    ``pb`` is a ``batched.ProblemBatch``; returns per-row numpy arrays:
+    ``items0/m0/sp0/per0/lat0/feas0`` (the probe-at-``hi`` state — the
+    failure outputs) and ``items/m/sp/per/lat`` (the best feasible probe).
+    The caller (``batched._sp_bi_p_fused``) assembles HeuristicResults.
+    """
+    B, n, p = pb.B, pb.n, pb.p
+    T = min(n - 1, p - 1)
+    if T <= 0:
+        raise ValueError("unsplittable shape: caller should use the host path")
+    S = chunk_rows(n, 1)
+    fn = _get_bisect(n, p, T, S, int(iters))
+    b = np.float64(pb.b)
+    p_fix = np.asarray(p_fix, dtype=np.float64)
+    lo = np.asarray(lo, dtype=np.float64)
+    hi = np.asarray(hi, dtype=np.float64)
+    out = {
+        "items0": np.zeros((B, n, 3)), "m0": np.zeros(B, dtype=np.int64),
+        "sp0": np.zeros(B, dtype=np.int64), "per0": np.zeros(B),
+        "lat0": np.zeros(B), "feas0": np.zeros(B, dtype=bool),
+        "items": np.zeros((B, n, 3)), "m": np.zeros(B, dtype=np.int64),
+        "sp": np.zeros(B, dtype=np.int64), "per": np.zeros(B),
+        "lat": np.zeros(B),
+    }
+    names = ("items0", "m0", "sp0", "per0", "lat0", "feas0",
+             "items", "m", "sp", "per", "lat")
+    for lo_i in range(0, B, S):
+        rows = np.arange(lo_i, min(lo_i + S, B))
+        pad = S - rows.size
+        sel = (np.concatenate([rows, np.zeros(pad, dtype=np.int64)])
+               if pad else rows)
+        act = np.zeros(S, dtype=bool)
+        act[:rows.size] = True
+        _DISPATCHES[0] += 1
+        res = fn(pb.w[sel], pb.delta[sel], pb.s[sel], b, np.float64(0.0),
+                 pb.prefix[sel], pb.order[sel].astype(np.int64), p_fix[sel],
+                 lo[sel], hi[sel], act)
+        for name, val in zip(names, res):
+            out[name][rows] = np.asarray(val)[:rows.size]
+    return out

@@ -55,10 +55,12 @@ from .generators import gen_instance_batch
 
 N_STAGES_DEFAULT = (5, 10, 20, 40)
 N_PROCS_DEFAULT = (10, 100)
-# the large-grid follow-up families (ROADMAP / "Bi-criteria Pipeline Mappings
-# for Parallel Image Processing" scenarios), unlocked by the fused engine
+# the large-grid follow-up shapes (ROADMAP), unlocked by the fused engine
 N_STAGES_LARGE = (80, 160)
 N_PROCS_LARGE = (1000,)
+# scenario-family sets (the paper's E1-E4, the image study's I1-I4) live in
+# sim.generators.FAMILY_SETS; every campaign entry point here takes any
+# family mix sharing (n, p).
 
 ENGINES = ("batched", "fused", "scalar")
 

@@ -1,15 +1,38 @@
-"""Random application/platform generators for the paper's experiments (5.1).
+"""Scenario-family subsystem: random application/platform generators.
 
-Common to all experiments: b = 10, processor speeds uniform integers in
-[1, 20].  Per-experiment application parameters:
+Common to all families: b = 10, processor speeds uniform integers in [1, 20].
+A family is an :class:`ExperimentSpec` carrying two pluggable *samplers* —
+``comp(rng, n) -> (n,)`` stage works and ``comm(rng, n, w) -> (n+1,)``
+inter-stage data volumes (the comm sampler sees the drawn works so families
+can correlate communication with computation).  Sampler combinators below
+(:func:`uniform_comp`, :func:`bimodal_comp`, :func:`correlated_comm`,
+:func:`jpeg_profile_comp` / :func:`jpeg_profile_comm`, ...) cover every
+registered family; new families plug in via :func:`register_experiment` and
+automatically flow through every engine (scalar / batched / jax / fused), the
+campaign harness, and the cross-engine differential test suite.
+
+The source paper's families (Section 5.1):
 
   E1  balanced comm/comp, homogeneous comms:     delta_i = 10,        w in [1, 20]
   E2  balanced comm/comp, heterogeneous comms:   delta in [1, 100],   w in [1, 20]
   E3  large computations:                        delta in [1, 20],    w in [10, 1000]
   E4  small computations:                        delta in [1, 20],    w in [0.01, 10]
 
-The paper draws integer w for E1-E3 ("randomly chosen between 1 and 20");
-E4's range [0.01, 10] is continuous.
+(The paper draws integer w for E1-E3; E4's range [0.01, 10] is continuous.)
+
+The follow-up study's families ("Bi-criteria Pipeline Mappings for Parallel
+Image Processing", Benoit, Kosch, Rehn-Sonigo & Robert, 2008) model realistic
+per-stage comm/comp structure; we register them as I1-I4:
+
+  I1  JPEG encoder stage profile: the 7-stage encoder pipeline (scale,
+      RGB->YCbCr, 4:2:0 subsample, block split, DCT, quantize, entropy encode)
+      tiled to n stages with multiplicative jitter — data volumes shrink at
+      subsampling and at entropy coding, DCT dominates compute;
+  I2  bimodal computations: light preprocessing stages mixed with heavy
+      transform/encode stages (mixture of uniform ranges);
+  I3  correlated comm ∝ comp: inter-stage volumes proportional to the
+      adjacent stages' work (heavy stages exchange heavy data);
+  I4  uniform wide-range: continuous uniform comm and comp over [0.5, 50].
 """
 
 from __future__ import annotations
@@ -22,35 +45,155 @@ import numpy as np
 from ..core import Platform, Workload
 
 
+# ---------------------------------------------------------------------------
+# Sampler combinators.
+#
+# comp samplers:  fn(rng, n)    -> (n,)   per-stage work
+# comm samplers:  fn(rng, n, w) -> (n+1,) inter-stage data volumes (see the
+#                 drawn works, so communication can correlate with computation)
+# ---------------------------------------------------------------------------
+
+def uniform_comp(lo: float, hi: float, integer: bool = True) -> Callable:
+    """Per-stage i.i.d. uniform work; integer draws match the paper's
+    'randomly chosen between lo and hi' wording for E1-E3."""
+    if integer:
+        return lambda rng, n: rng.integers(int(lo), int(hi) + 1, n).astype(float)
+    return lambda rng, n: rng.uniform(lo, hi, n)
+
+
+def uniform_comm(lo: float, hi: float, integer: bool = True) -> Callable:
+    """I.i.d. uniform inter-stage data volumes (independent of the works)."""
+    if integer:
+        return lambda rng, n, w: rng.integers(int(lo), int(hi) + 1,
+                                              n + 1).astype(float)
+    return lambda rng, n, w: rng.uniform(lo, hi, n + 1)
+
+
+def constant_comm(value: float) -> Callable:
+    """Homogeneous data volumes (E1's delta_i = 10)."""
+    return lambda rng, n, w: np.full(n + 1, float(value))
+
+
+def bimodal_comp(light=(1.0, 4.0), heavy=(50.0, 100.0),
+                 heavy_frac: float = 0.3) -> Callable:
+    """Mixture of light and heavy stages: each stage is heavy with
+    probability ``heavy_frac`` (uniform within its range) — the image
+    pipelines' cheap pixel passes vs dominant transform/encode stages."""
+    def fn(rng, n):
+        is_heavy = rng.random(n) < heavy_frac
+        light_w = rng.uniform(light[0], light[1], n)
+        heavy_w = rng.uniform(heavy[0], heavy[1], n)
+        return np.where(is_heavy, heavy_w, light_w)
+    return fn
+
+
+def correlated_comm(rho: float = 1.0, noise: float = 0.5) -> Callable:
+    """Inter-stage volumes proportional to the adjacent stages' mean work
+    (edge volumes see the boundary stage only), with multiplicative jitter:
+    heavy stages exchange heavy data."""
+    def fn(rng, n, w):
+        wpad = np.concatenate([w[:1], w, w[-1:]])
+        adj = 0.5 * (wpad[:-1] + wpad[1:])               # (n+1,)
+        return rho * adj * rng.uniform(1.0 - noise, 1.0 + noise, n + 1)
+    return fn
+
+
+# The JPEG encoder pipeline of the image-processing follow-up study: per-stage
+# relative compute cost and the data volume flowing OUT of each stage
+# (relative units per image tile).  Chroma subsampling (4:2:0) halves the
+# volume, entropy coding compresses it; the DCT dominates compute.
+JPEG_STAGES = ("scale", "rgb2ycbcr", "subsample", "blocksplit", "dct",
+               "quantize", "encode")
+JPEG_COMP = np.array([4.0, 6.0, 2.0, 1.0, 12.0, 3.0, 8.0])
+JPEG_OUT = np.array([16.0, 16.0, 8.0, 8.0, 8.0, 8.0, 2.0])
+JPEG_IN_RAW = 16.0   # raw image volume entering the first stage
+
+
+def jpeg_profile_comp(jitter: float = 0.2) -> Callable:
+    """The encoder's per-stage compute profile tiled cyclically to n stages
+    with multiplicative uniform jitter (instance diversity)."""
+    def fn(rng, n):
+        base = JPEG_COMP[np.arange(n) % len(JPEG_COMP)]
+        return base * rng.uniform(1.0 - jitter, 1.0 + jitter, n)
+    return fn
+
+
+def jpeg_profile_comm(jitter: float = 0.2) -> Callable:
+    """The encoder's inter-stage volumes: raw input ahead of stage 1, then
+    each stage's output volume, tiled with the compute profile."""
+    def fn(rng, n, w):
+        base = np.empty(n + 1)
+        base[0] = JPEG_IN_RAW
+        base[1:] = JPEG_OUT[np.arange(n) % len(JPEG_OUT)]
+        return base * rng.uniform(1.0 - jitter, 1.0 + jitter, n + 1)
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Family registry
+# ---------------------------------------------------------------------------
+
 @dataclasses.dataclass(frozen=True)
 class ExperimentSpec:
+    """A named scenario family: per-stage comm/comp samplers plus metadata.
+
+    ``family`` groups specs into selectable sets ("paper" = the source
+    paper's E1-E4, "image" = the image-processing follow-up's I1-I4).
+    """
+
     name: str
     description: str
-    gen_delta: Callable  # (rng, n) -> (n+1,) array
-    gen_w: Callable      # (rng, n) -> (n,) array
+    comp: Callable            # (rng, n) -> (n,) stage works
+    comm: Callable            # (rng, n, w) -> (n+1,) inter-stage volumes
+    family: str = "paper"
 
 
-EXPERIMENTS = {
-    "E1": ExperimentSpec(
-        "E1", "balanced comm/comp, homogeneous comms",
-        lambda rng, n: np.full(n + 1, 10.0),
-        lambda rng, n: rng.integers(1, 21, n).astype(float),
-    ),
-    "E2": ExperimentSpec(
-        "E2", "balanced comm/comp, heterogeneous comms",
-        lambda rng, n: rng.integers(1, 101, n + 1).astype(float),
-        lambda rng, n: rng.integers(1, 21, n).astype(float),
-    ),
-    "E3": ExperimentSpec(
-        "E3", "large computations",
-        lambda rng, n: rng.integers(1, 21, n + 1).astype(float),
-        lambda rng, n: rng.integers(10, 1001, n).astype(float),
-    ),
-    "E4": ExperimentSpec(
-        "E4", "small computations",
-        lambda rng, n: rng.integers(1, 21, n + 1).astype(float),
-        lambda rng, n: rng.uniform(0.01, 10.0, n),
-    ),
+EXPERIMENTS: dict = {}
+
+
+def register_experiment(spec: ExperimentSpec, *,
+                        override: bool = False) -> ExperimentSpec:
+    """Register a scenario family; it immediately flows through every engine,
+    ``run_campaign``/``paper_sim``, and the differential test harness (which
+    parametrizes over ``EXPERIMENTS``).  Re-registering an existing name
+    raises unless ``override=True`` — the built-in families' random streams
+    are part of the seed contract (golden CSVs assert them byte-for-byte),
+    so silently replacing one would corrupt every seeded campaign."""
+    if not override and spec.name in EXPERIMENTS:
+        raise ValueError(f"scenario family {spec.name!r} is already "
+                         "registered; pass override=True to replace it")
+    EXPERIMENTS[spec.name] = spec
+    return spec
+
+
+for _spec in (
+    ExperimentSpec("E1", "balanced comm/comp, homogeneous comms",
+                   uniform_comp(1, 20), constant_comm(10.0)),
+    ExperimentSpec("E2", "balanced comm/comp, heterogeneous comms",
+                   uniform_comp(1, 20), uniform_comm(1, 100)),
+    ExperimentSpec("E3", "large computations",
+                   uniform_comp(10, 1000), uniform_comm(1, 20)),
+    ExperimentSpec("E4", "small computations",
+                   uniform_comp(0.01, 10.0, integer=False),
+                   uniform_comm(1, 20)),
+    ExperimentSpec("I1", "JPEG encoder stage profile (image study)",
+                   jpeg_profile_comp(), jpeg_profile_comm(), family="image"),
+    ExperimentSpec("I2", "bimodal computations (light/heavy stages)",
+                   bimodal_comp(), uniform_comm(1, 20), family="image"),
+    ExperimentSpec("I3", "correlated comm proportional to comp",
+                   uniform_comp(1, 20), correlated_comm(), family="image"),
+    ExperimentSpec("I4", "uniform wide-range comm/comp",
+                   uniform_comp(0.5, 50.0, integer=False),
+                   uniform_comm(0.5, 50.0, integer=False), family="image"),
+):
+    register_experiment(_spec)
+
+PAPER_FAMILIES = ("E1", "E2", "E3", "E4")
+IMAGE_FAMILIES = ("I1", "I2", "I3", "I4")
+FAMILY_SETS = {
+    "paper": PAPER_FAMILIES,
+    "image": IMAGE_FAMILIES,
+    "all": PAPER_FAMILIES + IMAGE_FAMILIES,
 }
 
 BANDWIDTH = 10.0
@@ -58,11 +201,19 @@ SPEED_LOW, SPEED_HIGH = 1, 20
 
 
 def gen_instance(exp: str, n: int, p: int, seed: int) -> tuple:
-    """One random (workload, platform) pair for experiment ``exp``."""
+    """One random (workload, platform) pair for family ``exp``.
+
+    Draw order (comp, then comm, then speeds) is part of the seed contract:
+    the E1-E4 streams are byte-identical to the original generators, so every
+    seeded campaign/golden CSV stays reproducible across the refactor.
+    """
     spec = EXPERIMENTS[exp]
     rng = np.random.default_rng(seed)
-    w = spec.gen_w(rng, n)
-    delta = spec.gen_delta(rng, n)
+    w = np.asarray(spec.comp(rng, n), dtype=float)
+    delta = np.asarray(spec.comm(rng, n, w), dtype=float)
+    if w.shape != (n,) or delta.shape != (n + 1,):
+        raise ValueError(f"family {exp!r} sampler shapes {w.shape}/{delta.shape}"
+                         f" do not match (n,)/(n+1,) for n={n}")
     s = rng.integers(SPEED_LOW, SPEED_HIGH + 1, p).astype(float)
     return (
         Workload(w, delta, name=f"{exp}-n{n}-seed{seed}"),

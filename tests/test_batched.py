@@ -1,17 +1,18 @@
-"""Batched campaign engine: bit-for-bit equivalence with the per-instance
-path, padding/convergence-mask behavior, and the campaign wiring."""
+"""Batched campaign engine: grouping/padding/convergence-mask behavior, the
+campaign wiring, and the fused engine's trace- and dispatch-count contracts.
 
-import math
+Cross-engine bit-identity (scalar vs numpy vs jax vs fused, for every
+scenario family) lives in tests/test_engine_equivalence.py — the differential
+harness subsumed the per-engine identity tests that used to sit here.
+"""
 
 import numpy as np
 import pytest
 
-from repro.core import make_platform, make_workload, optimal_latency, period
-from repro.core.batched import (batched_fixed_latency, batched_sp_bi_p,
-                                batched_trajectories, batched_trajectory_sets,
-                                stack_instances)
-from repro.core.heuristics import (sp_bi_l, sp_bi_p, sp_mono_l,
-                                   split_trajectory)
+from repro.core import make_platform, make_workload, period
+from repro.core.batched import (batched_sp_bi_p, batched_trajectories,
+                                batched_trajectory_sets, stack_instances)
+from repro.core.heuristics import split_trajectory
 from repro.core.metrics import single_processor_mapping
 from repro.sim import gen_instance_batch
 from repro.sim.experiments import (run_campaign, run_experiment,
@@ -19,25 +20,6 @@ from repro.sim.experiments import (run_campaign, run_experiment,
                                    summarize_replicated)
 
 SEEDS = range(7000, 7006)
-
-
-def _same_result(a, b):
-    return (a.mapping == b.mapping and a.period == b.period
-            and a.latency == b.latency and a.feasible == b.feasible
-            and a.splits == b.splits)
-
-
-@pytest.mark.parametrize("exp", ["E1", "E2", "E3", "E4"])
-@pytest.mark.parametrize("p", [10, 100])
-def test_trajectories_bitwise_equal(exp, p):
-    """Batched H1-H4 trajectories == per-instance split_trajectory, EXACTLY
-    (float equality, not approx), for every experiment family and both
-    paper processor counts."""
-    batch = gen_instance_batch(exp, 12, p, SEEDS)
-    for code in ("H1", "H2", "H3", "H4"):
-        bt = batched_trajectories(code, batch)
-        for i, (wl, pf) in enumerate(batch):
-            assert bt[i] == split_trajectory(code, wl, pf), (code, i)
 
 
 def test_trajectory_sets_group_codes():
@@ -49,51 +31,30 @@ def test_trajectory_sets_group_codes():
         assert grouped[code] == batched_trajectories(code, batch), code
 
 
-@pytest.mark.parametrize("exp", ["E1", "E2", "E3", "E4"])
-@pytest.mark.parametrize("p", [10, 100])
-def test_fixed_latency_bitwise_equal(exp, p):
-    """Batched H5/H6 == sp_mono_l/sp_bi_l per instance, with per-problem
-    bounds spanning infeasible (below L_opt) through exhaustion."""
-    batch = gen_instance_batch(exp, 12, p, SEEDS)
-    mults = [0.9, 1.0, 1.2, 1.6, 2.2, 3.0]
-    bounds = [optimal_latency(wl, pf) * m
-              for (wl, pf), m in zip(batch, mults)]
-    for code, fn in (("H5", sp_mono_l), ("H6", sp_bi_l)):
-        rs = batched_fixed_latency(code, batch, bounds)
-        for i, (wl, pf) in enumerate(batch):
-            assert _same_result(rs[i], fn(wl, pf, bounds[i])), (code, i)
-
-
-@pytest.mark.parametrize("exp", ["E2", "E4"])
-@pytest.mark.parametrize("p", [10, 100])
-def test_h4_binary_search_bitwise_equal(exp, p):
-    """The lockstep H4 binary search (all problems probed per bisection step)
-    == per-instance sp_bi_p, including infeasible bounds."""
-    batch = gen_instance_batch(exp, 10, p, SEEDS)
-    fracs = [0.05, 0.2, 0.4, 0.6, 0.8, 1.0]
-    bounds = [period(wl, pf, single_processor_mapping(wl, pf.fastest())) * f
-              for (wl, pf), f in zip(batch, fracs)]
-    rs = batched_sp_bi_p(batch, bounds, iters=8)
-    for i, (wl, pf) in enumerate(batch):
-        assert _same_result(rs[i], sp_bi_p(wl, pf, bounds[i], iters=8)), i
-
-
-def test_padding_mixed_convergence():
-    """A batch mixing an instance that converges immediately (no improving
-    split: every extra processor is uselessly slow) with one that splits many
-    times: per-problem masks must keep trajectories independent and padded
-    state must not leak across rows."""
+def _mixed_convergence_pairs():
     n = 12
     fast_flat = make_workload([10.0] * n, [0.0] * (n + 1))
     wl2 = make_workload(list(range(1, n + 1)), [5.0] * (n + 1))
     pf_stuck = make_platform([20.0] + [0.001] * 9, b=10.0)   # splitting never helps
     pf_rich = make_platform([20.0, 19.0, 18.0, 17.0, 16.0, 15.0, 14.0, 13.0,
                              12.0, 11.0], b=10.0)
-    pairs = [(fast_flat, pf_stuck), (fast_flat, pf_rich), (wl2, pf_stuck),
-             (wl2, pf_rich)]
+    return [(fast_flat, pf_stuck), (fast_flat, pf_rich), (wl2, pf_stuck),
+            (wl2, pf_rich)]
+
+
+@pytest.mark.parametrize("backend", ["numpy", "fused"])
+def test_padding_mixed_convergence(backend):
+    """A batch mixing an instance that converges immediately (no improving
+    split: every extra processor is uselessly slow) with one that splits many
+    times: per-problem masks must keep trajectories independent and padded
+    state must not leak across rows — in the numpy lockstep loop and inside
+    the traced fused loop alike."""
+    if backend == "fused":
+        pytest.importorskip("jax")
+    pairs = _mixed_convergence_pairs()
     pb = stack_instances(pairs)
     for code in ("H1", "H2", "H3", "H4"):
-        bt = batched_trajectories(code, pb)
+        bt = batched_trajectories(code, pb, backend=backend)
         lengths = [len(t) for t in bt]
         # stuck instances record only the initial state; rich ones split
         assert lengths[0] == 1 and lengths[2] == 1, (code, lengths)
@@ -112,20 +73,12 @@ def test_stack_instances_validates_shapes():
         stack_instances([])
 
 
-def test_run_experiment_engines_identical():
-    """The whole experiment harness (curves + thresholds + feasibility
-    fractions) is byte-identical between engines."""
-    for exp, n, p in (("E1", 5, 10), ("E2", 10, 10), ("E3", 8, 100)):
-        a = run_experiment(exp, n, p, n_pairs=5, n_bounds=5, engine="scalar")
-        b = run_experiment(exp, n, p, n_pairs=5, n_bounds=5, engine="batched")
-        assert summarize_experiment(a) == summarize_experiment(b), (exp, n, p)
-
-
 def test_run_campaign_matches_per_exp():
-    """Cross-family stacking (the 4 experiment families in one batch) changes
+    """Cross-family stacking (paper + image families in one batch) changes
     nothing about per-family results."""
-    camp = run_campaign(("E1", "E2", "E3", "E4"), 8, 10, n_pairs=4, n_bounds=4)
-    for exp in ("E1", "E2", "E3", "E4"):
+    exps = ("E1", "E2", "I2", "I4")
+    camp = run_campaign(exps, 8, 10, n_pairs=4, n_bounds=4)
+    for exp in exps:
         solo = run_experiment(exp, 8, 10, n_pairs=4, n_bounds=4, engine="scalar")
         assert summarize_experiment(solo) == summarize_experiment(camp[exp]), exp
 
@@ -138,77 +91,10 @@ def test_unknown_code_and_engine_raise():
         run_experiment("E1", 5, 5, n_pairs=2, n_bounds=3, engine="bogus")
 
 
-def test_jax_backend_agrees():
-    """The scoring kernels under jax.jit (x64) drive the same splits; with
-    the kernels' runtime-zero FMA guard the floats are bit-identical too."""
-    jax = pytest.importorskip("jax")
-    del jax
-    batch = gen_instance_batch("E2", 8, 6, range(3))
-    for code in ("H1", "H2", "H3", "H4"):
-        a = batched_trajectories(code, batch, backend="numpy")
-        b = batched_trajectories(code, batch, backend="jax")
-        assert a == b, code
-
-
 # ---------------------------------------------------------------------------
-# Fused device-resident engine (repro.core.fused): the whole lockstep loop
-# under one jit'd lax.while_loop, O(1) dispatches per (shape, arity).
+# Fused device-resident engine (repro.core.fused): the whole lockstep loop —
+# and the whole H4 bisection — under jit, O(1) dispatches per campaign.
 # ---------------------------------------------------------------------------
-
-
-@pytest.mark.parametrize("exp", ["E1", "E2", "E3", "E4"])
-@pytest.mark.parametrize("p", [10, 100])
-def test_fused_trajectories_identical(exp, p):
-    """Fused split trajectories == the numpy engine, EXACTLY (same splits AND
-    same floats — the FMA guard defeats XLA's contraction drift), for every
-    experiment family and both paper processor counts."""
-    pytest.importorskip("jax")
-    batch = gen_instance_batch(exp, 12, p, SEEDS)
-    for code in ("H1", "H2", "H3", "H4"):
-        assert (batched_trajectories(code, batch, backend="fused")
-                == batched_trajectories(code, batch, backend="numpy")), code
-
-
-def test_fused_fixed_latency_and_h4_ports():
-    """The H4-H6 bound-grid entry points run device-resident too: fused
-    batched_fixed_latency / batched_sp_bi_p == the scalar heuristics."""
-    pytest.importorskip("jax")
-    batch = gen_instance_batch("E2", 10, 10, SEEDS)
-    mults = [0.9, 1.0, 1.2, 1.6, 2.2, 3.0]
-    lbounds = [optimal_latency(wl, pf) * m for (wl, pf), m in zip(batch, mults)]
-    for code, fn in (("H5", sp_mono_l), ("H6", sp_bi_l)):
-        rs = batched_fixed_latency(code, batch, lbounds, backend="fused")
-        for i, (wl, pf) in enumerate(batch):
-            assert _same_result(rs[i], fn(wl, pf, lbounds[i])), (code, i)
-    fracs = [0.05, 0.2, 0.4, 0.6, 0.8, 1.0]
-    pbounds = [period(wl, pf, single_processor_mapping(wl, pf.fastest())) * f
-               for (wl, pf), f in zip(batch, fracs)]
-    rs = batched_sp_bi_p(batch, pbounds, iters=8, backend="fused")
-    for i, (wl, pf) in enumerate(batch):
-        assert _same_result(rs[i], sp_bi_p(wl, pf, pbounds[i], iters=8)), i
-
-
-def test_fused_padding_mixed_convergence():
-    """Inside the traced loop, converged rows must sit inert (masked) while
-    other rows keep splitting: mix an immediately-stuck instance with rich
-    ones and require per-row trajectories identical to the scalar path."""
-    pytest.importorskip("jax")
-    n = 12
-    fast_flat = make_workload([10.0] * n, [0.0] * (n + 1))
-    wl2 = make_workload(list(range(1, n + 1)), [5.0] * (n + 1))
-    pf_stuck = make_platform([20.0] + [0.001] * 9, b=10.0)
-    pf_rich = make_platform([20.0, 19.0, 18.0, 17.0, 16.0, 15.0, 14.0, 13.0,
-                             12.0, 11.0], b=10.0)
-    pairs = [(fast_flat, pf_stuck), (fast_flat, pf_rich), (wl2, pf_stuck),
-             (wl2, pf_rich)]
-    pb = stack_instances(pairs)
-    for code in ("H1", "H2", "H3", "H4"):
-        bt = batched_trajectories(code, pb, backend="fused")
-        lengths = [len(t) for t in bt]
-        assert lengths[0] == 1 and lengths[2] == 1, (code, lengths)
-        assert lengths[1] > 1 and lengths[3] > 1, (code, lengths)
-        for i, (wl, pf) in enumerate(pairs):
-            assert bt[i] == split_trajectory(code, wl, pf), (code, i)
 
 
 def test_fused_large_grid_smoke():
@@ -223,34 +109,74 @@ def test_fused_large_grid_smoke():
 
 
 def test_fused_trace_count_per_campaign():
-    """The O(1)-dispatch contract: a whole campaign (trajectories for H1-H4,
-    the lockstep H4 bisection, H5/H6 over the bound grid) compiles at most 2
-    fused-loop traces — one per split arity — and a rerun of the same shapes
-    compiles none."""
+    """The O(1)-trace contract: a whole campaign (trajectories for H1-H4, the
+    fused-scan H4 bisection, H5/H6 over the bound grid) compiles at most 3
+    fused programs — one lockstep loop per split arity plus one bisection
+    scan — and a rerun of the same shapes compiles none."""
     pytest.importorskip("jax")
     from repro.core import fused
 
-    # a shape no other test uses, so the lru-cached loops are cold
+    # a shape no other test uses, so the lru-cached programs are cold
     kw = dict(n_pairs=3, n_bounds=5, h4_iters=4, include_h4=True)
     fused.reset_trace_count()
-    camp = run_campaign(("E1", "E2"), 9, 7, backend="fused", **kw)
-    assert fused.trace_count() <= 2
+    camp = run_campaign(("E1", "I2"), 9, 7, backend="fused", **kw)
+    assert fused.trace_count() <= 3
     fused.reset_trace_count()
-    camp2 = run_campaign(("E1", "E2"), 9, 7, backend="fused", **kw)
+    camp2 = run_campaign(("E1", "I2"), 9, 7, backend="fused", **kw)
     assert fused.trace_count() == 0  # warm: dispatches only, no re-trace
-    for exp in ("E1", "E2"):
+    for exp in ("E1", "I2"):
         assert summarize_experiment(camp[exp]) == summarize_experiment(camp2[exp])
         solo = run_experiment(exp, 9, 7, engine="scalar", **kw)
         assert summarize_experiment(solo) == summarize_experiment(camp[exp]), exp
 
 
-def test_fused_campaign_engine_byte_identical():
-    """run_experiment(engine='fused') reproduces the scalar harness output
-    byte-for-byte, including curves, thresholds, and feasibility fractions."""
+def test_fused_h4_bisection_dispatch_count():
+    """The fused ``lax.scan`` bisection runs a whole H4 campaign in ONE
+    dispatch per row-chunk — independent of the iteration count — where the
+    host-driven probe loop pays ~iters+1.  Outputs are identical."""
     pytest.importorskip("jax")
-    a = run_experiment("E4", 10, 10, n_pairs=5, n_bounds=5, engine="scalar")
-    b = run_experiment("E4", 10, 10, n_pairs=5, n_bounds=5, engine="fused")
-    assert summarize_experiment(a) == summarize_experiment(b)
+    from repro.core import batched, fused
+
+    batch = gen_instance_batch("E2", 10, 10, SEEDS)
+    pb = batched._as_problem_batch(batch)
+    fracs = [0.05, 0.2, 0.4, 0.6, 0.8, 1.0]
+    bounds = np.array(
+        [period(wl, pf, single_processor_mapping(wl, pf.fastest())) * f
+         for (wl, pf), f in zip(batch, fracs)])
+    for iters in (4, 8):
+        fused.reset_dispatch_count()
+        rs_scan = batched_sp_bi_p(pb, bounds, iters=iters, backend="fused")
+        d_scan = fused.dispatch_count()
+        assert d_scan == 1, d_scan  # one chunk, any iteration count
+
+        # PR-3 style host-driven bisection: _run_loop(fused) per probe
+        lo, hi = batched.h4_search_bounds(pb)
+        fused.reset_dispatch_count()
+        rs_loop = batched._sp_bi_p_rowwise(pb, bounds, iters, "fused",
+                                           lo, hi, True)
+        d_loop = fused.dispatch_count()
+        assert d_loop >= iters  # one dispatch per probe (early-exit aside)
+        assert d_loop >= 2 * d_scan
+        for a, b in zip(rs_scan, rs_loop):
+            assert (a.mapping == b.mapping and a.period == b.period
+                    and a.latency == b.latency and a.feasible == b.feasible
+                    and a.splits == b.splits)
+
+
+def test_fused_campaign_dispatches_constant_in_iterations():
+    """Whole-campaign dispatch count must not scale with h4_iters: the
+    bisection is the only iteration-dependent phase and it is now fused."""
+    pytest.importorskip("jax")
+    from repro.core import fused
+
+    kw = dict(n_pairs=3, n_bounds=4, include_h4=True)
+    counts = {}
+    for iters in (4, 16):
+        run_campaign(("E2",), 8, 6, backend="fused", h4_iters=iters, **kw)
+        fused.reset_dispatch_count()
+        run_campaign(("E2",), 8, 6, backend="fused", h4_iters=iters, **kw)
+        counts[iters] = fused.dispatch_count()
+    assert counts[4] == counts[16], counts
 
 
 def test_replicated_campaign_cis():

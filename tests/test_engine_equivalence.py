@@ -1,0 +1,119 @@
+"""Cross-engine differential harness: every scenario family through every
+engine, bit-identical.
+
+This is the safety net behind the engine stack: for EVERY family registered
+in ``repro.sim.EXPERIMENTS`` (the paper's E1-E4 and the image-processing
+study's I1-I4 — plus anything added via ``register_experiment``, which these
+tests pick up automatically) and both paper processor counts, the scalar
+per-instance path, the numpy lockstep engine, the ``backend="jax"`` kernels,
+and the fully-fused ``backend="fused"`` engine must produce EXACTLY the same
+floats (==, not approx) for:
+
+  - H1-H4 split trajectories (the campaign sweep primitive),
+  - the H4 binary search (including the new fused ``lax.scan`` bisection),
+  - H5/H6 fixed-latency solves over bound grids spanning infeasible through
+    exhaustion.
+
+The numpy engine is the contractual reference; the scalar path anchors it to
+the readable per-instance implementation.
+"""
+
+import pytest
+
+from repro.core import optimal_latency, period
+from repro.core.batched import (batched_fixed_latency, batched_sp_bi_p,
+                                batched_trajectories)
+from repro.core.heuristics import (sp_bi_l, sp_bi_p, sp_mono_l,
+                                   split_trajectory)
+from repro.core.metrics import single_processor_mapping
+from repro.sim import EXPERIMENTS, gen_instance_batch
+from repro.sim.experiments import run_experiment, summarize_experiment
+
+FAMILIES = tuple(EXPERIMENTS)
+SEEDS = range(7100, 7106)
+N_STAGES = 12
+
+
+def _jax_backends():
+    try:
+        import jax  # noqa: F401
+    except Exception:  # pragma: no cover - jax is baked into the image
+        return ()
+    return ("jax", "fused")
+
+
+ENGINE_BACKENDS = ("numpy",) + _jax_backends()
+
+
+def _same_result(a, b):
+    return (a.mapping == b.mapping and a.period == b.period
+            and a.latency == b.latency and a.feasible == b.feasible
+            and a.splits == b.splits)
+
+
+@pytest.mark.parametrize("p", [10, 100])
+@pytest.mark.parametrize("exp", FAMILIES)
+def test_trajectories_all_engines_identical(exp, p):
+    """H1-H4 trajectories: scalar == numpy == jax == fused, exactly."""
+    batch = gen_instance_batch(exp, N_STAGES, p, SEEDS)
+    for code in ("H1", "H2", "H3", "H4"):
+        ref = [split_trajectory(code, wl, pf) for wl, pf in batch]
+        for backend in ENGINE_BACKENDS:
+            got = batched_trajectories(code, batch, backend=backend)
+            assert got == ref, (code, backend)
+
+
+@pytest.mark.parametrize("p", [10, 100])
+@pytest.mark.parametrize("exp", FAMILIES)
+def test_h4_bisection_all_engines_identical(exp, p):
+    """The H4 binary search — host probe loops (numpy/jax) and the fused
+    single-dispatch ``lax.scan`` bisection — equals per-instance ``sp_bi_p``
+    on bounds spanning infeasible through trivially feasible."""
+    batch = gen_instance_batch(exp, 10, p, SEEDS)
+    fracs = [0.05, 0.2, 0.4, 0.6, 0.8, 1.0]
+    bounds = [period(wl, pf, single_processor_mapping(wl, pf.fastest())) * f
+              for (wl, pf), f in zip(batch, fracs)]
+    refs = [sp_bi_p(wl, pf, bounds[i], iters=8)
+            for i, (wl, pf) in enumerate(batch)]
+    for backend in ENGINE_BACKENDS:
+        rs = batched_sp_bi_p(batch, bounds, iters=8, backend=backend)
+        for i, ref in enumerate(refs):
+            assert _same_result(rs[i], ref), (backend, i)
+        # metrics-only path (what campaigns use): same floats, no mappings
+        rs_m = batched_sp_bi_p(batch, bounds, iters=8, backend=backend,
+                               with_mappings=False,
+                               groups=list(range(len(bounds))))
+        for i, ref in enumerate(refs):
+            assert rs_m[i].mapping is None
+            assert (rs_m[i].period, rs_m[i].latency, rs_m[i].feasible,
+                    rs_m[i].splits) == (ref.period, ref.latency, ref.feasible,
+                                        ref.splits), (backend, i)
+
+
+@pytest.mark.parametrize("p", [10, 100])
+@pytest.mark.parametrize("exp", FAMILIES)
+def test_fixed_latency_all_engines_identical(exp, p):
+    """H5/H6 over a bound grid spanning infeasible (below L_opt) through
+    exhaustion: every engine equals per-instance ``sp_mono_l``/``sp_bi_l``."""
+    batch = gen_instance_batch(exp, N_STAGES, p, SEEDS)
+    mults = [0.9, 1.0, 1.2, 1.6, 2.2, 3.0]
+    bounds = [optimal_latency(wl, pf) * m
+              for (wl, pf), m in zip(batch, mults)]
+    for code, fn in (("H5", sp_mono_l), ("H6", sp_bi_l)):
+        refs = [fn(wl, pf, bounds[i]) for i, (wl, pf) in enumerate(batch)]
+        for backend in ENGINE_BACKENDS:
+            rs = batched_fixed_latency(code, batch, bounds, backend=backend)
+            for i, ref in enumerate(refs):
+                assert _same_result(rs[i], ref), (code, backend, i)
+
+
+@pytest.mark.parametrize("exp", ["E2", "I1", "I3"])
+def test_campaign_harness_engines_identical(exp):
+    """The whole experiment harness (curves + thresholds + feasibility
+    fractions) is byte-identical across engines, image families included."""
+    engines = ("scalar", "batched") + (("fused",) if _jax_backends() else ())
+    outs = [summarize_experiment(run_experiment(exp, 8, 10, n_pairs=4,
+                                                n_bounds=4, engine=e))
+            for e in engines]
+    for got in outs[1:]:
+        assert got == outs[0], exp

@@ -1,0 +1,193 @@
+"""Property-based tests for engine invariants.
+
+Uses hypothesis when installed (CI does); falls back to a seeded random
+sweep otherwise so the invariants are exercised in every environment.  Each
+invariant is a plain checker over a random instance:
+
+  - splitting never increases the period (and never decreases the latency —
+    enrolled processors are speed-sorted, so every split trades latency for
+    period), for all of H1-H4;
+  - H4's returned result is minimal over its probe set (the binary search
+    never returns a probe dominated by another probe it made);
+  - Pareto fronts are non-dominated and anchored at the optimal latency
+    (Lemma 1: all-on-fastest);
+  - padding a batch with already-converged rows never changes the converged
+    outputs (per-row masks in the numpy lockstep loop and chunk padding in
+    the fused traced loop alike).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import make_platform, make_workload, optimal_latency
+from repro.core.batched import batched_trajectories
+from repro.core.heuristics import _EPS, split_trajectory
+from repro.sim.generators import SPEED_HIGH, SPEED_LOW
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - hypothesis is installed in CI
+    HAVE_HYPOTHESIS = False
+
+N_FALLBACK_SEEDS = 16
+
+
+def _draw_instance(rng, n_max=10, p_max=8):
+    n = int(rng.integers(2, n_max + 1))
+    p = int(rng.integers(2, p_max + 1))
+    w = rng.uniform(0.1, 100.0, n)
+    delta = rng.uniform(0.0, 100.0, n + 1)
+    s = rng.uniform(0.5, 20.0, p)
+    b = float(rng.uniform(0.5, 50.0))
+    return make_workload(w, delta), make_platform(s, b)
+
+
+def instance_property(f):
+    """Run ``f(workload, platform)`` over random instances: hypothesis-driven
+    when available, a fixed seeded sweep otherwise."""
+    if HAVE_HYPOTHESIS:
+        @st.composite
+        def instances(draw):
+            n = draw(st.integers(2, 10))
+            p = draw(st.integers(2, 8))
+            w = draw(st.lists(st.floats(0.1, 100), min_size=n, max_size=n))
+            delta = draw(st.lists(st.floats(0.0, 100), min_size=n + 1,
+                                  max_size=n + 1))
+            s = draw(st.lists(st.floats(0.5, 20), min_size=p, max_size=p))
+            b = draw(st.floats(0.5, 50))
+            return make_workload(w, delta), make_platform(s, b)
+
+        @settings(max_examples=20, deadline=None)
+        @given(instances())
+        def wrapper(inst):
+            f(*inst)
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+    @pytest.mark.parametrize("seed", range(N_FALLBACK_SEEDS))
+    def wrapper(seed):
+        f(*_draw_instance(np.random.default_rng(seed)))
+    wrapper.__name__ = f.__name__
+    wrapper.__doc__ = f.__doc__
+    return wrapper
+
+
+@instance_property
+def test_splitting_never_increases_period(wl, pf):
+    """Every accepted split lowers (or keeps) the period and raises (or
+    keeps) the latency: trajectories are monotone, anchored at the optimal
+    latency."""
+    l_opt = optimal_latency(wl, pf)
+    for code in ("H1", "H2", "H3", "H4"):
+        traj = split_trajectory(code, wl, pf)
+        assert traj[0][1] == pytest.approx(l_opt, rel=1e-9), code
+        for (p0, l0), (p1, l1) in zip(traj, traj[1:]):
+            assert p1 <= p0 + 1e-9 * max(1.0, abs(p0)), code
+            assert l1 >= l0 - 1e-9 * max(1.0, abs(l0)), code
+
+
+@instance_property
+def test_h4_result_minimal_over_probe_set(wl, pf):
+    """sp_bi_p returns a probe from its own probe set, with minimal latency
+    among the feasible probes (and no feasible probe beats it on period at
+    an eps-tied latency)."""
+    import repro.core.heuristics as H
+
+    traj = split_trajectory("H4", wl, pf)
+    p_fix = 0.6 * traj[0][0] + 0.4 * min(per for per, _ in traj)
+    probes = []
+    orig = H._bi_split_under_latency
+
+    def recording(workload, platform, bound, lat_limit):
+        r = orig(workload, platform, bound, lat_limit)
+        probes.append(r)
+        return r
+
+    H._bi_split_under_latency = recording
+    try:
+        res = H.sp_bi_p(wl, pf, p_fix, iters=8)
+    finally:
+        H._bi_split_under_latency = orig
+    assert probes, "binary search made no probes"
+    if not res.feasible:
+        assert not probes[0].feasible
+        return
+    feas = [pr for pr in probes if pr.feasible]
+    assert any(pr.period == res.period and pr.latency == res.latency
+               and pr.splits == res.splits for pr in feas)
+    assert res.period <= p_fix + _EPS
+    for pr in feas:
+        assert res.latency <= pr.latency + _EPS
+        if abs(res.latency - pr.latency) <= _EPS:
+            assert res.period <= pr.period + _EPS
+
+
+@instance_property
+def test_pareto_front_nondominated_and_anchored(wl, pf):
+    """plan_pareto's achieved front has no dominated points and is anchored
+    at the optimal latency (Lemma 1: the all-on-fastest mapping)."""
+    from repro.core import plan_pareto
+
+    report = plan_pareto(wl, pf, k=6, exclude=("brute-force",))
+    front = report.pareto
+    assert front, "empty front"
+    for a in front:
+        for b in front:
+            assert not (b[0] < a[0] * (1 - 1e-9) and b[1] < a[1] * (1 - 1e-9))
+    l_opt = optimal_latency(wl, pf)
+    assert min(lat for _, lat in front) == pytest.approx(l_opt, rel=1e-9)
+
+
+def _fixed_shape_instance(rng, n=12, p=10):
+    w = rng.uniform(0.5, 100.0, n)
+    delta = rng.uniform(0.0, 100.0, n + 1)
+    s = rng.integers(SPEED_LOW, SPEED_HIGH + 1, p).astype(float)
+    return make_workload(w, delta), make_platform(s, 10.0)
+
+
+def fixed_shape_property(f):
+    """Like :func:`instance_property` but with a FIXED (n, p) = (12, 10)
+    shape, so the fused engine reuses one trace across all examples."""
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=10, deadline=None)
+        @given(st.integers(0, 2 ** 31 - 1))
+        def wrapper(seed):
+            f(*_fixed_shape_instance(np.random.default_rng(seed)))
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+    @pytest.mark.parametrize("seed", range(8))
+    def wrapper(seed):
+        f(*_fixed_shape_instance(np.random.default_rng(seed)))
+    wrapper.__name__ = f.__name__
+    wrapper.__doc__ = f.__doc__
+    return wrapper
+
+
+def _engine_backends():
+    try:
+        import jax  # noqa: F401
+    except Exception:  # pragma: no cover - jax is baked into the image
+        return ("numpy",)
+    return ("numpy", "fused")
+
+
+@fixed_shape_property
+def test_padding_with_converged_rows_is_inert(wl, pf):
+    """Batching an instance together with rows that converge immediately
+    (a flat workload on a platform whose extra processors are uselessly
+    slow) must not change the instance's trajectories in any engine."""
+    n, p = wl.n, pf.p
+    stuck_wl = make_workload([10.0] * n, [0.0] * (n + 1))
+    stuck_pf = make_platform([20.0] + [0.001] * (p - 1), b=10.0)
+    solo = [(wl, pf)]
+    padded = [(stuck_wl, stuck_pf), (wl, pf), (stuck_wl, stuck_pf)]
+    for backend in _engine_backends():
+        for code in ("H1", "H2", "H3", "H4"):
+            ref = batched_trajectories(code, solo, backend=backend)[0]
+            got = batched_trajectories(code, padded, backend=backend)
+            assert got[1] == ref, (backend, code)
+            assert len(got[0]) == 1 and len(got[2]) == 1, (backend, code)

@@ -1,0 +1,54 @@
+"""Golden-file regression: the paper_sim CSV pipeline, byte-for-byte.
+
+A small-grid run of the REAL ``benchmarks/paper_sim.run()`` pipeline (all
+eight scenario families, n=5, p=10, 3 pairs) is checked in under
+``tests/golden/paper_sim/``; every engine must reproduce those files
+byte-identically.  Any CSV schema change, tie-break drift, generator stream
+change, or cross-engine divergence fails tier-1 here instead of only
+surfacing in CI artifact diffs.
+
+Regenerate (after an INTENTIONAL output change — state it in the PR):
+
+    PYTHONPATH=src:benchmarks python - <<'EOF'
+    import pathlib, paper_sim
+    paper_sim.run(out_dir=pathlib.Path("tests/golden/paper_sim"),
+                  engine="scalar", families="all", ns=(5,), ps=(10,),
+                  n_pairs=3, n_bounds=4)
+    EOF
+"""
+
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+GOLDEN = REPO / "tests" / "golden" / "paper_sim"
+
+sys.path.insert(0, str(REPO / "benchmarks"))
+import paper_sim  # noqa: E402
+
+
+def _engines():
+    engines = ["scalar", "batched"]
+    try:
+        import jax  # noqa: F401
+        engines.append("fused")
+    except Exception:  # pragma: no cover - jax is baked into the image
+        pass
+    return engines
+
+
+@pytest.mark.parametrize("engine", _engines())
+def test_paper_sim_csvs_match_golden(engine, tmp_path):
+    out = tmp_path / engine
+    res = paper_sim.run(out_dir=out, engine=engine, families="all",
+                        ns=(5,), ps=(10,), n_pairs=3, n_bounds=4)
+    assert all(c.startswith("[PASS]") for c in res["claims"]), res["claims"]
+    golden_files = sorted(f.name for f in GOLDEN.iterdir())
+    assert golden_files, "golden set missing"
+    got_files = sorted(f.name for f in out.iterdir())
+    assert got_files == golden_files
+    for name in golden_files:
+        assert (out / name).read_bytes() == (GOLDEN / name).read_bytes(), \
+            (engine, name)

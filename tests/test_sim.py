@@ -1,9 +1,14 @@
-"""Simulation-harness correctness + qualitative reproduction of paper claims."""
+"""Simulation-harness correctness + qualitative reproduction of paper claims,
+and the scenario-family registry (samplers, registration, family sets)."""
 
 import numpy as np
 import pytest
 
-from repro.sim import EXPERIMENTS, failure_thresholds, gen_instance, run_experiment
+from repro.sim import (EXPERIMENTS, FAMILY_SETS, IMAGE_FAMILIES,
+                       PAPER_FAMILIES, ExperimentSpec, failure_thresholds,
+                       gen_instance, register_experiment, run_experiment)
+from repro.sim.generators import (JPEG_COMP, JPEG_OUT, bimodal_comp,
+                                  correlated_comm, uniform_comp)
 
 
 def test_generator_ranges():
@@ -12,12 +17,72 @@ def test_generator_ranges():
         assert wl.n == 20 and pf.p == 10
         assert pf.b == 10.0
         assert (1 <= pf.s).all() and (pf.s <= 20).all()
+        assert (wl.w > 0).all() and (wl.delta >= 0).all()
     wl, _ = gen_instance("E1", 10, 10, 0)
     assert (wl.delta == 10.0).all()
     wl, _ = gen_instance("E3", 10, 10, 0)
     assert wl.w.min() >= 10 and wl.w.max() <= 1000
     wl, _ = gen_instance("E4", 10, 10, 0)
     assert wl.w.max() <= 10.0
+
+
+def test_family_sets_cover_registry():
+    assert set(PAPER_FAMILIES) == {"E1", "E2", "E3", "E4"}
+    assert set(IMAGE_FAMILIES) == {"I1", "I2", "I3", "I4"}
+    assert set(FAMILY_SETS["all"]) <= set(EXPERIMENTS)
+    for exp in PAPER_FAMILIES:
+        assert EXPERIMENTS[exp].family == "paper"
+    for exp in IMAGE_FAMILIES:
+        assert EXPERIMENTS[exp].family == "image"
+
+
+def test_image_family_structure():
+    """I1 tiles the JPEG profile (jitter <= 20%); I3 correlates comm with the
+    adjacent stages' work."""
+    wl, _ = gen_instance("I1", 21, 10, seed=3)
+    base = JPEG_COMP[np.arange(21) % len(JPEG_COMP)]
+    assert (np.abs(wl.w / base - 1.0) <= 0.2 + 1e-12).all()
+    out = JPEG_OUT[np.arange(21) % len(JPEG_OUT)]
+    assert (np.abs(wl.delta[1:] / out - 1.0) <= 0.2 + 1e-12).all()
+    wl, _ = gen_instance("I3", 30, 10, seed=3)
+    wpad = np.concatenate([wl.w[:1], wl.w, wl.w[-1:]])
+    adj = 0.5 * (wpad[:-1] + wpad[1:])
+    ratio = wl.delta / adj
+    assert (ratio >= 0.5 - 1e-12).all() and (ratio <= 1.5 + 1e-12).all()
+
+
+def test_register_experiment_flows_through():
+    """A custom family registered at runtime generates instances and runs
+    through the campaign harness like a built-in one."""
+    name = "XTEST"
+    register_experiment(ExperimentSpec(
+        name, "custom bursty family",
+        comp=bimodal_comp(light=(1, 2), heavy=(20, 40), heavy_frac=0.5),
+        comm=correlated_comm(rho=0.5), family="custom"))
+    try:
+        wl, pf = gen_instance(name, 8, 6, seed=1)
+        assert wl.n == 8 and pf.p == 6
+        res = run_experiment(name, 6, 6, n_pairs=2, n_bounds=3)
+        assert set(res.curves) == {"H1", "H2", "H3", "H4", "H5", "H6"}
+        # duplicate names are rejected (the built-ins' random streams are
+        # part of the seed contract) unless explicitly overridden
+        with pytest.raises(ValueError):
+            register_experiment(EXPERIMENTS[name])
+        register_experiment(EXPERIMENTS[name], override=True)
+    finally:
+        del EXPERIMENTS[name]
+
+
+def test_bad_sampler_shape_raises():
+    name = "XBAD"
+    register_experiment(ExperimentSpec(
+        name, "wrong comm shape",
+        comp=uniform_comp(1, 5), comm=lambda rng, n, w: np.ones(n)))
+    try:
+        with pytest.raises(ValueError):
+            gen_instance(name, 5, 4, seed=0)
+    finally:
+        del EXPERIMENTS[name]
 
 
 def test_generator_determinism():
