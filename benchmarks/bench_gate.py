@@ -1,0 +1,150 @@
+"""CI perf-regression gate over BENCH_planner.json's structured fields.
+
+``planner_bench.py`` writes every row with machine-readable fields (numeric
+speedups, dispatch counts, cache deltas) next to the human ``derived``
+string; this gate turns those into hard CI failures:
+
+  1. **Row presence** — the campaign/fused/bucketed/h4scan/image/deal/
+     split-score rows that later PRs are not allowed to silently drop.
+  2. **Dispatch contract** — the fused H4 ``lax.scan`` bisection must report
+     ``dispatches == 1`` (one dispatch per row-chunk for the WHOLE binary
+     search; the row's B fits one chunk).
+  3. **Within-run engine ordering** — the fused engine (warm) must beat the
+     scalar reference, and the span-bucketed fused warm path must stay
+     within a small factor of numpy-batched on every campaign row (the
+     static-grid tax this PR removed would show up here as a multiple).
+  4. **Bucket-trace cap** — large-grid rows record their bucket-trace count;
+     it must stay within the O(log n) budget they also record.
+  5. **Cross-run regression** (optional ``--baseline``) — when a baseline
+     BENCH_planner.json of the SAME ``_meta.mode`` is given, warm fused
+     rows must not regress more than ``--tolerance`` (default 1.6x, absorbing
+     runner noise).  Different modes (quick CI vs full local) skip this
+     check — their row names collide but measure different workloads.
+
+    PYTHONPATH=src python benchmarks/bench_gate.py [--baseline OLD.json]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+REQUIRED_PREFIXES = (
+    "campaign_batched_",
+    "campaign_fused_",
+    "campaign_fused_h4scan_",
+    "campaign_fused_bucketed_warm_",
+    "campaign_fused_bucketed_cold_nocache_",
+    "campaign_fused_bucketed_cold_cache_",
+    "image_family_",
+    "deal_enum_batched",
+    "split_score_2way_pallas_",
+    "split_score_3way_pallas_",
+)
+
+# warm span-bucketed fused may trail numpy-batched by at most this factor on
+# CPU (measured ~1.0-1.3x either way; the pre-bucketing tax was 2.5-10x)
+FUSED_VS_BATCHED_FLOOR = 0.4
+
+
+def _fail(msgs: list, msg: str) -> None:
+    msgs.append(msg)
+
+
+def check(bench: dict, baseline: dict = None, tolerance: float = 1.6) -> list:
+    """Return a list of failure strings (empty = gate passes)."""
+    fails: list = []
+    rows = {k: v for k, v in bench.items() if not k.startswith("_")}
+
+    # 1. row presence
+    for prefix in REQUIRED_PREFIXES:
+        if not any(k.startswith(prefix) for k in rows):
+            _fail(fails, f"missing benchmark row with prefix {prefix!r}")
+
+    # 2. fused H4 bisection: one dispatch for the whole binary search
+    for k, v in rows.items():
+        if k.startswith("campaign_fused_h4scan_"):
+            if v.get("dispatches") != 1:
+                _fail(fails, f"{k}: dispatches={v.get('dispatches')!r}, "
+                             "expected 1 (fused-bisection O(1) contract)")
+
+    # 3. within-run engine ordering
+    for k, v in rows.items():
+        if (k.startswith(("campaign_fused_", "image_family_fused_"))
+                and "speedup_vs_scalar" in v):
+            if v["speedup_vs_scalar"] < 1.0:
+                _fail(fails, f"{k}: fused warm slower than the scalar "
+                             f"reference (speedup_vs_scalar="
+                             f"{v['speedup_vs_scalar']:.2f})")
+        if "vs_batched" in v and v["vs_batched"] < FUSED_VS_BATCHED_FLOOR:
+            _fail(fails, f"{k}: fused warm is {1 / v['vs_batched']:.1f}x "
+                         f"slower than numpy-batched (floor "
+                         f"{FUSED_VS_BATCHED_FLOOR}x) — static-grid-tax "
+                         "regression")
+
+    # 4. bucket-trace cap on rows that record it
+    for k, v in rows.items():
+        if "bucket_traces" in v and "bucket_trace_budget" in v:
+            if v["bucket_traces"] > v["bucket_trace_budget"]:
+                _fail(fails, f"{k}: bucket_traces={v['bucket_traces']} "
+                             f"exceeds O(log n) budget "
+                             f"{v['bucket_trace_budget']}")
+
+    # 5. cross-run regression vs a same-mode baseline
+    if baseline is not None:
+        mode = bench.get("_meta", {}).get("mode")
+        base_mode = baseline.get("_meta", {}).get("mode")
+        if mode != base_mode:
+            print(f"bench_gate: baseline mode {base_mode!r} != current "
+                  f"{mode!r}; skipping cross-run comparison")
+        else:
+            for k, v in rows.items():
+                if not (k.startswith("campaign_fused_")
+                        or k.startswith("image_family_fused_")):
+                    continue
+                if "cold" in k or k not in baseline:
+                    continue
+                old, new = baseline[k].get("us_per_call"), v.get("us_per_call")
+                if old and new and new > old * tolerance:
+                    _fail(fails, f"{k}: warm {new / 1e6:.2f}s vs baseline "
+                                 f"{old / 1e6:.2f}s (> {tolerance}x)")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bench", default=str(REPO_ROOT / "BENCH_planner.json"))
+    ap.add_argument("--baseline", default=None,
+                    help="previous BENCH_planner.json to gate warm fused "
+                         "rows against (same _meta.mode only)")
+    ap.add_argument("--tolerance", type=float, default=1.6)
+    args = ap.parse_args()
+    bench = json.loads(pathlib.Path(args.bench).read_text())
+    baseline = (json.loads(pathlib.Path(args.baseline).read_text())
+                if args.baseline else None)
+    fails = check(bench, baseline, args.tolerance)
+    for k in sorted(bench):
+        if k.startswith("_"):
+            continue
+        v = bench[k]
+        extras = {f: v[f] for f in ("speedup_vs_scalar", "vs_batched",
+                                    "dispatches", "bucket_traces",
+                                    "cache_speedup", "vs_numpy")
+                  if f in v}
+        if extras:
+            print(f"  {k}: {extras}")
+    if fails:
+        print("\nbench_gate FAILURES:")
+        for f in fails:
+            print(f"  - {f}")
+        return 1
+    print("\nbench_gate: all checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

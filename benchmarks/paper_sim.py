@@ -20,10 +20,14 @@ Engines: ``--engine batched`` (default) runs the whole study through the
 stacked-instance campaign engine (one lockstep pass over all four experiment
 families per (n, p) point — see ``repro.core.batched``); ``--engine fused``
 compiles every lockstep loop into a single ``jax.jit`` ``lax.while_loop``
-(``repro.core.fused``, O(1) host dispatches per heuristic arity — the engine
-for accelerators and the large-grid/replication sweeps); ``--engine scalar``
-uses the per-instance reference path.  All engines produce byte-identical
+(``repro.core.fused``, O(1) host dispatches per heuristic arity with
+span-bucketed candidate grids — the engine for accelerators);
+``--engine scalar`` uses the per-instance reference path; ``--engine auto``
+picks batched/fused per (n, p) point from the measured crossover table
+(``repro.sim.experiments.auto_engine``).  All engines produce byte-identical
 CSVs (the fused engine carries an FMA guard so even its floats match).
+Fused-program compiles land in JAX's persistent compilation cache, so cold
+starts are paid once per machine.
 """
 
 from __future__ import annotations
@@ -34,11 +38,12 @@ import time
 
 import numpy as np
 
+from repro.core.fused import enable_persistent_cache, fused_available
 from repro.sim import FAMILY_SETS, PAPER_FAMILIES, run_experiment
 from repro.sim.experiments import (N_PROCS_LARGE, N_STAGES_LARGE,
-                                   _campaign_backend, run_campaign,
-                                   run_replicated, summarize_experiment,
-                                   summarize_replicated)
+                                   _campaign_backend, _resolve_engine,
+                                   run_campaign, run_replicated,
+                                   summarize_experiment, summarize_replicated)
 
 OUT = pathlib.Path(__file__).resolve().parent.parent / "results" / "paper_sim"
 
@@ -48,7 +53,10 @@ HEURISTICS = ("H1", "H2", "H3", "H4", "H5", "H6")
 def _run_point(exps, n, p, n_pairs, n_bounds, include_h4, engine, backend,
                replications):
     """One (n, p) grid point through the selected engine; returns
-    (single-bank {exp: ExperimentResult}, {exp: ReplicatedResult} or None)."""
+    (single-bank {exp: ExperimentResult}, {exp: ReplicatedResult} or None).
+    ``engine="auto"`` resolves per point from the measured crossover table
+    (``repro.sim.experiments.auto_engine``)."""
+    engine = _resolve_engine(engine, n, p)
     if replications > 1:
         rep, first = run_replicated(exps, n, p, n_pairs=n_pairs,
                                     replications=replications,
@@ -202,8 +210,11 @@ def _check_claims(exps, ns, ps, results, thr) -> list:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--engine", choices=("batched", "fused", "scalar"),
-                    default="batched")
+    ap.add_argument("--engine", choices=("batched", "fused", "scalar", "auto"),
+                    default="batched",
+                    help="campaign engine; 'auto' picks scalar/batched/fused "
+                         "per (n, p) from the measured crossover table "
+                         "(README: engine selection)")
     ap.add_argument("--backend", choices=("numpy", "jax"), default="numpy",
                     help="array backend for the batched engine's scoring "
                          "kernels (ignored by --engine fused, which is "
@@ -221,6 +232,10 @@ def main() -> None:
     ap.add_argument("--large-pairs", type=int, default=6,
                     help="instance pairs per large-grid point (default 6)")
     args = ap.parse_args()
+    if fused_available():
+        # CLI runs amortize fused compiles across processes; library callers
+        # of run() (e.g. the golden-file tests) stay side-effect-free
+        enable_persistent_cache()
     out = run(full=args.full, engine=args.engine, backend=args.backend,
               replications=args.replications, large_grid=args.large_grid,
               large_pairs=args.large_pairs, families=args.families)

@@ -1,11 +1,15 @@
 """Planner quality + speed: heuristic optimality gap vs the exact solver on
 small/medium instances, runtime scaling, the vectorized candidate-evaluation
-speedup, and the batched-vs-scalar campaign-engine speedup.
+speedup, and the batched-vs-fused campaign-engine comparison (warm, cold,
+and cold-with-persistent-compilation-cache).
 
-Prints ``name,us_per_call,derived`` CSV rows and writes the same rows as
+Prints ``name,us_per_call,derived`` CSV rows and writes them as
 machine-readable ``BENCH_planner.json`` at the repo root so the perf
-trajectory is tracked across PRs.  Quality-only rows (optimality gaps) carry
-no ``us_per_call`` — gaps are reported in ``derived`` only.
+trajectory is tracked across PRs.  Rows additionally carry STRUCTURED fields
+(``speedup``, ``dispatches``, ``cold_us``, ...) next to the human-readable
+``derived`` string — ``benchmarks/bench_gate.py`` parses those to fail CI on
+perf regressions.  Quality-only rows (optimality gaps) carry no
+``us_per_call`` — gaps are reported in ``derived``/``gap`` only.
 
     PYTHONPATH=src python benchmarks/planner_bench.py [--quick]
 """
@@ -13,7 +17,9 @@ no ``us_per_call`` — gaps are reported in ``derived`` only.
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import subprocess
 import sys
 import time
 
@@ -144,10 +150,13 @@ def _engine_comparison_rows(exps, points, kw, row_prefix) -> list:
     return [
         (f"{row_prefix}scalar_{tag}", us_scal, "per-instance reference path"),
         (f"{row_prefix}batched_{tag}", us_batc,
-         f"speedup={us_scal / us_batc:.1f}x vs scalar, identical outputs"),
+         f"speedup={us_scal / us_batc:.1f}x vs scalar, identical outputs",
+         {"speedup_vs_scalar": us_scal / us_batc, "identical_outputs": True}),
         (f"{row_prefix}fused_{tag}", us_fusd,
          f"warm; speedup={us_scal / us_fusd:.1f}x vs scalar, "
-         f"cold_with_traces_us={us_cold:.0f}, identical outputs"),
+         f"cold_with_traces_us={us_cold:.0f}, identical outputs",
+         {"speedup_vs_scalar": us_scal / us_fusd, "cold_us": us_cold,
+          "vs_batched": us_batc / us_fusd, "identical_outputs": True}),
     ]
 
 
@@ -169,9 +178,13 @@ def campaign_speedup(quick: bool = False) -> list:
 
 
 def fused_large_grid(quick: bool = False) -> list:
-    """The n in {80, 160}, p = 1000 follow-up families under the fused
-    engine (the campaign shape the batched engine was host-bound on),
-    asserting byte-identical outputs vs the numpy lockstep path."""
+    """The n in {80, 160}, p = 1000 follow-up families under the (now
+    span-bucketed) fused engine — the campaign shape whose static-grid tax
+    was steepest (PR-4 warm: 23.5 s at n=160 vs 2.2 s numpy) — asserting
+    byte-identical outputs vs the numpy lockstep path.  Row names are stable
+    across PRs so the bucketing win shows on the same rows."""
+    from repro.core import fused
+
     if quick:
         points, n_pairs = ((80, 1000),), 2
     else:
@@ -183,17 +196,171 @@ def fused_large_grid(quick: bool = False) -> list:
         t0 = time.perf_counter()
         ref = run_campaign(exps, n, p, backend="numpy", **kw)
         us_np = (time.perf_counter() - t0) * 1e6
+        fused.reset_bucket_trace_count()
         t0 = time.perf_counter()
         run_campaign(exps, n, p, backend="fused", **kw)   # cold: jit traces
         us_cold = (time.perf_counter() - t0) * 1e6
+        buckets = fused.bucket_trace_count()
         t0 = time.perf_counter()
         fus = run_campaign(exps, n, p, backend="fused", **kw)
         us_warm = (time.perf_counter() - t0) * 1e6
         for e in exps:
             assert summarize_experiment(ref[e]) == summarize_experiment(fus[e]), (e, n)
         rows.append((f"campaign_fused_largegrid_E1-E4_n{n}p{p}", us_warm,
-                     f"warm; numpy_batched_us={us_np:.0f}, "
-                     f"cold_with_traces_us={us_cold:.0f}, identical outputs"))
+                     f"warm, span-bucketed; numpy_batched_us={us_np:.0f}, "
+                     f"cold_with_traces_us={us_cold:.0f}, "
+                     f"bucket_traces={buckets}, identical outputs",
+                     {"numpy_batched_us": us_np, "cold_us": us_cold,
+                      "vs_batched": us_np / us_warm, "bucket_traces": buckets,
+                      "bucket_trace_budget": fused.trace_budget(n),
+                      "identical_outputs": True}))
+    return rows
+
+
+def fused_bucketed_cold_start(quick: bool = False) -> list:
+    """The span-bucketed fused engine's cold-start story, measured in FRESH
+    subprocesses: cold without the persistent compilation cache, cold with a
+    warmed cache (compile replaced by cache load), and the in-process warm
+    steady state.  The with/without-cache delta is the satellite claim of
+    this PR's cold-start work (``enable_persistent_cache`` + donated SoA
+    buffers)."""
+    import tempfile
+
+    from repro.core import fused
+
+    n, p, pairs, nb = (9, 7, 3, 4) if quick else (20, 100, 8, 6)
+    tag = f"E1-E4_n{n}p{p}"
+    exps = ("E1", "E2", "E3", "E4")
+    child = (
+        "import time, sys\n"
+        "from repro.core import fused\n"
+        "cache = sys.argv[1]\n"
+        "if cache != 'none':\n"
+        "    fused.enable_persistent_cache(cache)\n"
+        "from repro.sim.experiments import run_campaign\n"
+        "t0 = time.perf_counter()\n"
+        f"run_campaign({exps!r}, {n}, {p}, n_pairs={pairs}, n_bounds={nb},\n"
+        f"             h4_iters=4, backend='fused')\n"
+        "print('ELAPSED_US=%.0f' % ((time.perf_counter() - t0) * 1e6))\n"
+    )
+
+    def run_child(cache_arg):
+        env = dict(os.environ)
+        env["PYTHONPATH"] = (str(REPO_ROOT / "src")
+                             + os.pathsep + env.get("PYTHONPATH", ""))
+        env.pop("JAX_COMPILATION_CACHE_DIR", None)
+        out = subprocess.run([sys.executable, "-c", child, cache_arg],
+                             capture_output=True, text=True, env=env,
+                             check=True)
+        for line in out.stdout.splitlines():
+            if line.startswith("ELAPSED_US="):
+                return float(line.split("=", 1)[1])
+        raise RuntimeError(f"no timing in child output: {out.stdout!r}")
+
+    us_nocache = run_child("none")
+    with tempfile.TemporaryDirectory(prefix="repro-jax-cache-") as cachedir:
+        run_child(cachedir)                  # populate the cache
+        us_cached = run_child(cachedir)      # fresh process, warm cache
+
+    # in-process warm steady state of the same campaign shape
+    kw = dict(n_pairs=pairs, n_bounds=nb, h4_iters=4, include_h4=True)
+    run_campaign(exps, n, p, backend="fused", **kw)
+    t0 = time.perf_counter()
+    run_campaign(exps, n, p, backend="fused", **kw)
+    us_warm = (time.perf_counter() - t0) * 1e6
+    return [
+        (f"campaign_fused_bucketed_warm_{tag}", us_warm,
+         "in-process warm steady state (traces cached)",
+         {"buckets_k1": len(fused.bucket_sizes(n, 1)),
+          "buckets_k2": len(fused.bucket_sizes(n, 2))}),
+        (f"campaign_fused_bucketed_cold_nocache_{tag}", us_nocache,
+         "fresh process, no persistent compilation cache (full jit traces)"),
+        (f"campaign_fused_bucketed_cold_cache_{tag}", us_cached,
+         f"fresh process, warm persistent compilation cache "
+         f"(cache_speedup={us_nocache / us_cached:.1f}x vs no-cache cold)",
+         {"cache_speedup": us_nocache / us_cached,
+          "nocache_cold_us": us_nocache}),
+    ]
+
+
+def split_score_pallas(quick: bool = False) -> list:
+    """The pallas split-scoring kernels vs the shared numpy kernels on a
+    lockstep-representative candidate grid (identical floats on every live
+    lane, asserted).  On CPU the pallas path runs in interpret mode — the
+    honest number here is its overhead factor; the compiled TPU/GPU path is
+    what the kernels exist for."""
+    from repro.core.heuristics import _PERMS3, score_2way_kernel, score_3way_kernel
+    from repro.kernels import split_score
+
+    rng = np.random.default_rng(23)
+    A, K = (16, 64) if quick else (64, 160)
+    reps = 3 if quick else 20
+    pre = np.sort(rng.uniform(0.0, 100.0, (A, K + 2)), axis=1)
+    delta = rng.uniform(0.0, 50.0, (A, K + 2))
+    args = (pre[:, :1], pre[:, 1:-1], pre[:, -1:],
+            delta[:, :1], delta[:, 1:-1], delta[:, -1:], 10.0,
+            rng.uniform(0.05, 2.0, (A, 1)), rng.uniform(0.05, 2.0, (A, 1)))
+    need = rng.integers(1, K + 1, A)
+
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        want = score_2way_kernel(*args, xp=np)
+    us_np = (time.perf_counter() - t0) / reps * 1e6
+    got = split_score.score_2way_pallas(*args, need=need)   # traces
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        got = split_score.score_2way_pallas(*args, need=need)
+    us_pl = (time.perf_counter() - t0) / reps * 1e6
+    live = np.concatenate([np.arange(K)[None, :] < need[:, None]] * 2, axis=1)
+    for g, w in zip(got, want):
+        assert np.array_equal(np.asarray(g)[live], w[live])
+    mode = "interpret" if split_score._interpret() else "compiled"
+    rows = [
+        (f"split_score_2way_numpy_A{A}K{K}", us_np, "shared numpy kernel"),
+        (f"split_score_2way_pallas_A{A}K{K}", us_pl,
+         f"{mode} mode; identical floats on live lanes, "
+         f"numpy_us={us_np:.0f}",
+         {"vs_numpy": us_np / us_pl, "interpret": split_score._interpret(),
+          "identical_live_lanes": True}),
+    ]
+
+    span = 12 if quick else 24
+    o1, o2 = np.triu_indices(span - 1, k=1)
+    Kp = o1.size
+    dI = rng.uniform(0.0, 10.0, (A, 3, Kp))
+    W3 = rng.uniform(0.1, 100.0, (A, 3, Kp))
+    dO = rng.uniform(0.0, 10.0, (A, 3, Kp))
+    invp = rng.uniform(0.05, 2.0, (A, 3))[:, np.asarray(_PERMS3)][:, :, :, None]
+    base = rng.uniform(1.0, 50.0, (A, 1, 1))
+    spans = rng.integers(3, span + 1, A)
+    need3 = split_score.pair_need(spans, span)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        want3 = score_3way_kernel(dI[:, None], W3[:, None], dO[:, None],
+                                  invp, base, xp=np)
+    us_np3 = (time.perf_counter() - t0) / reps * 1e6
+    got3 = split_score.score_3way_pallas(dI[:, None], W3[:, None],
+                                         dO[:, None], invp, base, need=need3)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        got3 = split_score.score_3way_pallas(dI[:, None], W3[:, None],
+                                             dO[:, None], invp, base,
+                                             need=need3)
+    us_pl3 = (time.perf_counter() - t0) / reps * 1e6
+    live_l = o2[None, :] <= (spans - 2)[:, None]
+    for g, w in zip(got3, want3):
+        lv = (np.broadcast_to(live_l[:, None, None, :], w.shape)
+              if w.ndim == 4 else np.broadcast_to(live_l[:, None, :], w.shape))
+        assert np.array_equal(np.asarray(g)[lv], w[lv])
+    rows += [
+        (f"split_score_3way_numpy_A{A}span{span}", us_np3,
+         "shared numpy kernel"),
+        (f"split_score_3way_pallas_A{A}span{span}", us_pl3,
+         f"{mode} mode; identical floats on live lanes, "
+         f"numpy_us={us_np3:.0f}",
+         {"vs_numpy": us_np3 / us_pl3, "interpret": split_score._interpret(),
+          "identical_live_lanes": True}),
+    ]
     return rows
 
 
@@ -254,9 +421,11 @@ def fused_h4_bisection(quick: bool = False) -> list:
     return [
         (f"campaign_fused_h4scan_n{n}p{p}_B{B}", us_scan,
          f"dispatches={d_scan} vs {d_loop} probe-loop "
-         f"({d_loop / d_scan:.0f}x fewer), identical outputs"),
+         f"({d_loop / d_scan:.0f}x fewer), identical outputs",
+         {"dispatches": d_scan, "identical_outputs": True}),
         (f"campaign_fused_h4probe_loop_n{n}p{p}_B{B}", us_loop,
-         f"PR-3 style host-driven bisection, dispatches={d_loop}"),
+         f"PR-3 style host-driven bisection, dispatches={d_loop}",
+         {"dispatches": d_loop}),
     ]
 
 
@@ -307,34 +476,56 @@ def deal_speedup(quick: bool = False) -> list:
 
 
 def run(quick: bool = False) -> list:
+    # point the persistent compilation cache at a FRESH per-run directory:
+    # the in-process cold rows below must measure real trace+compile cost
+    # every run (a warm machine-wide cache would silently turn them into
+    # cache loads and corrupt the cross-PR perf trajectory); the cache's
+    # cross-process win is measured explicitly by fused_bucketed_cold_start
+    import tempfile
+
+    from repro.core.fused import enable_persistent_cache
+
+    _cache_tmp = tempfile.TemporaryDirectory(prefix="repro-bench-jax-cache-")
+    enable_persistent_cache(_cache_tmp.name)
     rows = timing(reps=2 if quick else 10)
     rows += vectorized_eval(reps=2 if quick else 5)
     rows += campaign_speedup(quick=quick)
     rows += fused_large_grid(quick=quick)
     rows += image_family_campaign(quick=quick)
     rows += fused_h4_bisection(quick=quick)
+    rows += fused_bucketed_cold_start(quick=quick)
+    rows += split_score_pallas(quick=quick)
     rows += deal_speedup(quick=quick)
     gaps = optimality_gaps(n_inst=4 if quick else 20)
     for c, g in gaps.items():
         # quality-only rows: no us_per_call, the gap lives in `derived`
-        rows.append((f"gap_vs_exact_{c}", None, f"gap={g:.4f}"))
+        rows.append((f"gap_vs_exact_{c}", None, f"gap={g:.4f}", {"gap": g}))
     return rows
 
 
 def write_bench_json(rows, path: pathlib.Path = BENCH_JSON,
                      mode: str = "full") -> None:
-    """Persist benchmark rows as {name: {us_per_call, derived}} JSON.
+    """Persist benchmark rows as {name: {us_per_call, derived, ...}} JSON.
 
+    Rows are (name, us, derived) or (name, us, derived, extra): ``extra`` is
+    a dict of STRUCTURED fields (numeric speedups, dispatch counts, cache
+    deltas) merged into the row object — ``benchmarks/bench_gate.py`` reads
+    those, so regressions fail CI on numbers, not string parsing.
     ``_meta.mode`` records quick vs full so cross-PR comparisons never mix
     the two (they use different reps/instance counts under the same names).
     """
-    payload = {name: {"us_per_call": us, "derived": derived}
-               for name, us, derived in rows}
+    payload = {}
+    for row in rows:
+        name, us, derived = row[0], row[1], row[2]
+        entry = {"us_per_call": us, "derived": derived}
+        if len(row) > 3 and row[3]:
+            entry.update(row[3])
+        payload[name] = entry
     payload["_meta"] = {"mode": mode}
     path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
 
 
-def format_row(name, us, derived) -> str:
+def format_row(name, us, derived, extra=None) -> str:
     return f"{name},{'' if us is None else f'{us:.1f}'},{derived}"
 
 

@@ -26,12 +26,15 @@ Public surface:
     per bisection step
 
 Backends: ``backend="numpy"`` (default, bit-exact), ``backend="jax"``
-(scoring kernels under ``jax.jit`` with x64 enabled), or ``backend="fused"``
-(the ENTIRE lockstep loop as one jitted ``lax.while_loop`` —
-:mod:`repro.core.fused` — with O(1) host dispatches per heuristic arity).
-Both jit backends carry the kernels' runtime-zero FMA guard, so their split
-trajectories AND floats match the numpy reference exactly on all tested
-instances; numpy remains the contractual bit-exact reference.
+(scoring kernels under ``jax.jit`` with x64 enabled), ``backend="pallas"``
+(scoring through the masked-tile ``pl.pallas_call`` kernels of
+:mod:`repro.kernels.split_score` — interpret mode on CPU, compiled on
+TPU/GPU), or ``backend="fused"`` (the ENTIRE lockstep loop as one jitted
+``lax.while_loop`` — :mod:`repro.core.fused` — with span-bucketed candidate
+grids and O(1) host dispatches per heuristic arity).  All jit backends carry
+the kernels' runtime-zero FMA guard, so their split trajectories AND floats
+match the numpy reference exactly on all tested instances; numpy remains the
+contractual bit-exact reference.
 """
 
 from __future__ import annotations
@@ -45,7 +48,7 @@ import numpy as np
 
 from .heuristics import (_EPS, _PERMS3, HeuristicResult, _pick_bi, _pick_mono,
                          _three_way_candidates, score_2way_kernel,
-                         score_3way_kernel)
+                         score_3way_kernel, score_kernels)
 from .metrics import Mapping
 
 __all__ = [
@@ -160,27 +163,18 @@ def _as_problem_batch(batch) -> ProblemBatch:
 # ---------------------------------------------------------------------------
 
 class _Backend:
+    """Kernel-implementation backend for the lockstep loop: resolves the
+    shared scoring kernels through ``heuristics.score_kernels`` ("numpy",
+    "jax", or "pallas" — the Pallas kernels are span-aware: the hot loops
+    hand them each row's live-lane bound so masked tiles skip compute)."""
+
     def __init__(self, name: str):
         self.name = name
-        if name == "numpy":
-            self.score2 = functools.partial(score_2way_kernel, xp=np)
-            self.score3 = functools.partial(score_3way_kernel, xp=np)
-        elif name == "jax":
-            import jax
-
-            jax.config.update("jax_enable_x64", True)
-            import jax.numpy as jnp
-
-            # zero is passed as a *runtime* scalar so the kernels' FMA guard
-            # survives XLA constant folding (see score_2way_kernel docstring)
-            j2 = jax.jit(functools.partial(score_2way_kernel, xp=jnp))
-            j3 = jax.jit(functools.partial(score_3way_kernel, xp=jnp))
-            zero = np.float64(0.0)
-            self.score2 = lambda *a: j2(*a, zero=zero)
-            self.score3 = lambda *a: j3(*a, zero=zero)
-        else:
+        if name not in ("numpy", "jax", "pallas"):
             raise ValueError(f"unknown backend {name!r}; use 'numpy', 'jax', "
-                             "or 'fused'")
+                             "'pallas', or 'fused'")
+        self.score2, self.score3 = score_kernels(name)
+        self.span_aware = name == "pallas"
 
 
 _BACKENDS: dict = {}
@@ -338,10 +332,13 @@ def _choose_2way(state, rows, d, e, j, jp, bi_mode, old_cycle, cur_lat, lat_lim,
     cidx2[:, 0] = state.off_pre + c_idx          # prefix[c]
     cidx2[:, 1] = c_idx                          # delta[c]
     gc = state.packed[rows[:, None, None], cidx2]
+    # span-aware kernels (pallas) take each row's live-cut count so tiles
+    # beyond every row's span skip compute
+    kw = {"need": e - d} if be.span_aware else {}
     cyc1, cyc2, dlat = be.score2(
         g[:, 0][:, None], gc[:, 0], g[:, 1][:, None],
         g[:, 2][:, None], gc[:, 1], g[:, 3][:, None],
-        pb.b, (1.0 / g[:, 4])[:, None], (1.0 / g[:, 5])[:, None])
+        pb.b, (1.0 / g[:, 4])[:, None], (1.0 / g[:, 5])[:, None], **kw)
     if be.name != "numpy":
         cyc1, cyc2, dlat = np.asarray(cyc1), np.asarray(cyc2), np.asarray(dlat)
     mx = np.maximum(cyc1, cyc2)
@@ -450,7 +447,16 @@ def _choose_3way(state, rows, d, e, j, jp, jpp, bi_mode, old_cycle, cur_lat, lat
     base_term = (g[:, 2] / pb.b + (g[:, 1] - g[:, 0]) / g[:, 4])[:, None, None]
     # all 6 permutations in one kernel call: perm axis 1, parts axis 2
     invp = inv[:, _PERM_ARR][:, :, :, None]                                    # (A, 6, 3, 1)
-    cyc, dlat, mx = be.score3(dI[:, None], W[:, None], dO[:, None], invp, base_term)
+    if be.span_aware:
+        from ..kernels.split_score import pair_need
+
+        # per-row last-valid-lane bound of the r1-major pair layout, so the
+        # pallas kernel's out-of-band tiles skip compute
+        kw = {"need": pair_need(e - d + 1, span_max)}
+    else:
+        kw = {}
+    cyc, dlat, mx = be.score3(dI[:, None], W[:, None], dO[:, None], invp,
+                              base_term, **kw)
     if be.name != "numpy":
         cyc, dlat, mx = np.asarray(cyc), np.asarray(dlat), np.asarray(mx)
     any_bi = bool(bi_mode.any())

@@ -5,38 +5,52 @@ but only the inner scoring kernels run under ``jax.jit`` — every iteration
 still round-trips through Python for worst-interval selection, candidate-grid
 construction, and state updates, so a campaign issues O(iterations) host
 dispatches and cannot live on an accelerator.  This module traces the ENTIRE
-splitting loop — stop checks, worst-interval argmax, span-padded masked
-candidate scoring through the shared ``score_2way_kernel``/``score_3way_kernel``,
-exact lexicographic tie-breaks, and structure-of-arrays state updates — into
-one ``jax.jit``-compiled ``lax.while_loop``, so a whole campaign run is O(1)
+splitting loop — stop checks, worst-interval argmax, masked candidate scoring
+through the shared ``score_2way_kernel``/``score_3way_kernel``, exact
+lexicographic tie-breaks, and structure-of-arrays state updates — into one
+``jax.jit``-compiled ``lax.while_loop``, so a whole campaign run is O(1)
 host dispatches per (shape, heuristic-arity) pair.
 
 Design differences from the numpy lockstep loop (same *choices*, fixed shape):
 
-  - Candidate grids are STATIC: 2-way splits score all cuts ``1..n-1`` and
-    3-way splits all pairs ``c1 < c2`` in ``1..n-1`` every iteration, with
-    validity masks selecting the worst interval's span — no data-dependent
-    span compaction (which would retrace).  Masked lanes use clamped gathers
-    and are excluded by the same feasibility masks the numpy path uses.
+  - Candidate grids are SPAN-BUCKETED: instead of one static worst-case grid
+    (all cuts ``1..n-1`` / all pairs ``c1 < c2`` — the "static-grid tax" that
+    made every iteration pay O(n) / O(n^2) lanes even for a 2-stage worst
+    interval), each lockstep iteration routes to the smallest geometric
+    (power-of-two) bucket covering the live rows' worst-interval span, via a
+    ``lax.switch`` over per-bucket scoring branches (:func:`bucket_sizes`).
+    Cut lanes are interval-relative (cut ``c = d + offset``) with validity
+    masks and clamped gathers, exactly like the numpy engine's span
+    compaction; tie-break keys use absolute positions, so selection is
+    identical lane-layout notwithstanding.  Evaluated lanes shrink from
+    O(n * S) toward the live span while the branch count — and therefore the
+    per-program bucket-trace count (:func:`bucket_trace_count`) — stays
+    O(log n) per arity (:func:`trace_budget`, asserted by the tests).
   - The 2-stage 3-way fallback (scalar generator in the numpy engine) is six
-    extra static lanes with the scalar path's enumeration-order tie-break.
+    extra static lanes with the scalar path's enumeration-order tie-break,
+    shared across buckets.
   - Convergence is a per-row mask; the loop exits when every row is done,
     recording per-iteration (period, latency, accepted) into fixed (T, S)
     buffers (T = max possible splits) for trajectory assembly on the host.
   - Batches are padded to a fixed chunk size S per (n, arity), so EVERY call
     of a campaign — trajectories, H4 bisection probes on shrinking subsets,
-    H5/H6 bound-grid runs — reuses one trace per arity.  The module counts
-    traces (:func:`trace_count`) so tests can assert the O(1) contract.
+    H5/H6 bound-grid runs — reuses one trace per arity.  The carried SoA
+    state buffers (items array, item counts, latency sums, split counts) are
+    donated to the jitted program, so XLA reuses their device buffers for
+    the outputs instead of allocating fresh ones per call.
 
 Equivalence contract: split trajectories — the accepted splits AND their
 (period, latency) floats — are identical to the numpy engine on all tested
-instances (asserted by tests/test_batched.py).  This requires defeating two
-XLA rewrites that would drift by an ulp and flip exact ties: FMA contraction
-of ``a * b + c`` chains (neutralized by the kernels' runtime-``zero`` guard:
-``fma(a, b, 0) == round(a * b)``) and reduction reordering (the kernels sum
-the 3-part axis with explicit left-associated adds; max/min reductions are
-order-exact).  The numpy engine remains the contractual bit-exact reference;
-the fused engine is validated against it per test grid.
+instances (asserted by tests/test_engine_equivalence.py).  This requires
+defeating two XLA rewrites that would drift by an ulp and flip exact ties:
+FMA contraction of ``a * b + c`` chains (neutralized by the kernels' runtime-
+``zero`` guard: ``fma(a, b, 0) == round(a * b)``) and reduction reordering
+(the kernels sum the 3-part axis with explicit left-associated adds; max/min
+reductions are order-exact).  The numpy engine remains the contractual
+bit-exact reference; the fused engine is validated against it per test grid.
+
+Cold starts amortize across processes through JAX's persistent compilation
+cache (:func:`enable_persistent_cache` — benchmarks enable it by default).
 
 Use via ``backend="fused"`` on any :mod:`repro.core.batched` entry point (the
 lockstep runner dispatches here), or ``engine="fused"`` in
@@ -46,6 +60,8 @@ lockstep runner dispatches here), or ``engine="fused"`` in
 from __future__ import annotations
 
 import functools
+import os
+import pathlib
 from typing import Callable, Optional
 
 import numpy as np
@@ -54,19 +70,27 @@ from .heuristics import _EPS, score_2way_kernel, score_3way_kernel
 
 __all__ = ["fused_available", "run_fused", "run_fused_bisection",
            "trace_count", "reset_trace_count",
-           "dispatch_count", "reset_dispatch_count"]
+           "dispatch_count", "reset_dispatch_count",
+           "bucket_trace_count", "reset_bucket_trace_count",
+           "bucket_sizes", "bucket_index", "trace_budget",
+           "enable_persistent_cache"]
 
 # number of traced (compiled) variants of the fused programs since the last
 # reset; incremented from inside the traced wrappers, which Python-execute
 # only while jax is tracing — so this counts actual traces, not dispatches.
 _TRACES = [0]
+# number of traced bucket BRANCHES since the last reset: each program trace
+# traces every bucket of its arity exactly once (lax.switch compiles all
+# branches), so this counter realizes the O(log n)-buckets-per-arity cap.
+_BUCKET_TRACES = [0]
 # number of jitted-program dispatches (host -> device calls) since the last
 # reset: one per row-chunk for the lockstep loop, one per row-chunk for the
 # WHOLE H4 bisection (probe-at-hi + the lax.scan over probe iterations).
 _DISPATCHES = [0]
 
 # lane budget per jitted call: rows_per_chunk * candidate_lanes is held under
-# this so the 3-way pair grid of large n stays cache-/memory-sized.
+# this so the 3-way pair grid of large n stays cache-/memory-sized.  Sized
+# against the TOP bucket (the full grid) — smaller buckets only use less.
 _LANE_BUDGET = 4_000_000
 _MAX_CHUNK = 128
 
@@ -94,6 +118,17 @@ def reset_trace_count() -> None:
     _TRACES[0] = 0
 
 
+def bucket_trace_count() -> int:
+    """Bucket-branch traces since :func:`reset_bucket_trace_count` — the
+    O(log n)-buckets-per-arity cap is asserted on this counter (each program
+    trace traces every bucket of its arity once; see :func:`trace_budget`)."""
+    return _BUCKET_TRACES[0]
+
+
+def reset_bucket_trace_count() -> None:
+    _BUCKET_TRACES[0] = 0
+
+
 def dispatch_count() -> int:
     """Jitted-program dispatches since :func:`reset_dispatch_count` — the
     O(1)-dispatch contract is asserted on this counter by the tests."""
@@ -104,9 +139,73 @@ def reset_dispatch_count() -> None:
     _DISPATCHES[0] = 0
 
 
+@functools.lru_cache(maxsize=None)
+def bucket_sizes(n: int, k: int) -> tuple:
+    """Geometric (power-of-two) candidate-grid buckets for stage count ``n``.
+
+    For arity ``k == 1`` the sizes count candidate CUTS of the worst interval
+    (``1 <= e - d <= n - 1``); for ``k == 2`` they count its SPAN
+    (``3 <= e - d + 1 <= n`` — 2-stage intervals score through the static
+    fallback lanes instead, shared across buckets).  Sizes double from a
+    small floor and the top bucket is clamped to the exact maximum, so there
+    are at most ``ceil(log2(n)) + 1`` buckets; each is traced once per fused
+    program, which is the O(log n)-traces-per-arity cap asserted in tests.
+    """
+    if k == 1:
+        lo, hi = 2, n - 1
+    else:
+        if n < 3:
+            return ()
+        lo, hi = 4, n
+    if hi <= 0:
+        return ()
+    sizes = []
+    s = lo
+    while s < hi:
+        sizes.append(s)
+        s *= 2
+    sizes.append(hi)
+    return tuple(sizes)
+
+
+def bucket_index(need: int, sizes) -> int:
+    """Index of the smallest bucket in ``sizes`` covering ``need`` lanes.
+    The traced loop evaluates the same expression on-device per iteration
+    (``sum(need > sizes[:-1])``), so this host mirror is what the
+    bucket-routing property test pins down."""
+    sizes = np.asarray(sizes)
+    return int(np.sum(np.asarray(need) > sizes[:-1]))
+
+
+def trace_budget(n: int) -> int:
+    """Upper bound on bucket-branch traces for one campaign at stage count
+    ``n``: one bucket set per traced k=1 program (the lockstep loop AND the
+    bisection's inlined loop) plus one per traced k=2 program."""
+    return 2 * len(bucket_sizes(n, 1)) + len(bucket_sizes(n, 2))
+
+
+def enable_persistent_cache(path: Optional[str] = None) -> str:
+    """Point JAX at an on-disk compilation cache so fused-program cold starts
+    are paid once per machine, not once per process.  Idempotent; returns the
+    cache directory.  Benchmarks call this by default (``JAX_COMPILATION_
+    CACHE_DIR`` overrides the location)."""
+    import jax
+
+    path = str(path or os.environ.get("JAX_COMPILATION_CACHE_DIR")
+               or pathlib.Path.home() / ".cache" / "repro-jax-cache")
+    pathlib.Path(path).mkdir(parents=True, exist_ok=True)
+    jax.config.update("jax_compilation_cache_dir", path)
+    # persist only compiles that meaningfully cost (the fused programs take
+    # seconds); trivial sub-second compiles would otherwise accumulate in an
+    # uneviected cache directory forever
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.5)
+    return path
+
+
 def chunk_rows(n: int, k: int) -> int:
     """Fixed rows-per-call for shape (n, arity k) — deterministic so every
-    call of a campaign pads to the same chunk shape and shares one trace."""
+    call of a campaign pads to the same chunk shape and shares one trace.
+    Sized against the TOP span bucket (the worst-case grid)."""
     if k == 1:
         lanes = max(2 * (n - 1), 1)
     else:
@@ -126,15 +225,21 @@ def _lex_argmin_traced(xp, keys, mask):
     return xp.argmax(m, axis=1), has
 
 
-def _build_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
+def _build_loop(n: int, p: int, k: int, T: int, S: int) -> tuple:
     """Build the UNJITTED fused loop for static shape (n, p, k).
 
-    Returned callable:
-        fn(w, delta, s, b, prefix, order, bi_mode, stop, lat_limit, active0)
-        -> (arr, m, next_idx, lat_sum, splits, per_rec, lat_rec, acc_rec, t)
-    with arr (S, n, 5) in the ``_BatchState`` field layout and the records
-    (T, S) per lockstep iteration.  Callers jit it (:func:`_get_loop`) or
-    inline it into a larger traced program (:func:`_get_bisect`).
+    Returns ``(init_state, loop)``:
+
+        init_state(delta, s, b, prefix, order) -> (arr, m, nx, lat, sp)
+        loop(delta, s, b, zero, prefix, order, bi_mode, stop, lat_limit,
+             active0, arr0, m0, nx0, lat0, sp0)
+          -> (arr, m, next_idx, lat_sum, splits, per_rec, lat_rec, acc_rec, t)
+
+    with ``arr`` (S, n, 5) in the ``_BatchState`` field layout and the records
+    (T, S) per lockstep iteration.  Callers jit the loop with the SoA state
+    arguments donated (:func:`_get_loop`) or inline it into a larger traced
+    program (:func:`_get_bisect`).  Candidate scoring runs through a
+    ``lax.switch`` over the geometric span buckets of :func:`bucket_sizes`.
     """
     import jax
 
@@ -142,181 +247,173 @@ def _build_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
     import jax.numpy as jnp
     from jax import lax
 
-    rows = jnp.arange(S)
     col = jnp.arange(n)[None, :]
-    # static 2-way cut grid (absolute cuts 1..n-1, both placement orders)
-    C2 = np.arange(1, n)
-    cutorder = np.concatenate([C2 * 2.0, C2 * 2.0 + 1.0])[None, :]
-    # static 3-way pair grid (absolute cuts, c1 < c2 in 1..n-1) + its exact
-    # integer tie-break key (c1, c2, perm), matching batched._choose_3way
-    if n >= 3:
-        o1, o2 = np.triu_indices(n - 1, k=1)
-        C31, C32 = o1 + 1, o2 + 1
-        K3 = C31.size
-        ccp = ((C31 * (n + 1) + C32)[None, :] * 6
-               + np.arange(6)[:, None]).astype(float).reshape(1, 6 * K3)
-    else:
-        C31 = C32 = np.zeros(0, dtype=np.int64)
-        K3 = 0
-        ccp = np.zeros((1, 0))
+    sizes = bucket_sizes(n, k)
+    thresholds = np.asarray(sizes[:-1], dtype=np.int64)
     fb_key = np.arange(6, dtype=float)[None, :]
 
     def take1(A, idx):
         return jnp.take_along_axis(A, idx[:, None], axis=1)[:, 0]
 
-    def choose_2way(prefix, delta, s, b, zero, d, e, j, jp_, bi, old_cycle,
-                    cur_lat, lat_lim, live):
-        valid = (C2[None, :] >= d[:, None]) & (C2[None, :] < e[:, None])
-        pre_d1 = take1(prefix, d - 1)
-        pre_e = take1(prefix, e)
-        del_d1 = take1(delta, d - 1)
-        del_e = take1(delta, e)
-        inv_j = 1.0 / take1(s, j)
-        inv_p = 1.0 / take1(s, jp_)
-        cyc1, cyc2, dlat = score_2way_kernel(
-            pre_d1[:, None], prefix[:, 1:n], pre_e[:, None],
-            del_d1[:, None], delta[:, 1:n], del_e[:, None], b,
-            inv_j[:, None], inv_p[:, None], xp=jnp, zero=zero)
-        mx = jnp.maximum(cyc1, cyc2)
-        okay = (mx < old_cycle[:, None] - _EPS)
-        okay &= cur_lat[:, None] + dlat <= lat_lim[:, None] + _EPS
-        okay &= jnp.concatenate([valid, valid], axis=1)
-        okay &= live[:, None]
-        ratio = jnp.maximum(
-            dlat / jnp.maximum(old_cycle[:, None] - cyc1, _EPS),
-            dlat / jnp.maximum(old_cycle[:, None] - cyc2, _EPS))
-        bc = bi[:, None]
-        keys = [jnp.where(bc, ratio, mx), jnp.where(bc, mx, dlat),
-                jnp.broadcast_to(cutorder, mx.shape)]
-        q, has = _lex_argmin_traced(jnp, keys, okay)
-        c = jnp.take(jnp.asarray(C2), q % (n - 1), mode="clip")
-        swapped = q >= (n - 1)
-        pa = jnp.where(swapped, jp_, j)
-        pb2 = jnp.where(swapped, j, jp_)
-        pd = jnp.stack([d, c + 1, c + 1], axis=1)
-        pe = jnp.stack([c, e, e], axis=1)
-        pu = jnp.stack([pa, pb2, pb2], axis=1)
-        nparts = jnp.full((S,), 2, dtype=jnp.int64)
-        consumed = jnp.ones((S,), dtype=jnp.int64)
-        return has, pd, pe, pu, nparts, consumed
+    def make_choose_2way(L: int) -> Callable:
+        """Scoring/selection branch over the L-cut bucket: interval-relative
+        cut lanes ``c = d + offset`` (same compaction as the numpy engine's
+        ``_choose_2way``), absolute-position tie-break keys."""
+        off = np.arange(L)
 
-    def choose_3way(prefix, delta, s, b, zero, d, e, j, jp_, jpp, bi,
-                    old_cycle, cur_lat, lat_lim, live):
-        pre_d1 = take1(prefix, d - 1)
-        pre_e = take1(prefix, e)
-        del_d1 = take1(delta, d - 1)
-        del_e = take1(delta, e)
-        sj = take1(s, j)
-        s3 = jnp.stack([sj, take1(s, jp_), take1(s, jpp)], axis=1)   # (S, 3)
-        base_term = del_d1 / b + (pre_e - pre_d1) / sj
-        procs3 = jnp.stack([j, jp_, jpp], axis=1)                    # (S, 3)
-        span2 = (e - d + 1) == 2
+        def choose(ops):
+            _BUCKET_TRACES[0] += 1  # Python-executes once per branch trace
+            (prefix, delta, b, zero, d, e, j, jp_, bi, old_cycle, cur_lat,
+             lat_lim, live, pre_d1, pre_e, del_d1, del_e, inv_j, inv_p) = ops
+            c = d[:, None] + off[None, :]
+            valid = c < e[:, None]
+            ci = jnp.minimum(c, n - 1)           # in-range gather, masked lanes
+            pre_C = jnp.take_along_axis(prefix, ci, axis=1)
+            del_C = jnp.take_along_axis(delta, ci, axis=1)
+            cyc1, cyc2, dlat = score_2way_kernel(
+                pre_d1[:, None], pre_C, pre_e[:, None],
+                del_d1[:, None], del_C, del_e[:, None], b,
+                inv_j[:, None], inv_p[:, None], xp=jnp, zero=zero)
+            mx = jnp.maximum(cyc1, cyc2)
+            okay = (mx < old_cycle[:, None] - _EPS)
+            okay &= cur_lat[:, None] + dlat <= lat_lim[:, None] + _EPS
+            okay &= jnp.concatenate([valid, valid], axis=1)
+            okay &= live[:, None]
+            ratio = jnp.maximum(
+                dlat / jnp.maximum(old_cycle[:, None] - cyc1, _EPS),
+                dlat / jnp.maximum(old_cycle[:, None] - cyc2, _EPS))
+            cf = c.astype(jnp.float64)
+            cutorder = jnp.concatenate([cf * 2.0, cf * 2.0 + 1.0], axis=1)
+            bc = bi[:, None]
+            keys = [jnp.where(bc, ratio, mx), jnp.where(bc, mx, dlat),
+                    cutorder]
+            q, has = _lex_argmin_traced(jnp, keys, okay)
+            cw = d + (q % L)
+            swapped = q >= L
+            pa = jnp.where(swapped, jp_, j)
+            pb2 = jnp.where(swapped, j, jp_)
+            pd = jnp.stack([d, cw + 1, cw + 1], axis=1)
+            pe = jnp.stack([cw, e, e], axis=1)
+            pu = jnp.stack([pa, pb2, pb2], axis=1)
+            nparts = jnp.full((S,), 2, dtype=jnp.int64)
+            consumed = jnp.ones((S,), dtype=jnp.int64)
+            return has, pd, pe, pu, nparts, consumed
 
-        # --- >=3-stage lanes: all (c1, c2) pairs x 6 permutations ----------
-        if K3:
-            valid = ((C31[None, :] >= d[:, None])
-                     & (C32[None, :] <= (e - 1)[:, None]))
-            pre_c1 = prefix[:, C31]
-            pre_c2 = prefix[:, C32]
-            del_c1 = delta[:, C31]
-            del_c2 = delta[:, C32]
-            W = jnp.stack([pre_c1 - pre_d1[:, None], pre_c2 - pre_c1,
-                           pre_e[:, None] - pre_c2], axis=1)         # (S, 3, K)
-            dI = jnp.stack([jnp.broadcast_to(del_d1[:, None], (S, K3)),
-                            del_c1, del_c2], axis=1) / b
-            dO = jnp.stack([del_c1, del_c2,
-                            jnp.broadcast_to(del_e[:, None], (S, K3))],
-                           axis=1) / b
-            invp = (1.0 / s3)[:, _PERMS3][:, :, :, None]             # (S,6,3,1)
-            cyc, dlat, mx = score_3way_kernel(
-                dI[:, None], W[:, None], dO[:, None], invp,
-                base_term[:, None, None], xp=jnp, zero=zero)
-            ratio = (dlat[:, :, None, :]
-                     / jnp.maximum(old_cycle[:, None, None, None] - cyc,
-                                   _EPS)).max(axis=2)
-            mx_f = mx.reshape(S, 6 * K3)
-            dlat_f = dlat.reshape(S, 6 * K3)
-            ratio_f = ratio.reshape(S, 6 * K3)
-            okay3 = mx_f < old_cycle[:, None] - _EPS
-            okay3 &= cur_lat[:, None] + dlat_f <= lat_lim[:, None] + _EPS
-            okay3 &= jnp.broadcast_to(valid[:, None, :],
-                                      (S, 6, K3)).reshape(S, 6 * K3)
-            okay3 &= (live & ~span2)[:, None]
+        return choose
 
-        # --- 2-stage fallback lanes: permutations((j,jp,jpp), 2) at cut d ---
-        # (division-based like the scalar generator the numpy engine calls)
-        pre_dd = take1(prefix, jnp.minimum(d, n))
-        del_dd = take1(delta, jnp.minimum(d, n))
-        W1 = (pre_dd - pre_d1)[:, None]
-        W2 = (pre_e - pre_dd)[:, None]
-        spa = s3[:, _FB_A]
-        spb = s3[:, _FB_B]
-        t1 = del_d1[:, None] / b + W1 / spa
-        cyc1_fb = t1 + del_dd[:, None] / b
-        t2 = del_dd[:, None] / b + W2 / spb
-        cyc2_fb = t2 + del_e[:, None] / b
-        dlat_fb = (t1 + t2) - base_term[:, None]
-        mx_fb = jnp.maximum(cyc1_fb, cyc2_fb)
-        okay_fb = mx_fb < old_cycle[:, None] - _EPS
-        okay_fb &= cur_lat[:, None] + dlat_fb <= lat_lim[:, None] + _EPS
-        okay_fb &= (live & span2)[:, None]
-        ratio_fb = jnp.maximum(
-            dlat_fb / jnp.maximum(old_cycle[:, None] - cyc1_fb, _EPS),
-            dlat_fb / jnp.maximum(old_cycle[:, None] - cyc2_fb, _EPS))
-
-        # one lex-argmin over the concatenated lanes; per row only one lane
-        # family is unmasked, so the key families never compete
-        bc = bi[:, None]
-        if K3:
-            key1 = jnp.concatenate(
-                [jnp.where(bc, ratio_f, mx_f), jnp.where(bc, ratio_fb, mx_fb)],
-                axis=1)
-            key2 = jnp.concatenate(
-                [jnp.where(bc, mx_f, dlat_f), jnp.where(bc, mx_fb, dlat_fb)],
-                axis=1)
-            key3 = jnp.concatenate(
-                [jnp.broadcast_to(ccp, (S, 6 * K3)),
-                 jnp.broadcast_to(fb_key, (S, 6))], axis=1)
-            okay = jnp.concatenate([okay3, okay_fb], axis=1)
+    def make_choose_3way(L: Optional[int]) -> Callable:
+        """Scoring/selection branch over the L-span bucket: all relative cut
+        pairs ``0 <= r1 < r2 <= L-2`` (``c_i = d + r_i``) x 6 permutations,
+        concatenated with the shared 2-stage fallback lanes for the joint
+        exact lex tie-break.  ``L=None`` (n < 3) keeps fallback lanes only."""
+        if L is not None:
+            r1, r2 = np.triu_indices(L - 1, k=1)
+            K = int(r1.size)
         else:
-            key1 = jnp.where(bc, ratio_fb, mx_fb)
-            key2 = jnp.where(bc, mx_fb, dlat_fb)
-            key3 = jnp.broadcast_to(fb_key, (S, 6))
-            okay = okay_fb
-        q, has = _lex_argmin_traced(jnp, [key1, key2, key3], okay)
+            r1 = r2 = None
+            K = 0
 
-        fb = q >= 6 * K3
-        # grid winner
-        pi = jnp.minimum(q // max(K3, 1), 5)
-        kk = q % max(K3, 1)
-        c1b = jnp.take(jnp.asarray(C31), kk, mode="clip") if K3 else d
-        c2b = jnp.take(jnp.asarray(C32), kk, mode="clip") if K3 else d
-        perm = jnp.asarray(_PERMS3)[pi]                              # (S, 3)
-        u_grid = jnp.take_along_axis(procs3, perm, axis=1)
-        pd_g = jnp.stack([d, c1b + 1, c2b + 1], axis=1)
-        pe_g = jnp.stack([c1b, c2b, e], axis=1)
-        # fallback winner
-        qf = jnp.where(fb, q - 6 * K3, 0)
-        ia = jnp.asarray(_FB_A)[qf]
-        ib = jnp.asarray(_FB_B)[qf]
-        pu0 = jnp.take_along_axis(procs3, ia[:, None], axis=1)[:, 0]
-        pu1 = jnp.take_along_axis(procs3, ib[:, None], axis=1)[:, 0]
-        pd_f = jnp.stack([d, d + 1, d + 1], axis=1)
-        pe_f = jnp.stack([d, e, e], axis=1)
-        pu_f = jnp.stack([pu0, pu1, pu1], axis=1)
-        cons_f = jnp.where((ia != 0) & (ib != 0), 2, 1).astype(jnp.int64)
+        def choose(ops):
+            _BUCKET_TRACES[0] += 1  # Python-executes once per branch trace
+            (prefix, delta, b, zero, d, e, bi, old_cycle, cur_lat, lat_lim,
+             live, span2, pre_d1, pre_e, del_d1, del_e, invp, base_term,
+             procs3, mx_fb, dlat_fb, ratio_fb, okay_fb) = ops
+            bc = bi[:, None]
+            if K:
+                c1 = d[:, None] + r1[None, :]
+                c2 = d[:, None] + r2[None, :]
+                valid = c2 <= (e - 1)[:, None]
+                c1i = jnp.minimum(c1, n - 1)
+                c2i = jnp.minimum(c2, n - 1)
+                pre_c1 = jnp.take_along_axis(prefix, c1i, axis=1)
+                pre_c2 = jnp.take_along_axis(prefix, c2i, axis=1)
+                del_c1 = jnp.take_along_axis(delta, c1i, axis=1)
+                del_c2 = jnp.take_along_axis(delta, c2i, axis=1)
+                W = jnp.stack([pre_c1 - pre_d1[:, None], pre_c2 - pre_c1,
+                               pre_e[:, None] - pre_c2], axis=1)  # (S, 3, K)
+                dI = jnp.stack([jnp.broadcast_to(del_d1[:, None], (S, K)),
+                                del_c1, del_c2], axis=1) / b
+                dO = jnp.stack([del_c1, del_c2,
+                                jnp.broadcast_to(del_e[:, None], (S, K))],
+                               axis=1) / b
+                cyc, dlat, mx = score_3way_kernel(
+                    dI[:, None], W[:, None], dO[:, None], invp,
+                    base_term[:, None, None], xp=jnp, zero=zero)
+                ratio = (dlat[:, :, None, :]
+                         / jnp.maximum(old_cycle[:, None, None, None] - cyc,
+                                       _EPS)).max(axis=2)
+                mx_f = mx.reshape(S, 6 * K)
+                dlat_f = dlat.reshape(S, 6 * K)
+                ratio_f = ratio.reshape(S, 6 * K)
+                okay3 = mx_f < old_cycle[:, None] - _EPS
+                okay3 &= cur_lat[:, None] + dlat_f <= lat_lim[:, None] + _EPS
+                okay3 &= jnp.broadcast_to(valid[:, None, :],
+                                          (S, 6, K)).reshape(S, 6 * K)
+                okay3 &= (live & ~span2)[:, None]
+                # (c1, c2, perm) tie-break as ONE exactly-represented integer
+                # key — absolute positions, so bucket layout cannot matter
+                ccp = ((c1 * (n + 1) + c2)[:, None, :] * 6
+                       + np.arange(6)[None, :, None]
+                       ).astype(jnp.float64).reshape(S, 6 * K)
+                key1 = jnp.concatenate(
+                    [jnp.where(bc, ratio_f, mx_f),
+                     jnp.where(bc, ratio_fb, mx_fb)], axis=1)
+                key2 = jnp.concatenate(
+                    [jnp.where(bc, mx_f, dlat_f),
+                     jnp.where(bc, mx_fb, dlat_fb)], axis=1)
+                key3 = jnp.concatenate(
+                    [ccp, jnp.broadcast_to(fb_key, (S, 6))], axis=1)
+                okay = jnp.concatenate([okay3, okay_fb], axis=1)
+            else:
+                key1 = jnp.where(bc, ratio_fb, mx_fb)
+                key2 = jnp.where(bc, mx_fb, dlat_fb)
+                key3 = jnp.broadcast_to(fb_key, (S, 6))
+                okay = okay_fb
+            q, has = _lex_argmin_traced(jnp, [key1, key2, key3], okay)
 
-        fbc = fb[:, None]
-        pd = jnp.where(fbc, pd_f, pd_g)
-        pe = jnp.where(fbc, pe_f, pe_g)
-        pu = jnp.where(fbc, pu_f, u_grid)
-        nparts = jnp.where(fb, 2, 3).astype(jnp.int64)
-        consumed = jnp.where(fb, cons_f, 2).astype(jnp.int64)
-        return has, pd, pe, pu, nparts, consumed
+            fb = q >= 6 * K
+            # grid winner
+            pi = jnp.minimum(q // max(K, 1), 5)
+            kk = q % max(K, 1)
+            if K:
+                c1b = d + jnp.take(jnp.asarray(r1), kk, mode="clip")
+                c2b = d + jnp.take(jnp.asarray(r2), kk, mode="clip")
+            else:
+                c1b = c2b = d
+            perm = jnp.asarray(_PERMS3)[pi]                          # (S, 3)
+            u_grid = jnp.take_along_axis(procs3, perm, axis=1)
+            pd_g = jnp.stack([d, c1b + 1, c2b + 1], axis=1)
+            pe_g = jnp.stack([c1b, c2b, e], axis=1)
+            # fallback winner
+            qf = jnp.where(fb, q - 6 * K, 0)
+            ia = jnp.asarray(_FB_A)[qf]
+            ib = jnp.asarray(_FB_B)[qf]
+            pu0 = jnp.take_along_axis(procs3, ia[:, None], axis=1)[:, 0]
+            pu1 = jnp.take_along_axis(procs3, ib[:, None], axis=1)[:, 0]
+            pd_f = jnp.stack([d, d + 1, d + 1], axis=1)
+            pe_f = jnp.stack([d, e, e], axis=1)
+            pu_f = jnp.stack([pu0, pu1, pu1], axis=1)
+            cons_f = jnp.where((ia != 0) & (ib != 0), 2, 1).astype(jnp.int64)
 
-    def fn(w, delta, s, b, zero, prefix, order, bi_mode, stop, lat_limit,
-           active0):
-        del w  # stage works enter via their prefix sums
+            fbc = fb[:, None]
+            pd = jnp.where(fbc, pd_f, pd_g)
+            pe = jnp.where(fbc, pe_f, pe_g)
+            pu = jnp.where(fbc, pu_f, u_grid)
+            nparts = jnp.where(fb, 2, 3).astype(jnp.int64)
+            consumed = jnp.where(fb, cons_f, 2).astype(jnp.int64)
+            return has, pd, pe, pu, nparts, consumed
+
+        return choose
+
+    if k == 1:
+        branches = [make_choose_2way(L) for L in sizes]
+    else:
+        branches = ([make_choose_3way(L) for L in sizes]
+                    if sizes else [make_choose_3way(None)])
+
+    def init_state(delta, s, b, prefix, order):
+        """The optimal-latency starting state (all stages on the fastest
+        processor) — same expressions as ``batched._BatchState.__init__``."""
         fastest = order[:, 0]
         term0 = delta[:, 0] / b + (prefix[:, n] - prefix[:, 0]) / take1(s, fastest)
         tail = delta[:, n] / b
@@ -329,6 +426,11 @@ def _build_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
         m0 = jnp.ones(S, dtype=jnp.int64)
         nx0 = jnp.ones(S, dtype=jnp.int64)
         sp0 = jnp.zeros(S, dtype=jnp.int64)
+        return arr, m0, nx0, term0, sp0
+
+    def loop(delta, s, b, zero, prefix, order, bi_mode, stop, lat_limit,
+             active0, arr0, m0, nx0, lat0, sp0):
+        tail = delta[:, n] / b
         per_rec = jnp.zeros((T, S))
         lat_rec = jnp.zeros((T, S))
         acc_rec = jnp.zeros((T, S), dtype=bool)
@@ -354,15 +456,71 @@ def _build_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
             old_term = item[:, 4]
             cur_lat = lat_sum + tail
             jp_ = take1(order, jnp.clip(next_idx, 0, p - 1))
+
+            # shared per-row interval-end quantities (bucket-independent)
+            pre_d1 = take1(prefix, d - 1)
+            pre_e = take1(prefix, e)
+            del_d1 = take1(delta, d - 1)
+            del_e = take1(delta, e)
+
             if k == 1:
-                has, pd, pe, pu, nparts, consumed = choose_2way(
-                    prefix, delta, s, b, zero, d, e, j, jp_, bi_mode,
-                    old_cycle, cur_lat, lat_limit, live)
+                inv_j = 1.0 / take1(s, j)
+                inv_p = 1.0 / take1(s, jp_)
+                need = e - d                      # candidate cuts per row
+                cur = jnp.max(jnp.where(live, need, 0))
+                ops = (prefix, delta, b, zero, d, e, j, jp_, bi_mode,
+                       old_cycle, cur_lat, lat_limit, live,
+                       pre_d1, pre_e, del_d1, del_e, inv_j, inv_p)
+                if len(branches) > 1:
+                    bidx = jnp.sum(cur > jnp.asarray(thresholds))
+                    (has, pd, pe, pu,
+                     nparts, consumed) = lax.switch(bidx, branches, ops)
+                else:
+                    has, pd, pe, pu, nparts, consumed = branches[0](ops)
             else:
                 jpp = take1(order, jnp.clip(next_idx + 1, 0, p - 1))
-                has, pd, pe, pu, nparts, consumed = choose_3way(
-                    prefix, delta, s, b, zero, d, e, j, jp_, jpp, bi_mode,
-                    old_cycle, cur_lat, lat_limit, live)
+                sj = take1(s, j)
+                s3 = jnp.stack([sj, take1(s, jp_), take1(s, jpp)], axis=1)
+                invp = (1.0 / s3)[:, _PERMS3][:, :, :, None]         # (S,6,3,1)
+                base_term = del_d1 / b + (pre_e - pre_d1) / sj
+                procs3 = jnp.stack([j, jp_, jpp], axis=1)            # (S, 3)
+                span2 = (e - d + 1) == 2
+
+                # 2-stage fallback lanes (division-based like the scalar
+                # generator): span-independent, computed once outside the
+                # bucket switch and fed to every branch's joint tie-break.
+                pre_dd = take1(prefix, jnp.minimum(d, n))
+                del_dd = take1(delta, jnp.minimum(d, n))
+                W1 = (pre_dd - pre_d1)[:, None]
+                W2 = (pre_e - pre_dd)[:, None]
+                spa = s3[:, _FB_A]
+                spb = s3[:, _FB_B]
+                t1 = del_d1[:, None] / b + W1 / spa
+                cyc1_fb = t1 + del_dd[:, None] / b
+                t2 = del_dd[:, None] / b + W2 / spb
+                cyc2_fb = t2 + del_e[:, None] / b
+                dlat_fb = (t1 + t2) - base_term[:, None]
+                mx_fb = jnp.maximum(cyc1_fb, cyc2_fb)
+                okay_fb = mx_fb < old_cycle[:, None] - _EPS
+                okay_fb &= (cur_lat[:, None] + dlat_fb
+                            <= lat_limit[:, None] + _EPS)
+                okay_fb &= (live & span2)[:, None]
+                ratio_fb = jnp.maximum(
+                    dlat_fb / jnp.maximum(old_cycle[:, None] - cyc1_fb, _EPS),
+                    dlat_fb / jnp.maximum(old_cycle[:, None] - cyc2_fb, _EPS))
+
+                span = e - d + 1
+                cur = jnp.max(jnp.where(live & ~span2, span, 0))
+                ops = (prefix, delta, b, zero, d, e, bi_mode, old_cycle,
+                       cur_lat, lat_limit, live, span2, pre_d1, pre_e,
+                       del_d1, del_e, invp, base_term, procs3,
+                       mx_fb, dlat_fb, ratio_fb, okay_fb)
+                if len(branches) > 1:
+                    bidx = jnp.sum(cur > jnp.asarray(thresholds))
+                    (has, pd, pe, pu,
+                     nparts, consumed) = lax.switch(bidx, branches, ops)
+                else:
+                    has, pd, pe, pu, nparts, consumed = branches[0](ops)
             accept = live & has
 
             # apply splits (same division-based expressions as _apply_splits)
@@ -408,27 +566,29 @@ def _build_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
             return (t + 1, arr, m, next_idx, lat_sum, accept,
                     per_rec, lat_rec, acc_rec, splits)
 
-        init = (jnp.int64(0), arr, m0, nx0, term0, active0,
+        init = (jnp.int64(0), arr0, m0, nx0, lat0, active0,
                 per_rec, lat_rec, acc_rec, sp0)
         (t, arr, m, next_idx, lat_sum, active,
          per_rec, lat_rec, acc_rec, splits) = lax.while_loop(cond, body, init)
         return arr, m, next_idx, lat_sum, splits, per_rec, lat_rec, acc_rec, t
 
-    return fn
+    return init_state, loop
 
 
 @functools.lru_cache(maxsize=None)
 def _get_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
-    """The jitted fused loop for static shape (n, p, k), cached per shape."""
+    """The jitted fused loop for static shape (n, p, k), cached per shape.
+    The five carried SoA state buffers (arr, m, next_idx, lat_sum, splits)
+    are donated: XLA reuses their device buffers for the outputs."""
     import jax
 
-    loop = _build_loop(n, p, k, T, S)
+    _init_state, loop = _build_loop(n, p, k, T, S)
 
     def counted(*args):
         _TRACES[0] += 1  # Python-executes only while tracing
         return loop(*args)
 
-    return jax.jit(counted)
+    return jax.jit(counted, donate_argnums=(10, 11, 12, 13, 14))
 
 
 @functools.lru_cache(maxsize=None)
@@ -444,7 +604,7 @@ def _get_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
     ``batched._sp_bi_p_rowwise`` expression for expression.
 
     Returned callable:
-        fn(w, delta, s, b, zero, prefix, order, p_fix, lo0, hi0, active0)
+        fn(delta, s, b, zero, prefix, order, p_fix, lo0, hi0, active0)
         -> (items0, m0, sp0, per0, lat0, feas0,
             best_items, best_m, best_sp, best_per, best_lat)
     with items* (S, n, 3) in the ``_BatchState`` (d, e, proc) layout.
@@ -455,17 +615,18 @@ def _get_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
     import jax.numpy as jnp
     from jax import lax
 
-    loop = _build_loop(n, p, 1, T, S)
+    init_state, loop = _build_loop(n, p, 1, T, S)
 
-    def fn(w, delta, s, b, zero, prefix, order, p_fix, lo0, hi0, active0):
+    def fn(delta, s, b, zero, prefix, order, p_fix, lo0, hi0, active0):
         _TRACES[0] += 1  # Python-executes only while tracing
         all_bi = jnp.ones(S, dtype=bool)
         tail = delta[:, n] / b
 
         def probe(limits, act):
+            st0 = init_state(delta, s, b, prefix, order)
             arr, m, _nx, lat_sum, splits, *_rest = loop(
-                w, delta, s, b, zero, prefix, order, all_bi, p_fix, limits,
-                act)
+                delta, s, b, zero, prefix, order, all_bi, p_fix, limits,
+                act, *st0)
             per = arr[:, :, 3].max(axis=1)
             lat = lat_sum + tail
             feas = (per <= p_fix + _EPS) & (lat <= limits + _EPS)
@@ -527,9 +688,12 @@ def run_fused(state, k: int, bi_mode: np.ndarray, stop: np.ndarray,
         act = np.zeros(S, dtype=bool)
         act[:rows.size] = state.active[rows]
         _DISPATCHES[0] += 1
-        out = fn(pb.w[sel], pb.delta[sel], pb.s[sel], b, np.float64(0.0),
+        # the SoA state slices are fresh fancy-index copies, safe to donate
+        out = fn(pb.delta[sel], pb.s[sel], b, np.float64(0.0),
                  pb.prefix[sel], pb.order[sel].astype(np.int64), bi_mode[sel],
-                 stop[sel], lat_limit[sel], act)
+                 stop[sel], lat_limit[sel], act,
+                 state.arr[sel], state.m[sel], state.next_idx[sel],
+                 state.lat_sum[sel], state.splits[sel])
         (arr, m, next_idx, lat_sum, splits,
          per_rec, lat_rec, acc_rec, t_used) = (np.asarray(o) for o in out)
         r = rows.size
@@ -603,7 +767,7 @@ def run_fused_bisection(pb, p_fix: np.ndarray, lo: np.ndarray, hi: np.ndarray,
         act = np.zeros(S, dtype=bool)
         act[:rows.size] = True
         _DISPATCHES[0] += 1
-        res = fn(pb.w[sel], pb.delta[sel], pb.s[sel], b, np.float64(0.0),
+        res = fn(pb.delta[sel], pb.s[sel], b, np.float64(0.0),
                  pb.prefix[sel], pb.order[sel].astype(np.int64), p_fix[sel],
                  lo[sel], hi[sel], act)
         for name, val in zip(names, res):

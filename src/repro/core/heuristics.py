@@ -256,6 +256,55 @@ def score_2way_kernel(pre_d1, pre_C, pre_e, delta_d1, delta_C, delta_e, b,
     return cyc1, cyc2, dlat
 
 
+def score_kernels(impl: str = "numpy"):
+    """Shared selection interface for the split-scoring kernels: returns
+    ``(score2, score3)`` callables with the ``score_2way_kernel`` /
+    ``score_3way_kernel`` calling convention for the named implementation.
+
+      - ``"numpy"`` — the bit-exact reference (plain elementwise numpy).
+      - ``"jax"``   — the same kernels under ``jax.jit`` (x64, runtime-zero
+        FMA guard), bit-identical to numpy.
+      - ``"pallas"`` — real ``pl.pallas_call`` kernels with BlockSpec tiling
+        and ``pl.when`` masked tiles (:mod:`repro.kernels.split_score`);
+        interpret-mode on CPU (bit-identical on live lanes), compiled on
+        TPU/GPU.  Accepts an extra per-row ``need`` kwarg (live-lane bound)
+        so out-of-band tiles skip compute.
+
+    Every engine backend (``repro.core.batched._Backend``) resolves its
+    kernels through this function, so scalar/numpy/jax/fused/pallas cannot
+    drift apart at the arithmetic core.
+    """
+    import functools
+
+    if impl == "numpy":
+        return (functools.partial(score_2way_kernel, xp=np),
+                functools.partial(score_3way_kernel, xp=np))
+    if impl == "jax":
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+        import jax.numpy as jnp
+
+        # zero is passed as a *runtime* scalar so the kernels' FMA guard
+        # survives XLA constant folding (see score_2way_kernel docstring)
+        j2 = jax.jit(functools.partial(score_2way_kernel, xp=jnp))
+        j3 = jax.jit(functools.partial(score_3way_kernel, xp=jnp))
+        zero = np.float64(0.0)
+        return (lambda *a, **k: j2(*a, zero=zero, **k),
+                lambda *a, **k: j3(*a, zero=zero, **k))
+    if impl == "pallas":
+        import jax
+
+        jax.config.update("jax_enable_x64", True)
+        from ..kernels.split_score import score_2way_pallas, score_3way_pallas
+
+        zero = np.float64(0.0)
+        return (functools.partial(score_2way_pallas, zero=zero),
+                functools.partial(score_3way_pallas, zero=zero))
+    raise ValueError(f"unknown kernel implementation {impl!r}; "
+                     "use 'numpy', 'jax', or 'pallas'")
+
+
 def score_3way_kernel(dI, W, dO, invp, base_term, xp=np, zero=0.0):
     """Cycle times, latency delta, and max cycle of 3-way splits for ONE
     processor permutation.  ``dI``/``W``/``dO``/``invp`` carry the three parts

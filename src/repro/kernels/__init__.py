@@ -1,12 +1,14 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-The paper (pipeline-workflow scheduling) has no kernel-level contribution;
-these kernels implement the substrate's hot spots — attention (prefill +
-decode), fused RMSNorm, and the Mamba2 SSD intra-chunk — as TPU-native
-pallas_call kernels with explicit BlockSpec VMEM tiling.  ``ref.py`` holds
-the pure-jnp oracles; ``ops.py`` the jitted wrappers (interpret mode on CPU).
+Substrate hot spots — attention (prefill + decode), fused RMSNorm, and the
+Mamba2 SSD intra-chunk — as TPU-native pallas_call kernels with explicit
+BlockSpec VMEM tiling (``ref.py`` holds the pure-jnp oracles; ``ops.py`` the
+jitted wrappers, interpret mode on CPU), plus the planner's own hot path:
+``split_score.py`` implements the heuristics' chains-to-chains 2-way/3-way
+candidate scoring as masked-tile pallas kernels, selected behind
+``repro.core.heuristics.score_kernels("pallas")``.
 """
 
-from . import ops, ref
+from . import ops, ref, split_score
 
-__all__ = ["ops", "ref"]
+__all__ = ["ops", "ref", "split_score"]

@@ -30,6 +30,8 @@ Three engines produce identical outputs (asserted by tests/test_batched.py):
   - ``engine="scalar"``: the per-instance reference path (one Python loop per
     instance/bound), kept as the behavioral reference in the same spirit as
     ``heuristics.reference_mode``.
+  - ``engine="auto"``: pick batched/fused per (n, p) from the measured
+    crossover table (:func:`auto_engine`; scalar never wins a campaign).
 
 Replication sweeps (:func:`run_replicated`) rerun a campaign over R disjoint
 seed banks and report mean +/- 95% confidence intervals on the Figures 2-7
@@ -62,7 +64,46 @@ N_PROCS_LARGE = (1000,)
 # sim.generators.FAMILY_SETS; every campaign entry point here takes any
 # family mix sharing (n, p).
 
-ENGINES = ("batched", "fused", "scalar")
+ENGINES = ("batched", "fused", "scalar", "auto")
+
+# Measured engine-crossover table (2-core CPU reference box, warm jits; the
+# README's engine-selection section reproduces it).  Scalar never wins a
+# campaign — it exists as the behavioral reference.  The span-bucketed fused
+# engine wins the small/medium grids; the numpy lockstep engine keeps a small
+# edge once per-(n,arity) chunking splits the batch (large n at p=1000):
+#
+#   (n, p)       scalar    numpy-batched   fused (warm)
+#   (5, 10)      1.4 s     0.13 s          0.10 s
+#   (10, 10)     2.1 s     0.17 s          0.13 s
+#   (20, 100)    4.0 s     0.32 s          0.31 s
+#   (40, 100)    9.6 s     0.85 s          0.89 s
+#   (80, 1000)   —         0.41 s          0.61 s
+#   (160, 1000)  —         1.06 s          1.37 s
+#
+# (E1-E4, n_pairs=50 small / 4 large, n_bounds=8, h4_iters=6.)
+_AUTO_FUSED_MAX_NP = 2_000     # n * p at/below which fused wins on CPU
+
+
+def auto_engine(n: int, p: int) -> str:
+    """Pick the fastest engine for an (n, p) campaign point from the measured
+    crossover table above: on accelerators always ``fused`` (the O(1)-dispatch
+    design is the point); on CPU ``fused`` below the measured ``n * p``
+    crossover, ``batched`` above it; ``batched`` when jax is unavailable."""
+    from ..core.fused import fused_available
+
+    if not fused_available():
+        return "batched"
+    import jax
+
+    if jax.default_backend() in ("tpu", "gpu"):
+        return "fused"
+    return "fused" if n * p <= _AUTO_FUSED_MAX_NP else "batched"
+
+
+def _resolve_engine(engine: str, n: int, p: int) -> str:
+    if engine == "auto":
+        return auto_engine(n, p)
+    return engine
 
 
 def _campaign_backend(engine: str, backend: str) -> str:
@@ -112,6 +153,7 @@ def run_experiment(
     period_fracs = np.geomspace(0.04, 1.0, n_bounds)     # x single-processor period
     latency_mults = np.linspace(1.0, 3.0, n_bounds)      # x optimal latency
 
+    engine = _resolve_engine(engine, n, p)
     if engine in ("batched", "fused"):
         return run_campaign([exp], n, p, n_pairs=n_pairs, n_bounds=n_bounds,
                             seed0=seed0, h4_iters=h4_iters,
@@ -332,15 +374,17 @@ def failure_thresholds(
     exps = list(exps)
     out: dict = {exp: {c: {} for c in ["H1", "H2", "H3", "H4", "H5", "H6"]}
                  for exp in exps}
-    if engine in ("batched", "fused"):
-        # one stacked pass per n across ALL experiment families
+    if engine in ("batched", "fused", "auto"):
+        # one stacked pass per n across ALL experiment families; "auto"
+        # resolves per n (each n is its own campaign point)
         seeds = [seed0 + k for k in range(n_pairs)]
         for n in ns:
             batches = [gen_instance_batch(exp, n, p, seeds) for exp in exps]
             pb = ProblemBatch.concat(batches)
             trajsets = batched_trajectory_sets(
                 ["H1", "H2", "H3", "H4"], pb,
-                backend=_campaign_backend(engine, backend))
+                backend=_campaign_backend(_resolve_engine(engine, n, p),
+                                          backend))
             for c, trajs in trajsets.items():
                 for ei, exp in enumerate(exps):
                     sl = trajs[ei * n_pairs:(ei + 1) * n_pairs]
@@ -439,6 +483,7 @@ def run_replicated(
     """
     if engine not in ENGINES:
         raise ValueError(f"unknown engine {engine!r}; use one of {ENGINES}")
+    engine = _resolve_engine(engine, n, p)
     if engine == "scalar":  # the reference path replicates per experiment
         camps = [{exp: run_experiment(exp, n, p, n_pairs=n_pairs,
                                       n_bounds=n_bounds,

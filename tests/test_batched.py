@@ -109,21 +109,29 @@ def test_fused_large_grid_smoke():
 
 
 def test_fused_trace_count_per_campaign():
-    """The O(1)-trace contract: a whole campaign (trajectories for H1-H4, the
+    """The trace contracts: a whole campaign (trajectories for H1-H4, the
     fused-scan H4 bisection, H5/H6 over the bound grid) compiles at most 3
     fused programs — one lockstep loop per split arity plus one bisection
-    scan — and a rerun of the same shapes compiles none."""
+    scan — whose span-bucketed candidate branches stay within the O(log n)
+    buckets-per-arity budget; a rerun of the same shapes compiles none."""
     pytest.importorskip("jax")
     from repro.core import fused
 
     # a shape no other test uses, so the lru-cached programs are cold
     kw = dict(n_pairs=3, n_bounds=5, h4_iters=4, include_h4=True)
     fused.reset_trace_count()
+    fused.reset_bucket_trace_count()
     camp = run_campaign(("E1", "I2"), 9, 7, backend="fused", **kw)
     assert fused.trace_count() <= 3
+    # every traced program traces each of its arity's buckets exactly once:
+    # the per-campaign bucket-trace count is capped at O(log n) per arity
+    assert fused.bucket_trace_count() <= fused.trace_budget(9)
+    assert fused.trace_budget(9) <= 3 * (int(np.ceil(np.log2(9))) + 1)
     fused.reset_trace_count()
+    fused.reset_bucket_trace_count()
     camp2 = run_campaign(("E1", "I2"), 9, 7, backend="fused", **kw)
     assert fused.trace_count() == 0  # warm: dispatches only, no re-trace
+    assert fused.bucket_trace_count() == 0
     for exp in ("E1", "I2"):
         assert summarize_experiment(camp[exp]) == summarize_experiment(camp2[exp])
         solo = run_experiment(exp, 9, 7, engine="scalar", **kw)

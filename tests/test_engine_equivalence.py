@@ -6,11 +6,12 @@ in ``repro.sim.EXPERIMENTS`` (the paper's E1-E4 and the image-processing
 study's I1-I4 — plus anything added via ``register_experiment``, which these
 tests pick up automatically) and both paper processor counts, the scalar
 per-instance path, the numpy lockstep engine, the ``backend="jax"`` kernels,
-and the fully-fused ``backend="fused"`` engine must produce EXACTLY the same
-floats (==, not approx) for:
+the fully-fused span-bucketed ``backend="fused"`` engine, and the
+``backend="pallas"`` split-scoring kernels (interpret mode on CPU) must
+produce EXACTLY the same floats (==, not approx) for:
 
   - H1-H4 split trajectories (the campaign sweep primitive),
-  - the H4 binary search (including the new fused ``lax.scan`` bisection),
+  - the H4 binary search (including the fused ``lax.scan`` bisection),
   - H5/H6 fixed-latency solves over bound grids spanning infeasible through
     exhaustion.
 
@@ -39,7 +40,7 @@ def _jax_backends():
         import jax  # noqa: F401
     except Exception:  # pragma: no cover - jax is baked into the image
         return ()
-    return ("jax", "fused")
+    return ("jax", "fused", "pallas")
 
 
 ENGINE_BACKENDS = ("numpy",) + _jax_backends()

@@ -175,6 +175,54 @@ def _engine_backends():
     return ("numpy", "fused")
 
 
+def test_bucket_routing_smallest_covering():
+    """Span-bucket routing: for every possible worst-interval span, the fused
+    engine's bucket index selects the SMALLEST bucket covering it — and the
+    bucket ladder is geometric (each at most double the previous, O(log n)
+    rungs), so the trace cap follows."""
+    pytest.importorskip("jax")
+    from repro.core import fused
+
+    for n in (2, 3, 4, 5, 9, 12, 16, 40, 160, 161):
+        for k, lo_need, hi_need in ((1, 1, n - 1), (2, 3, n)):
+            sizes = fused.bucket_sizes(n, k)
+            if not sizes:
+                assert k == 2 and n < 3
+                continue
+            assert len(sizes) <= int(np.ceil(np.log2(max(n, 2)))) + 1, (n, k)
+            assert all(b <= 2 * a for a, b in zip(sizes, sizes[1:])), (n, k)
+            assert sizes[-1] == hi_need  # top bucket exactly covers the grid
+            for need in range(lo_need, hi_need + 1):
+                idx = fused.bucket_index(need, sizes)
+                assert sizes[idx] >= need, (n, k, need)          # covering
+                covering = [s for s in sizes if s >= need]
+                assert sizes[idx] == covering[0], (n, k, need)   # smallest
+
+
+def test_bucket_padding_lanes_inert():
+    """Adversarial span skew: a batch mixing a row whose worst interval stays
+    WIDE (flat works on a rich platform splits evenly) with rows that
+    collapse to tiny spans immediately must route every iteration to the
+    wide row's bucket — and the small-span rows' masked padding lanes must
+    not change any trajectory vs the numpy engine (which compacts spans
+    per-iteration instead of bucketing)."""
+    pytest.importorskip("jax")
+    n, p = 24, 12
+    wide = (make_workload([10.0] * n, [1.0] * (n + 1)),
+            make_platform([20.0, 19.0, 18.0, 17.0, 16.0, 15.0] + [14.0] * (p - 6),
+                          b=10.0))
+    # one huge stage: the worst interval narrows to a tiny span right away
+    skew_w = [1.0] * n
+    skew_w[n // 2] = 1000.0
+    skewed = (make_workload(skew_w, [1.0] * (n + 1)),
+              make_platform([20.0, 10.0, 5.0, 2.5] + [1.0] * (p - 4), b=10.0))
+    pairs = [skewed, wide, skewed, skewed]
+    for code in ("H1", "H2", "H3", "H4"):
+        ref = batched_trajectories(code, pairs, backend="numpy")
+        got = batched_trajectories(code, pairs, backend="fused")
+        assert got == ref, code
+
+
 @fixed_shape_property
 def test_padding_with_converged_rows_is_inert(wl, pf):
     """Batching an instance together with rows that converge immediately

@@ -118,3 +118,90 @@ def test_ssd_kernel_matches_model_path():
     y2, s2 = model_ssd(x, dt, A, Bm, Cm, chunk=32)
     np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=2e-4)
     np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Split-scoring kernels (repro.kernels.split_score): the heuristics' 2-way /
+# 3-way candidate evaluation as pallas masked tiles, bit-identical to the
+# shared numpy kernels on every live lane (float64, interpret mode).
+# ---------------------------------------------------------------------------
+
+
+def _split_inputs(rng, A, K):
+    pre = np.sort(rng.uniform(0.0, 100.0, (A, K + 2)), axis=1)
+    pre_d1, pre_C, pre_e = pre[:, :1], pre[:, 1:-1], pre[:, -1:]
+    delta = rng.uniform(0.0, 50.0, (A, K + 2))
+    del_d1, del_C, del_e = delta[:, :1], delta[:, 1:-1], delta[:, -1:]
+    inv_j = rng.uniform(0.05, 2.0, (A, 1))
+    inv_p = rng.uniform(0.05, 2.0, (A, 1))
+    return pre_d1, pre_C, pre_e, del_d1, del_C, del_e, inv_j, inv_p
+
+
+@pytest.mark.parametrize("A,K", [(5, 37), (8, 128), (17, 300), (1, 1)])
+def test_split_score_2way_matches_numpy_on_live_lanes(A, K):
+    from repro.core.heuristics import score_2way_kernel
+    from repro.kernels import split_score
+
+    rng = np.random.default_rng(11)
+    ins = _split_inputs(rng, A, K)
+    b = 10.0
+    need = rng.integers(1, K + 1, A)
+    want = score_2way_kernel(*ins[:6], b, *ins[6:], xp=np)
+    got = split_score.score_2way_pallas(*ins[:6], b, *ins[6:], need=need)
+    for g, w in zip(got, want):
+        g = np.asarray(g)
+        assert g.shape == w.shape
+        # live lanes (cut offsets < need, in both placement-order halves)
+        # are bit-identical; everything else is masked-tile zero padding
+        # or computed-but-dead lanes the callers never select
+        lanes = np.arange(K)[None, :] < need[:, None]
+        live = np.concatenate([lanes, lanes], axis=1)
+        assert np.array_equal(g[live], w[live])
+
+
+@pytest.mark.parametrize("A,span", [(4, 5), (9, 12), (16, 20)])
+def test_split_score_3way_matches_numpy_on_live_lanes(A, span):
+    from repro.core.heuristics import _PERMS3, score_3way_kernel
+    from repro.kernels import split_score
+
+    rng = np.random.default_rng(13)
+    o1, o2 = np.triu_indices(span - 1, k=1)
+    K = o1.size
+    dI = rng.uniform(0.0, 10.0, (A, 3, K))
+    W = rng.uniform(0.1, 100.0, (A, 3, K))
+    dO = rng.uniform(0.0, 10.0, (A, 3, K))
+    inv = rng.uniform(0.05, 2.0, (A, 3))
+    invp = inv[:, np.asarray(_PERMS3)][:, :, :, None]
+    base = rng.uniform(1.0, 50.0, (A, 1, 1))
+    spans = rng.integers(3, span + 1, A)
+    need = split_score.pair_need(spans, span)
+    want = score_3way_kernel(dI[:, None], W[:, None], dO[:, None], invp, base,
+                             xp=np)
+    got = split_score.score_3way_pallas(dI[:, None], W[:, None], dO[:, None],
+                                        invp, base, need=need)
+    # lane validity mirrors batched._choose_3way: pair (o1, o2) is live for
+    # span s iff o2 <= s - 2; all live lanes sit below the pair_need bound
+    live_l = o2[None, :] <= (spans - 2)[:, None]
+    assert (np.nonzero(live_l)[1] < need[np.nonzero(live_l)[0]]).all()
+    for g, w in zip(got, want):
+        g = np.asarray(g)
+        assert g.shape == w.shape
+        live = np.broadcast_to(live_l[:, None, None, :], w.shape) \
+            if w.ndim == 4 else np.broadcast_to(live_l[:, None, :], w.shape)
+        assert np.array_equal(g[live], w[live])
+
+
+def test_split_score_masked_tiles_zero_filled():
+    """Tiles wholly past every row's live-lane bound skip compute via
+    pl.when and are zero-filled."""
+    from repro.kernels import split_score
+
+    rng = np.random.default_rng(17)
+    A, K = 8, 512
+    ins = _split_inputs(rng, A, K)
+    need = np.full(A, 3)                    # one live tile of 128 lanes
+    cyc1, _, _ = split_score.score_2way_pallas(*ins[:6], 10.0, *ins[6:],
+                                               need=need, block_k=128)
+    cyc1 = np.asarray(cyc1)
+    assert np.array_equal(cyc1[:, 128:K], np.zeros((A, K - 128)))
+    assert not np.any(cyc1[:, :3] == 0.0)   # live lanes computed
