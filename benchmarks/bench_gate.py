@@ -15,7 +15,10 @@ string; this gate turns those into hard CI failures:
      static-grid tax this PR removed would show up here as a multiple).
   4. **Bucket-trace cap** — large-grid rows record their bucket-trace count;
      it must stay within the O(log n) budget they also record.
-  5. **Cross-run regression** (optional ``--baseline``) — when a baseline
+  5. **Fleet service floors** — the ``fleet_replan_*`` rows (burst-trace
+     replay through the replanning service) must clear a dedup hit-rate
+     floor and a replans/sec floor on the standard trace.
+  6. **Cross-run regression** (optional ``--baseline``) — when a baseline
      BENCH_planner.json of the SAME ``_meta.mode`` is given, warm fused
      rows must not regress more than ``--tolerance`` (default 1.6x, absorbing
      runner noise).  Different modes (quick CI vs full local) skip this
@@ -44,11 +47,22 @@ REQUIRED_PREFIXES = (
     "deal_enum_batched",
     "split_score_2way_pallas_",
     "split_score_3way_pallas_",
+    "fleet_replan_throughput",
+    "fleet_replan_latency",
+    "fleet_replan_dedup",
+    "fleet_replan_churn",
 )
 
 # warm span-bucketed fused may trail numpy-batched by at most this factor on
 # CPU (measured ~1.0-1.3x either way; the pre-bucketing tax was 2.5-10x)
 FUSED_VS_BATCHED_FLOOR = 0.4
+
+# fleet service floors on the standard/quick burst traces (measured 0.86 full
+# / 0.68 quick hit-rate and ~6800/~3900 replans/s locally; the floors are set
+# far below so they only trip on a broken dedup path or a collapsed batch
+# engine, not on runner speed)
+FLEET_DEDUP_FLOOR = 0.3
+FLEET_REPLANS_PER_SEC_FLOOR = 200.0
 
 
 def _fail(msgs: list, msg: str) -> None:
@@ -94,7 +108,20 @@ def check(bench: dict, baseline: dict = None, tolerance: float = 1.6) -> list:
                              f"exceeds O(log n) budget "
                              f"{v['bucket_trace_budget']}")
 
-    # 5. cross-run regression vs a same-mode baseline
+    # 5. fleet service: dedup hit-rate and replans/sec floors
+    for k, v in rows.items():
+        if k.startswith("fleet_replan_dedup"):
+            rate = v.get("dedup_hit_rate")
+            if rate is None or rate < FLEET_DEDUP_FLOOR:
+                _fail(fails, f"{k}: dedup_hit_rate={rate!r} below floor "
+                             f"{FLEET_DEDUP_FLOOR} — signature dedup broken")
+        if k.startswith("fleet_replan_throughput"):
+            rps = v.get("replans_per_sec")
+            if rps is None or rps < FLEET_REPLANS_PER_SEC_FLOOR:
+                _fail(fails, f"{k}: replans_per_sec={rps!r} below floor "
+                             f"{FLEET_REPLANS_PER_SEC_FLOOR}")
+
+    # 6. cross-run regression vs a same-mode baseline
     if baseline is not None:
         mode = bench.get("_meta", {}).get("mode")
         base_mode = baseline.get("_meta", {}).get("mode")
@@ -133,7 +160,8 @@ def main() -> int:
         v = bench[k]
         extras = {f: v[f] for f in ("speedup_vs_scalar", "vs_batched",
                                     "dispatches", "bucket_traces",
-                                    "cache_speedup", "vs_numpy")
+                                    "cache_speedup", "vs_numpy",
+                                    "dedup_hit_rate", "replans_per_sec")
                   if f in v}
         if extras:
             print(f"  {k}: {extras}")

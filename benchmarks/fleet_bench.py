@@ -1,0 +1,83 @@
+"""Fleet replanning benchmark: burst-trace replay through the service.
+
+Replays the *standard trace* — a fixed-seed correlated burst trace over a
+replicated fleet — through :class:`repro.fleet.ReplanService` and records
+ROADMAP item 2's success metrics as ``fleet_replan_*`` rows:
+
+  - ``fleet_replan_throughput`` — replans/sec over the whole replay
+  - ``fleet_replan_latency``    — p50/p99 per-request replan latency
+  - ``fleet_replan_dedup``      — signature dedup hit-rate (gated floor)
+  - ``fleet_replan_churn``      — mean fraction of layers remapped
+
+Unlike ``planner_bench.py`` (which regenerates BENCH_planner.json wholesale),
+this script MERGES its rows into the existing file so the two benchmarks can
+run independently; ``benchmarks/bench_gate.py`` requires the rows and gates
+the dedup and throughput floors.
+
+    PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--backend B]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+BENCH_JSON = REPO_ROOT / "BENCH_planner.json"
+
+from repro.fleet import ReplanService, gen_burst_trace, make_fleet  # noqa: E402
+
+# The standard trace: every number fixed so the measured dedup hit-rate and
+# throughput are comparable across PRs (bench_gate floors assume this shape).
+STANDARD = dict(n_groups=16, replicas=16, n=12, p=6, fleet_seed=2007,
+                num_ticks=30, trace_seed=42, burst_prob=0.6)
+QUICK = dict(n_groups=6, replicas=8, n=8, p=4, fleet_seed=2007,
+             num_ticks=12, trace_seed=42, burst_prob=0.6)
+
+
+def run(quick: bool = False, backend: str = "numpy") -> list:
+    cfg = QUICK if quick else STANDARD
+    pairs, groups = make_fleet(cfg["n_groups"], cfg["replicas"], cfg["n"],
+                               cfg["p"], seed=cfg["fleet_seed"])
+    trace = gen_burst_trace(groups, cfg["num_ticks"], seed=cfg["trace_seed"],
+                            n_stages=cfg["n"], initial_pods=cfg["p"],
+                            burst_prob=cfg["burst_prob"])
+    svc = ReplanService(pairs, backend=backend)
+    metrics = svc.run_trace(trace)
+    extra = {"backend": backend, "fleet_size": len(pairs),
+             "digest": svc.fleet_digest()}
+    return metrics.bench_rows(extra=extra)
+
+
+def merge_bench_json(rows, path: pathlib.Path = BENCH_JSON,
+                     mode: str = "full") -> None:
+    """Merge rows into the existing BENCH json (planner_bench owns the file
+    and overwrites it wholesale; we only add/update our rows)."""
+    payload = json.loads(path.read_text()) if path.exists() else {}
+    payload.setdefault("_meta", {})["mode"] = mode
+    for row in rows:
+        name, us, derived = row[0], row[1], row[2]
+        entry = {"us_per_call": us, "derived": derived}
+        if len(row) > 3 and row[3]:
+            entry.update(row[3])
+        payload[name] = entry
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--backend", default="numpy")
+    args = ap.parse_args()
+    rows = run(quick=args.quick, backend=args.backend)
+    for name, us, derived, _ in rows:
+        print(f"{name},{'' if us is None else f'{us:.1f}'},{derived}")
+    merge_bench_json(rows, mode="quick" if args.quick else "full")
+    print(f"# merged into {BENCH_JSON}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,9 +19,10 @@ from .metrics import (Mapping, period, latency, evaluate, evaluate_batch,
                       all_interval_partitions)
 from .heuristics import (HeuristicResult, run_heuristic, NAMES,
                          FIXED_PERIOD_HEURISTICS, FIXED_LATENCY_HEURISTICS,
+                         min_period_exhaustive,
                          sp_mono_p, explo3_mono, explo3_bi, sp_bi_p, sp_mono_l, sp_bi_l)
-from .batched import (ProblemBatch, batched_fixed_latency, batched_sp_bi_p,
-                      batched_trajectories, stack_instances)
+from .batched import (ProblemBatch, batched_fixed_latency, batched_min_period,
+                      batched_sp_bi_p, batched_trajectories, stack_instances)
 from .exact import (brute_force, exact_min_period, exact_min_latency,
                     dp_homogeneous_period, dp_speed_ordered, pareto_exact)
 from .pareto import pareto_front, tradeoff_curves, sweep_heuristic, sweep_solver
@@ -41,9 +42,10 @@ __all__ = [
     "intervals_from_cuts", "all_interval_partitions",
     "HeuristicResult", "run_heuristic", "NAMES",
     "FIXED_PERIOD_HEURISTICS", "FIXED_LATENCY_HEURISTICS",
+    "min_period_exhaustive",
     "sp_mono_p", "explo3_mono", "explo3_bi", "sp_bi_p", "sp_mono_l", "sp_bi_l",
-    "ProblemBatch", "batched_fixed_latency", "batched_sp_bi_p",
-    "batched_trajectories", "stack_instances",
+    "ProblemBatch", "batched_fixed_latency", "batched_min_period",
+    "batched_sp_bi_p", "batched_trajectories", "stack_instances",
     "brute_force", "exact_min_period", "exact_min_latency",
     "dp_homogeneous_period", "dp_speed_ordered", "pareto_exact",
     "pareto_front", "tradeoff_curves", "sweep_heuristic", "sweep_solver",

@@ -53,8 +53,8 @@ from .metrics import Mapping
 
 __all__ = [
     "ProblemBatch", "stack_instances", "batched_trajectories",
-    "batched_trajectory_sets", "batched_fixed_latency", "batched_sp_bi_p",
-    "h4_search_bounds",
+    "batched_trajectory_sets", "batched_fixed_latency", "batched_min_period",
+    "batched_sp_bi_p", "h4_search_bounds",
 ]
 
 
@@ -105,6 +105,28 @@ class ProblemBatch:
             cached = np.concatenate([self.delta, self.prefix, self.s], axis=1)
             object.__setattr__(self, "_packed", cached)
         return cached
+
+    @classmethod
+    def from_arrays(cls, w, delta, s, b: float) -> "ProblemBatch":
+        """Build a batch straight from stacked arrays — the entry point for
+        callers that already hold heterogeneous platform rows (e.g. the fleet
+        service's observed per-pod speeds) and should not have to materialize
+        B Workload/Platform objects just to stack them again.  ``prefix`` and
+        ``order`` are derived exactly like ``Workload.prefix_w`` /
+        ``Platform.sorted_indices`` so downstream results stay bit-identical
+        to the object path."""
+        w = np.asarray(w, dtype=np.float64)
+        delta = np.asarray(delta, dtype=np.float64)
+        s = np.asarray(s, dtype=np.float64)
+        if w.ndim != 2 or s.ndim != 2 or s.shape[0] != w.shape[0]:
+            raise ValueError(f"need 2-D stacked rows, got w{w.shape} s{s.shape}")
+        if delta.shape != (w.shape[0], w.shape[1] + 1):
+            raise ValueError(f"need delta shape (B, n+1), got {delta.shape}")
+        B = w.shape[0]
+        prefix = np.concatenate([np.zeros((B, 1)), np.cumsum(w, axis=1)], axis=1)
+        order = np.lexsort((np.broadcast_to(np.arange(s.shape[1]), s.shape), -s),
+                           axis=-1)
+        return cls(w=w, delta=delta, s=s, b=float(b), prefix=prefix, order=order)
 
     @classmethod
     def concat(cls, batches: Sequence) -> "ProblemBatch":
@@ -757,6 +779,56 @@ def batched_fixed_latency(code: str, batch, bounds, backend: str = "numpy") -> l
             else HeuristicResult(st.mapping(i), float(per[i]), float(lat[i]),
                                  True, int(st.splits[i]), name)
             for i in range(pb.B)]
+
+
+# Strategy order mirrors heuristics.min_period_exhaustive: (name, arity, bi)
+_MIN_PERIOD_STRATEGIES = (
+    ("Sp mono L", 1, False),
+    ("Sp bi L", 1, True),
+    ("3-Explo mono", 2, False),
+    ("3-Explo bi", 2, True),
+)
+
+
+def batched_min_period(batch, backend: str = "numpy") -> list:
+    """Unbounded min-period portfolio for B problems at once — the batched
+    ``heuristics.min_period_exhaustive``.
+
+    Two lockstep runs cover all four exhaustion strategies: each run tiles the
+    batch x2 with per-row choice mode (mono rows then bi rows), one run per
+    split arity.  The per-problem winner is the lexicographically smallest
+    (period, latency, strategy order), with the same strict float comparisons
+    as the scalar tuple-min — so every returned float and mapping is
+    bit-identical to the scalar portfolio (asserted in tests/test_fleet.py).
+    This is the fleet replanning service's solve primitive.
+    """
+    pb = _as_problem_batch(batch)
+    B = pb.B
+    rows2 = np.tile(np.arange(B), 2)
+    bi_mode = np.concatenate([np.zeros(B, dtype=bool), np.ones(B, dtype=bool)])
+    states = []
+    for k in (1, 2):
+        st = _BatchState(pb.take(rows2))
+        _run_loop(st, k, bi_mode, np.full(2 * B, -np.inf),
+                  np.full(2 * B, np.inf), backend)
+        states.append(st)
+    st1, st2 = states
+    per1, lat1 = st1.period(), st1.latency()
+    per2, lat2 = st2.period(), st2.latency()
+    per = np.stack([per1[:B], per1[B:], per2[:B], per2[B:]])   # (4, B)
+    lat = np.stack([lat1[:B], lat1[B:], lat2[:B], lat2[B:]])
+    strat = np.broadcast_to(np.arange(4)[:, None], per.shape)
+    win = np.lexsort((strat, lat, per), axis=0)[0]
+    out = []
+    for i in range(B):
+        wi = int(win[i])
+        st = st1 if wi < 2 else st2
+        row = i + (wi % 2) * B
+        out.append(HeuristicResult(st.mapping(row), float(per[wi, i]),
+                                   float(lat[wi, i]), True,
+                                   int(st.splits[row]),
+                                   _MIN_PERIOD_STRATEGIES[wi][0]))
+    return out
 
 
 def evaluate_state_rows(workloads, platforms, state: "_BatchState",

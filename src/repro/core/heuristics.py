@@ -576,6 +576,32 @@ def sp_bi_l(workload: Workload, platform: Platform, l_fix: float) -> HeuristicRe
     return st.result("Sp bi L", True, splits)
 
 
+def min_period_exhaustive(workload: Workload, platform: Platform) -> HeuristicResult:
+    """Unbounded min-period portfolio: every splitting strategy run to
+    exhaustion, best result wins.
+
+    With no latency constraint the paper's six heuristics collapse to four
+    distinct exhaustion runs: H1 and H5 are the same 2-way/mono loop once the
+    period stop-bound is unreachable and the latency limit is infinite, H6
+    and H4's inner splitter (at unbounded authorized latency) are the 2-way/bi
+    loop, and H2/H3 are the 3-way runs.  The winner is the lexicographically
+    best (period, latency), ties broken by strategy order below — the scalar
+    reference for the fleet replanning service's batched solves
+    (:func:`repro.core.batched.batched_min_period` is bit-identical)."""
+    runs = (
+        sp_mono_l(workload, platform, math.inf),      # 2-way mono (H1/H5)
+        sp_bi_l(workload, platform, math.inf),        # 2-way bi   (H4/H6)
+        explo3_mono(workload, platform, -math.inf),   # 3-way mono (H2)
+        explo3_bi(workload, platform, -math.inf),     # 3-way bi   (H3)
+    )
+    best = min(range(len(runs)),
+               key=lambda i: (runs[i].period, runs[i].latency, i))
+    r = runs[best]
+    # exhaustion runs carry the stop-bound's feasibility flag; the unbounded
+    # objective is always satisfied
+    return HeuristicResult(r.mapping, r.period, r.latency, True, r.splits, r.name)
+
+
 # ---------------------------------------------------------------------------
 # Registry
 # ---------------------------------------------------------------------------

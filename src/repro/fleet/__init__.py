@@ -1,0 +1,39 @@
+"""Fleet replanning service: planning-as-a-service over the paper's heuristics.
+
+The paper plans one pipeline offline.  Online, observed drift — stragglers,
+preemptions, autoscale events — turns a homogeneous platform into a
+different-speed one, where chains-to-chains mapping is NP-hard and the paper's
+fast heuristics are the only option.  A fleet runs thousands of pipeline
+instances at once, so one-off ``plan()`` calls do not scale; this subsystem
+ingests a drift-event stream, dedups identical-up-to-relabeling replan
+requests through canonical instance signatures, and batches the distinct
+problems through the lockstep engine (:mod:`repro.core.batched`) so a tick's
+worth of replans costs a few device programs instead of thousands of scalar
+solves.
+
+Modules:
+
+  - :mod:`repro.fleet.telemetry`  — drift event types, synthetic burst-trace
+    generator, deterministic trace replay
+  - :mod:`repro.fleet.signatures` — canonical (n, speed-order, span-bucket)
+    instance signatures + the relabeling theorem that makes dedup exact
+  - :mod:`repro.fleet.service`    — the controller loop: collect, dedup,
+    warm-start, batch-solve, publish
+  - :mod:`repro.fleet.metrics`    — replans/sec, p50/p99 replan latency,
+    dedup hit-rate, plan churn (the BENCH surface)
+"""
+
+from .telemetry import (PodCountChange, PodFailure, StageDrift, StageTimings,
+                        Trace, gen_burst_trace, make_fleet)
+from .signatures import (Signature, canonicalize, remap_alloc, signature,
+                         span_bucket)
+from .service import InstanceState, ReplanService
+from .metrics import FleetMetrics
+
+__all__ = [
+    "StageTimings", "StageDrift", "PodCountChange", "PodFailure",
+    "Trace", "gen_burst_trace", "make_fleet",
+    "Signature", "signature", "canonicalize", "remap_alloc", "span_bucket",
+    "ReplanService", "InstanceState",
+    "FleetMetrics",
+]

@@ -1,0 +1,116 @@
+"""Fleet service metrics: the numbers ROADMAP item 2 asks to be gated.
+
+The service calls :meth:`FleetMetrics.record_tick` once per controller tick
+with that tick's request count, solve count, warm-start hits, wall time, and
+per-instance plan churn.  Aggregates:
+
+  - ``replans_per_sec``  — published replans / total solve wall time
+  - ``p50 / p99 latency`` — per-request replan latency; every request in a
+    tick shares the tick's collect-to-publish wall time (requests are only
+    answered at the tick boundary, so that *is* each request's latency)
+  - ``dedup_hit_rate``   — fraction of requests that did NOT need their own
+    solve (same-tick signature sharing + cross-tick warm-start hits)
+  - ``plan_churn``       — mean fraction of layers whose pod assignment
+    changed across a replan (placement stability)
+
+``bench_rows`` formats these as ``fleet_replan_*`` rows in the
+BENCH_planner.json row schema ((name, us_per_call, derived, extra-dict)) so
+``benchmarks/bench_gate.py`` can gate floors on structured numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class FleetMetrics:
+    """Aggregated counters over a service run (one trace replay)."""
+
+    ticks: int = 0
+    requests: int = 0       # replan requests = dirty instances across ticks
+    solves: int = 0         # canonical problems actually solved (batched rows)
+    warm_hits: int = 0      # cross-tick plan-cache hits
+    events: int = 0
+    solve_wall: float = 0.0  # seconds spent collect-to-publish
+    latencies: list = dataclasses.field(default_factory=list)
+    churns: list = dataclasses.field(default_factory=list)
+
+    def record_tick(self, *, requests: int, solves: int, warm_hits: int,
+                    events: int, wall: float, churns) -> None:
+        self.ticks += 1
+        self.requests += requests
+        self.solves += solves
+        self.warm_hits += warm_hits
+        self.events += events
+        self.solve_wall += wall
+        self.latencies.extend([wall] * requests)
+        self.churns.extend(float(c) for c in churns)
+
+    # -- aggregates -----------------------------------------------------------
+    def dedup_hit_rate(self) -> float:
+        if not self.requests:
+            return 0.0
+        return 1.0 - self.solves / self.requests
+
+    def replans_per_sec(self) -> float:
+        if self.solve_wall <= 0:
+            return 0.0
+        return self.requests / self.solve_wall
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.latencies:
+            return 0.0
+        return float(np.percentile(np.asarray(self.latencies), q))
+
+    def mean_churn(self) -> float:
+        if not self.churns:
+            return 0.0
+        return float(np.mean(self.churns))
+
+    def summary(self) -> dict:
+        return {
+            "ticks": self.ticks,
+            "events": self.events,
+            "requests": self.requests,
+            "solves": self.solves,
+            "warm_hits": self.warm_hits,
+            "dedup_hit_rate": self.dedup_hit_rate(),
+            "replans_per_sec": self.replans_per_sec(),
+            "p50_latency_us": self.latency_percentile(50) * 1e6,
+            "p99_latency_us": self.latency_percentile(99) * 1e6,
+            "mean_churn": self.mean_churn(),
+        }
+
+    def bench_rows(self, suffix: str = "", extra: Optional[dict] = None) -> list:
+        """BENCH_planner.json rows (name, us_per_call, derived, extra)."""
+        s = self.summary()
+        tag = f"_{suffix}" if suffix else ""
+        shared = dict(s)
+        if extra:
+            shared.update(extra)
+        return [
+            (f"fleet_replan_throughput{tag}",
+             1e6 / s["replans_per_sec"] if s["replans_per_sec"] else None,
+             f"{s['replans_per_sec']:.0f} replans/s over {s['requests']} "
+             f"requests in {s['ticks']} ticks",
+             shared),
+            (f"fleet_replan_latency{tag}", s["p50_latency_us"],
+             f"p50={s['p50_latency_us']:.0f}us p99={s['p99_latency_us']:.0f}us",
+             {"p50_latency_us": s["p50_latency_us"],
+              "p99_latency_us": s["p99_latency_us"]}),
+            (f"fleet_replan_dedup{tag}", None,
+             f"hit-rate {s['dedup_hit_rate']:.3f} "
+             f"({s['requests']} requests -> {s['solves']} solves, "
+             f"{s['warm_hits']} warm hits)",
+             {"dedup_hit_rate": s["dedup_hit_rate"],
+              "requests": s["requests"], "solves": s["solves"],
+              "warm_hits": s["warm_hits"]}),
+            (f"fleet_replan_churn{tag}", None,
+             f"mean fraction of layers remapped per replan: "
+             f"{s['mean_churn']:.3f}",
+             {"mean_churn": s["mean_churn"]}),
+        ]

@@ -1,0 +1,226 @@
+"""The fleet controller loop: collect → dedup → warm-start → batch → publish.
+
+Per tick the service applies every arriving drift event to its instance's
+state (EWMA straggler monitor, platform degradation, elastic resize, pod
+removal), collects the *dirty* instances — those whose effective platform
+changed — and answers all of their replan requests together:
+
+  1. each dirty instance's problem is canonicalized and signed
+     (:mod:`repro.fleet.signatures`); instances that are the same problem up
+     to processor relabeling share one signature,
+  2. signatures already in the cross-tick plan cache are warm-start hits:
+     the previous solve is reused byte-for-byte (exact-bytes signatures mean
+     a hit can never change a result, only skip work),
+  3. the remaining distinct problems are grouped by (n, p, b) shape, stacked
+     with :meth:`ProblemBatch.from_arrays`, and solved in two lockstep runs
+     per group via :func:`repro.core.batched.batched_min_period` —
+     thousands of requests become a handful of engine programs,
+  4. every dirty instance receives its plan by remapping the canonical
+     allocation through its own speed-sort permutation and is republished as
+     a :class:`StagePlan`; its straggler monitor resets to the new stage
+     count.
+
+The published plans are bit-identical to running the scalar portfolio
+``min_period_exhaustive(workload, platform)`` per instance (relabeling
+theorem + the batched engine's equivalence contract; asserted in
+tests/test_fleet.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core import Mapping, Platform, StagePlan, interval_cycle_times
+from ..core.batched import ProblemBatch, batched_min_period
+from ..core.planner import _realize
+from ..pipeline.replan import StragglerMonitor, elastic_platform
+from .metrics import FleetMetrics
+from .signatures import canonicalize, remap_alloc, signature
+from .telemetry import (PodCountChange, PodFailure, StageDrift, StageTimings,
+                        Trace)
+
+
+@dataclasses.dataclass
+class InstanceState:
+    """One pipeline instance as the service sees it: the workload, the
+    *effective* platform (with every observed degradation folded in), the
+    current published plan, and the straggler monitor for that plan."""
+
+    workload: object
+    platform: Platform
+    plan: Optional[StagePlan] = None
+    monitor: Optional[StragglerMonitor] = None
+
+
+class ReplanService:
+    """Telemetry-driven, dedup-batched replanning over a fleet of instances.
+
+    ``instances`` is a sequence of (workload, platform) pairs; instance ids
+    are positions.  ``backend`` is the lockstep engine backend ("numpy" is
+    the bit-exact reference; "fused" runs each solve group as one jitted
+    device program).  ``warm_start=False`` drops the cross-tick plan cache
+    at every tick (same-tick dedup always applies) — it exists to *prove*
+    warm-starting never changes results, not to be used.
+    """
+
+    def __init__(self, instances: Sequence, backend: str = "numpy",
+                 warm_start: bool = True):
+        self.backend = backend
+        self.warm_start = warm_start
+        self.metrics = FleetMetrics()
+        self.states = [InstanceState(wl, pf) for wl, pf in instances]
+        self.plan_cache: dict = {}   # digest -> canonical HeuristicResult
+        self.tick_count = 0
+        # Initial fleet-wide planning runs through the same dedup+batch path
+        # but is not a *re*plan: it stays out of the metrics.
+        self._replan(range(len(self.states)))
+
+    # -- event application ----------------------------------------------------
+
+    def _observe(self, st: InstanceState, observed: np.ndarray) -> bool:
+        """Feed one timing observation; degrade the platform if the EWMA
+        flags stragglers (the ``replan_for_straggler`` recipe).  Returns
+        whether the platform changed."""
+        if len(observed) != st.plan.num_stages or not _plan_valid(st):
+            return False   # stale report from a pre-replan plan shape
+        st.monitor.observe(observed)
+        predicted = interval_cycle_times(st.workload, st.platform,
+                                         st.plan.mapping)
+        bad = st.monitor.stragglers(predicted)
+        if not bad:
+            return False
+        pf = st.platform
+        for j in bad:
+            pf = pf.degrade(st.plan.mapping.alloc[j],
+                            float(st.monitor.ewma[j] / predicted[j]))
+        st.platform = pf
+        return True
+
+    def _apply(self, ev) -> bool:
+        """Apply one event; returns True when the instance needs a replan."""
+        st = self.states[ev.instance]
+        if isinstance(ev, StageTimings):
+            return self._observe(st, np.asarray(ev.times, dtype=float))
+        if isinstance(ev, StageDrift):
+            if not _plan_valid(st):
+                return False   # platform already changed this tick
+            predicted = interval_cycle_times(st.workload, st.platform,
+                                             st.plan.mapping)
+            observed = predicted.copy()
+            observed[ev.stage % st.plan.num_stages] *= ev.factor
+            return self._observe(st, observed)
+        if isinstance(ev, PodCountChange):
+            target = max(1, int(ev.num_pods))
+            if target == st.platform.p:
+                return False
+            st.platform = elastic_platform(st.platform, target)
+            return True
+        if isinstance(ev, PodFailure):
+            if st.platform.p <= 1:
+                return False   # last pod: nothing to fail over to
+            pod = int(ev.pod) % st.platform.p
+            st.platform = Platform(np.delete(st.platform.s, pod),
+                                   st.platform.b,
+                                   name=f"{st.platform.name}-failed")
+            return True
+        raise TypeError(f"unknown fleet event {type(ev).__name__}")
+
+    # -- solve + publish ------------------------------------------------------
+
+    def _replan(self, ids) -> dict:
+        """Dedup, batch-solve, and publish new plans for the given instance
+        ids.  Returns {iid: StagePlan}; sets ``self._last_tick_stats``."""
+        ids = list(ids)
+        sig_of = {i: signature(self.states[i].workload,
+                               self.states[i].platform) for i in ids}
+        warm_hits = sum(sig_of[i].digest in self.plan_cache for i in ids)
+        need: dict = {}
+        for i in ids:
+            sig = sig_of[i]
+            if sig.digest not in self.plan_cache and sig.digest not in need:
+                need[sig.digest] = (sig, self.states[i])
+        by_shape: dict = {}
+        for digest, (sig, st) in need.items():
+            by_shape.setdefault(sig.shape, []).append((digest, st))
+        for (n, p, b), entries in by_shape.items():
+            pb = ProblemBatch.from_arrays(
+                np.stack([st.workload.w for _, st in entries]),
+                np.stack([st.workload.delta for _, st in entries]),
+                np.stack([st.platform.s[st.platform.sorted_indices()]
+                          for _, st in entries]),
+                b)
+            for (digest, _), res in zip(entries,
+                                        batched_min_period(pb, self.backend)):
+                self.plan_cache[digest] = res
+        published, churns = {}, []
+        for i in ids:
+            st = self.states[i]
+            res = self.plan_cache[sig_of[i].digest]
+            _, perm = canonicalize(st.platform)
+            mapping = Mapping(res.mapping.intervals,
+                              remap_alloc(res.mapping.alloc, perm))
+            plan = _realize(mapping, res.period, res.latency, res.name)
+            if st.plan is not None:
+                churns.append(_plan_churn(st.plan, plan, st.workload.n))
+            st.plan = plan
+            st.monitor = StragglerMonitor(plan.num_stages)
+            published[i] = plan
+        self._last_tick_stats = (len(ids), len(need), warm_hits, churns)
+        return published
+
+    def tick(self, events: Sequence) -> dict:
+        """Process one tick's events; returns the republished plans."""
+        t0 = time.perf_counter()
+        if not self.warm_start:
+            self.plan_cache.clear()
+        dirty: dict = {}   # insertion-ordered unique dirty ids
+        for ev in events:
+            if self._apply(ev):
+                dirty[ev.instance] = None
+        published = self._replan(dirty.keys())
+        requests, solves, warm_hits, churns = self._last_tick_stats
+        self.metrics.record_tick(requests=requests, solves=solves,
+                                 warm_hits=warm_hits, events=len(events),
+                                 wall=time.perf_counter() - t0, churns=churns)
+        self.tick_count += 1
+        return published
+
+    def run_trace(self, trace: Trace) -> FleetMetrics:
+        """Replay a telemetry trace tick by tick.  Deterministic: the same
+        trace over the same fleet yields the same plans and counters."""
+        for events in trace.ticks:
+            self.tick(events)
+        return self.metrics
+
+    # -- introspection --------------------------------------------------------
+
+    @property
+    def plans(self) -> list:
+        return [st.plan for st in self.states]
+
+    def fleet_digest(self) -> str:
+        """Hash of every instance's current plan — determinism fingerprint."""
+        h = hashlib.blake2b(digest_size=16)
+        for st in self.states:
+            h.update(repr((st.plan.mapping.intervals, st.plan.mapping.alloc,
+                           st.plan.period, st.plan.latency)).encode())
+        return h.hexdigest()
+
+
+def _plan_valid(st: InstanceState) -> bool:
+    """Whether the published plan still addresses the current platform — a
+    same-tick pod removal/resize invalidates the plan's allocation until the
+    end-of-tick replan; timing reports against it are meaningless."""
+    return max(st.plan.mapping.alloc) < st.platform.p
+
+
+def _plan_churn(old: StagePlan, new: StagePlan, n: int) -> float:
+    """Fraction of the n layers whose pod assignment changed."""
+    old_alloc = np.repeat(np.asarray(old.mapping.alloc), old.stage_sizes)
+    new_alloc = np.repeat(np.asarray(new.mapping.alloc), new.stage_sizes)
+    return float(np.mean(old_alloc != new_alloc))

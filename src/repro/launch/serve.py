@@ -59,6 +59,21 @@ def plan_serving(arch: str, pods: int, smoke: bool = True,
     return digest
 
 
+def sample_tokens(logits: np.ndarray, rng: Optional[np.random.Generator] = None,
+                  greedy: bool = True, temperature: float = 1.0) -> np.ndarray:
+    """Next-token choice for a (B, V) logit batch.
+
+    Greedy (or ``temperature <= 0``) takes the argmax.  Otherwise Gumbel-max
+    sampling from the seeded generator: ``argmax(logits/T + Gumbel)`` draws
+    exactly from ``softmax(logits/T)`` without materializing the softmax.
+    """
+    if greedy or temperature <= 0:
+        return logits.argmax(-1)
+    if rng is None:
+        raise ValueError("sampling needs a seeded Generator")
+    return (logits / temperature + rng.gumbel(size=logits.shape)).argmax(-1)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -71,12 +86,18 @@ class Request:
 def serve_pool(arch: str = "qwen3-4b", smoke: bool = True, n_requests: int = 16,
                batch: int = 4, prompt_len: int = 16, max_new: int = 32,
                capacity: int = 128, seed: int = 0, greedy: bool = True,
-               pods: int = 0) -> dict:
+               temperature: float = 1.0, pods: int = 0, replan: bool = False,
+               replan_every: int = 8, inject_straggler: float = 0.0) -> dict:
     """Run a request pool to completion; returns throughput metrics.
 
     With ``pods > 0`` the metrics include a ``plan`` digest: the pipeline
     placement of the served model across that many pods, computed through the
-    PlanRequest portfolio (provenance included)."""
+    PlanRequest portfolio (provenance included).  With ``replan`` the fleet
+    service (:mod:`repro.fleet`) shadows the decode loop: every
+    ``replan_every`` steps the measured step time feeds a ``StageTimings``
+    event (``inject_straggler`` > 1 additionally slows stage 0 — a
+    deterministic straggler for smoke tests) and the service republishes the
+    placement when the EWMA flags drift."""
     cfg = get_smoke_config(arch) if smoke else get_config(arch)
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(seed))
@@ -91,6 +112,21 @@ def serve_pool(arch: str = "qwen3-4b", smoke: bool = True, n_requests: int = 16,
     slot_steps = np.zeros(batch, np.int32)
     cur_tokens = np.zeros((batch, 1), np.int32)
     queue = list(reqs)
+    sample_rng = np.random.default_rng(seed + 1)
+
+    fleet = None
+    if replan and pods > 0:
+        from ..core import interval_cycle_times
+        from ..fleet import ReplanService, StageTimings
+        from ..models.common import SHAPES
+        from ..models.registry import lm_workload
+
+        wl = lm_workload(cfg, SHAPES["decode_32k"])
+        fleet = ReplanService([(wl, tpu_pod_platform(pods))])
+        replans = 0
+        baseline_wall = None
+        window: List[float] = []
+
     t0 = time.time()
     tokens_out = 0
     steps = 0
@@ -115,10 +151,30 @@ def serve_pool(arch: str = "qwen3-4b", smoke: bool = True, n_requests: int = 16,
 
     state = admit(state)
     while any(slots) or queue:
+        ts = time.perf_counter()
         logits, state = decode(params, state, jnp.asarray(cur_tokens))
         steps += 1
         logits_np = np.asarray(logits[:, 0], np.float32)
-        nxt = logits_np.argmax(-1) if greedy else logits_np.argmax(-1)
+        if fleet is not None:
+            window.append(time.perf_counter() - ts)
+            if len(window) == replan_every:
+                mean_wall = float(np.mean(window))
+                window.clear()
+                if baseline_wall is None:
+                    baseline_wall = mean_wall     # warmup window sets the norm
+                else:
+                    # the fastest window seen is the platform's true speed;
+                    # measuring against it keeps the drift ratio robust to a
+                    # slow warmup window (compile tails)
+                    baseline_wall = min(baseline_wall, mean_wall)
+                    st = fleet.states[0]
+                    predicted = interval_cycle_times(st.workload, st.platform,
+                                                     st.plan.mapping)
+                    observed = predicted * (mean_wall / baseline_wall)
+                    if inject_straggler > 1.0:
+                        observed[0] *= inject_straggler
+                    replans += len(fleet.tick([StageTimings(0, tuple(observed))]))
+        nxt = sample_tokens(logits_np, sample_rng, greedy, temperature)
         for s in range(batch):
             r = slots[s]
             if r is None:
@@ -145,6 +201,15 @@ def serve_pool(arch: str = "qwen3-4b", smoke: bool = True, n_requests: int = 16,
     }
     if pods > 0:
         out["plan"] = plan_serving(arch, pods, smoke=smoke)
+    if fleet is not None:
+        fplan = fleet.states[0].plan
+        out["replan"] = {
+            "replans": replans,
+            "stage_sizes": list(fplan.stage_sizes),
+            "pods": [int(u) for u in fplan.mapping.alloc],
+            "period": fplan.period,
+            "metrics": fleet.metrics.summary(),
+        }
     return out
 
 
@@ -156,12 +221,27 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--sample", action="store_true",
+                    help="temperature sampling instead of greedy decode")
+    ap.add_argument("--temperature", type=float, default=1.0)
     ap.add_argument("--pods", type=int, default=0,
                     help="also plan pipeline placement over this many pods")
+    ap.add_argument("--replan", action="store_true",
+                    help="drive the fleet replanning service from live "
+                         "decode-step timings (needs --pods)")
+    ap.add_argument("--replan-every", type=int, default=8)
+    ap.add_argument("--inject-straggler", type=float, default=0.0,
+                    help="slow stage 0 by this factor after warmup "
+                         "(deterministic straggler for smoke tests)")
     args = ap.parse_args()
     out = serve_pool(arch=args.arch, smoke=args.smoke, n_requests=args.requests,
                      batch=args.batch, prompt_len=args.prompt_len,
-                     max_new=args.max_new, pods=args.pods)
+                     max_new=args.max_new, seed=args.seed,
+                     greedy=not args.sample, temperature=args.temperature,
+                     pods=args.pods, replan=args.replan,
+                     replan_every=args.replan_every,
+                     inject_straggler=args.inject_straggler)
     print(json.dumps(out, indent=2))
 
 

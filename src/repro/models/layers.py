@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from .common import ModelConfig
+from .common import ModelConfig, abstract_mesh
 
 # ---------------------------------------------------------------------------
 # Logical sharding
@@ -52,7 +52,7 @@ def shard(x: jax.Array, *logical_axes) -> jax.Array:
     """Constrain ``x``'s sharding by logical axis names; no-op without a mesh.
     Axes whose dimension is not divisible by the mesh-axis size are dropped
     (uneven constraints trigger GSPMD resharding storms)."""
-    am = jax.sharding.get_abstract_mesh()
+    am = abstract_mesh()
     if am is None or am.empty:
         return x
     mesh_axes = set(am.axis_names) - set(getattr(am, "manual_axes", ()) or ())

@@ -19,7 +19,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from .common import ModelConfig
+from .common import ModelConfig, abstract_mesh
 from .layers import dense_init, init_mlp, mlp, shard
 
 
@@ -42,7 +42,7 @@ def _moe_groups(N: int, E: int, B: int) -> int:
     """Number of dispatch groups: one per data shard when it divides the
     batch (locality by construction — sort/scatter never cross shards),
     clamped so each group still feeds every expert a reasonable slice."""
-    am = jax.sharding.get_abstract_mesh()
+    am = abstract_mesh()
     dsize = 1
     if am is not None and not am.empty:
         for a in ("pod", "data"):
@@ -77,7 +77,7 @@ def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple:
     flat = x.reshape(G, n, d)
     flat = shard(flat, "batch", None, "d_model")
 
-    am = jax.sharding.get_abstract_mesh()
+    am = abstract_mesh()
     data_axes = tuple(a for a in ("pod", "data")
                       if am is not None and not am.empty and a in am.axis_names)
     dsize = 1

@@ -3,8 +3,10 @@
 from .schedule import gpipe_ticks, stage_microbatch, bubble_fraction
 from .runtime import (PipelineSpec, make_stage_params, pipelined_loss_fn,
                       sequential_loss_fn)
-from .replan import StragglerMonitor, replan_stages
+from .replan import (StragglerMonitor, elastic_platform, elastic_replan,
+                     replan_stages)
 
 __all__ = ["gpipe_ticks", "stage_microbatch", "bubble_fraction",
            "PipelineSpec", "make_stage_params", "pipelined_loss_fn",
-           "sequential_loss_fn", "StragglerMonitor", "replan_stages"]
+           "sequential_loss_fn", "StragglerMonitor", "replan_stages",
+           "elastic_platform", "elastic_replan"]

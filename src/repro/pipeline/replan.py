@@ -58,12 +58,33 @@ def replan_stages(workload: Workload, platform: Platform, current: StagePlan,
     return new_plan, degraded
 
 
+def elastic_platform(old_platform: Platform, new_num_pods: int,
+                     surviving=None) -> Platform:
+    """The resized platform after a preemption / capacity change.
+
+    Surviving pods keep their *observed* speeds (losing them would throw away
+    exactly the heterogeneity the straggler monitor measured); only newly
+    added pods get the median surviving speed as prior.  ``surviving`` names
+    the pods that remain (default: the first ``min(p, new_num_pods)``).
+    """
+    if new_num_pods < 1:
+        raise ValueError("need at least one pod")
+    if surviving is None:
+        surviving = np.arange(min(old_platform.p, new_num_pods))
+    else:
+        surviving = np.asarray(surviving, dtype=np.int64)[:new_num_pods]
+    kept = old_platform.s[surviving]
+    fill = np.full(new_num_pods - len(kept), float(np.median(kept)))
+    return Platform(np.concatenate([kept, fill]), old_platform.b,
+                    name=f"elastic-{new_num_pods}")
+
+
 def elastic_replan(workload: Workload, old_platform: Platform,
                    new_num_pods: int) -> StagePlan:
     """Elastic scaling: the pod count changed (preemption / capacity add);
-    re-run the planner portfolio on the resized platform."""
-    s = np.full(new_num_pods, float(np.median(old_platform.s)))
-    pf = Platform(s, old_platform.b, name=f"elastic-{new_num_pods}")
+    re-run the planner portfolio on the resized platform, preserving the
+    surviving pods' observed speeds."""
+    pf = elastic_platform(old_platform, new_num_pods)
     report = plan_request(auto_request(workload, pf, Objective("period")))
     if report.plan is None:
         raise InfeasiblePlan(f"elastic replan found no feasible mapping "

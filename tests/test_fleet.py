@@ -1,0 +1,240 @@
+"""Fleet replanning service: signature/dedup exactness, warm-start
+equivalence, deterministic replay, and the batched portfolio's bit-identity
+to scalar solo replans — the subsystem's acceptance contract."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (Platform, make_platform, min_period_exhaustive,
+                        stack_instances)
+from repro.core.batched import ProblemBatch, batched_min_period
+from repro.fleet import (PodCountChange, PodFailure, ReplanService, StageDrift,
+                         StageTimings, canonicalize, gen_burst_trace,
+                         make_fleet, remap_alloc, signature, span_bucket)
+from repro.launch.serve import sample_tokens
+from repro.sim.generators import gen_instance
+
+SEEDS = range(8100, 8106)
+
+
+def _plans_equal(a, b):
+    return (a.period == b.period and a.latency == b.latency
+            and a.mapping.intervals == b.mapping.intervals
+            and a.mapping.alloc == b.mapping.alloc)
+
+
+# ---------------------------------------------------------------------------
+# Core: the batched min-period portfolio
+# ---------------------------------------------------------------------------
+
+def test_batched_min_period_bit_identical_to_scalar():
+    """Every float, mapping, winner name, and split count matches the scalar
+    4-strategy exhaustion portfolio."""
+    for exp in ("E1", "E2", "E3", "E4"):
+        pairs = [gen_instance(exp, 12, 6, s) for s in SEEDS]
+        for r, (wl, pf) in zip(batched_min_period(stack_instances(pairs)),
+                               pairs):
+            ref = min_period_exhaustive(wl, pf)
+            assert _plans_equal(r, ref)
+            assert r.name == ref.name and r.splits == ref.splits
+
+
+def test_from_arrays_matches_stack_instances():
+    pairs = [gen_instance("E3", 9, 5, s) for s in SEEDS]
+    pb1 = stack_instances(pairs)
+    pb2 = ProblemBatch.from_arrays(np.stack([wl.w for wl, _ in pairs]),
+                                   np.stack([wl.delta for wl, _ in pairs]),
+                                   np.stack([pf.s for _, pf in pairs]),
+                                   pairs[0][1].b)
+    np.testing.assert_array_equal(pb1.prefix, pb2.prefix)
+    np.testing.assert_array_equal(pb1.order, pb2.order)
+    assert pb1.b == pb2.b
+
+
+# ---------------------------------------------------------------------------
+# Signatures: relabeling theorem
+# ---------------------------------------------------------------------------
+
+def test_signature_invariant_under_processor_relabeling():
+    wl, pf = gen_instance("E2", 8, 5, 0)
+    rng = np.random.default_rng(1)
+    perm = rng.permutation(pf.p)
+    shuffled = Platform(pf.s[perm], pf.b)
+    assert signature(wl, pf).digest == signature(wl, shuffled).digest
+
+
+def test_signature_sensitive_to_every_field():
+    wl, pf = gen_instance("E2", 8, 5, 0)
+    base = signature(wl, pf).digest
+    assert signature(wl, Platform(pf.s * 1.0000001, pf.b)).digest != base
+    assert signature(wl, Platform(pf.s, pf.b * 2)).digest != base
+    wl2 = dataclasses.replace(wl, w=wl.w + 1e-9)
+    assert signature(wl2, pf).digest != base
+
+
+def test_canonical_solve_remaps_bit_identically():
+    """Solving the speed-sorted canonical platform and remapping the alloc
+    through the permutation reproduces the original solve exactly — the
+    theorem that makes signature dedup exact, including equal-speed ties."""
+    for seed in SEEDS:
+        wl, pf = gen_instance("E1", 10, 6, seed)   # E1 has many speed ties
+        canon, perm = canonicalize(pf)
+        ref = min_period_exhaustive(wl, pf)
+        via = min_period_exhaustive(wl, canon)
+        assert via.period == ref.period and via.latency == ref.latency
+        assert via.mapping.intervals == ref.mapping.intervals
+        assert remap_alloc(via.mapping.alloc, perm) == ref.mapping.alloc
+
+
+def test_span_bucket_powers_of_two():
+    assert [span_bucket(n) for n in (1, 2, 3, 4, 5, 8, 9)] == \
+        [1, 2, 4, 4, 8, 8, 16]
+    with pytest.raises(ValueError):
+        span_bucket(0)
+
+
+# ---------------------------------------------------------------------------
+# Service: dedup exactness, determinism, warm-start
+# ---------------------------------------------------------------------------
+
+def _small_fleet():
+    pairs, groups = make_fleet(n_groups=3, replicas=4, n=8, p=4, seed=42)
+    trace = gen_burst_trace(groups, num_ticks=12, seed=7, n_stages=8,
+                            initial_pods=4, burst_prob=0.8)
+    return pairs, groups, trace
+
+
+def test_deduped_replans_bit_identical_to_solo():
+    """After a full burst trace, every instance's published plan equals the
+    scalar portfolio run solo on that instance's effective platform."""
+    pairs, _, trace = _small_fleet()
+    svc = ReplanService(pairs)
+    svc.run_trace(trace)
+    for st in svc.states:
+        ref = min_period_exhaustive(st.workload, st.platform)
+        assert _plans_equal(st.plan, ref)
+
+
+def test_dedup_actually_dedups():
+    """Replicated groups with correlated events: far fewer solves than
+    requests, and at least one replan happened."""
+    pairs, _, trace = _small_fleet()
+    svc = ReplanService(pairs)
+    m = svc.run_trace(trace)
+    assert m.requests > 0
+    assert m.solves < m.requests
+    assert m.dedup_hit_rate() > 0.2
+
+
+def test_trace_generation_and_replay_deterministic():
+    pairs, groups, trace = _small_fleet()
+    trace2 = gen_burst_trace(groups, num_ticks=12, seed=7, n_stages=8,
+                             initial_pods=4, burst_prob=0.8)
+    assert trace == trace2
+    a, b = ReplanService(pairs), ReplanService(pairs)
+    a.run_trace(trace)
+    b.run_trace(trace)
+    assert a.fleet_digest() == b.fleet_digest()
+    # every counter (not the wall-clock timings) replays identically
+    for f in ("ticks", "events", "requests", "solves", "warm_hits"):
+        assert getattr(a.metrics, f) == getattr(b.metrics, f)
+    assert a.metrics.churns == b.metrics.churns
+
+
+def test_warm_start_equals_cold_on_stationary_trace():
+    """A stationary trace (the same drift repeating) and exact-bytes
+    signatures: warm-starting can only skip work, never change plans."""
+    pairs, groups, _ = _small_fleet()
+    events = tuple(StageDrift(i, 2, 2.0) for g in groups for i in g)
+    from repro.fleet.telemetry import Trace
+    stationary = Trace(ticks=(events,) * 6)
+    warm = ReplanService(pairs, warm_start=True)
+    cold = ReplanService(pairs, warm_start=False)
+    warm.run_trace(stationary)
+    cold.run_trace(stationary)
+    assert warm.fleet_digest() == cold.fleet_digest()
+    assert warm.metrics.solves <= cold.metrics.solves
+
+
+def test_warm_start_equals_cold_on_burst_trace():
+    pairs, _, trace = _small_fleet()
+    warm = ReplanService(pairs, warm_start=True)
+    cold = ReplanService(pairs, warm_start=False)
+    warm.run_trace(trace)
+    cold.run_trace(trace)
+    assert warm.fleet_digest() == cold.fleet_digest()
+
+
+def test_pod_failure_shrinks_platform_and_replans():
+    wl, pf = gen_instance("E2", 8, 4, 3)
+    svc = ReplanService([(wl, pf)])
+    p0 = svc.states[0].platform.p
+    published = svc.tick([PodFailure(0, 1)])
+    assert svc.states[0].platform.p == p0 - 1
+    assert 0 in published
+    assert max(svc.states[0].plan.mapping.alloc) < p0 - 1
+
+
+def test_pod_count_change_preserves_surviving_speeds():
+    wl, pf = gen_instance("E2", 8, 4, 3)
+    svc = ReplanService([(wl, pf)])
+    svc.tick([StageDrift(0, 0, 3.0)])          # degrade someone's speed
+    degraded = svc.states[0].platform.s.copy()
+    svc.tick([PodCountChange(0, 6)])
+    out = svc.states[0].platform.s
+    np.testing.assert_array_equal(out[:4], degraded)
+    assert len(out) == 6
+
+
+def test_straggler_fast_path_no_replan():
+    """On-prediction timings never dirty an instance."""
+    from repro.core import interval_cycle_times
+    wl, pf = gen_instance("E2", 8, 4, 3)
+    svc = ReplanService([(wl, pf)])
+    st = svc.states[0]
+    predicted = interval_cycle_times(st.workload, st.platform,
+                                     st.plan.mapping)
+    before = svc.fleet_digest()
+    published = svc.tick([StageTimings(0, tuple(predicted))])
+    assert published == {}
+    assert svc.fleet_digest() == before
+    assert svc.metrics.requests == 0
+
+
+# ---------------------------------------------------------------------------
+# Serve satellite: temperature sampling
+# ---------------------------------------------------------------------------
+
+def test_sample_tokens_greedy_is_argmax():
+    logits = np.array([[0.1, 2.0, -1.0], [3.0, 0.0, 1.0]], np.float32)
+    np.testing.assert_array_equal(sample_tokens(logits, greedy=True), [1, 0])
+    # temperature <= 0 also short-circuits to argmax
+    np.testing.assert_array_equal(
+        sample_tokens(logits, np.random.default_rng(0), greedy=False,
+                      temperature=0.0), [1, 0])
+
+
+def test_sample_tokens_seeded_and_distributed():
+    """Same seed, same draw; and over many draws the frequencies track
+    softmax(logits/T) (Gumbel-max correctness)."""
+    logits = np.log(np.array([[0.6, 0.3, 0.1]], np.float32))
+    a = sample_tokens(np.tile(logits, (4, 1)), np.random.default_rng(5),
+                      greedy=False)
+    b = sample_tokens(np.tile(logits, (4, 1)), np.random.default_rng(5),
+                      greedy=False)
+    np.testing.assert_array_equal(a, b)
+    draws = sample_tokens(np.tile(logits, (4000, 1)),
+                          np.random.default_rng(11), greedy=False,
+                          temperature=1.0)
+    freq = np.bincount(draws, minlength=3) / 4000
+    np.testing.assert_allclose(freq, [0.6, 0.3, 0.1], atol=0.03)
+
+
+def test_sample_tokens_low_temperature_approaches_greedy():
+    rng = np.random.default_rng(2)
+    logits = np.array([[0.0, 1.0, 0.5]], np.float32)
+    draws = [int(sample_tokens(logits, rng, greedy=False, temperature=1e-4)[0])
+             for _ in range(50)]
+    assert all(d == 1 for d in draws)

@@ -1,0 +1,134 @@
+"""Online replanning primitives: StragglerMonitor EWMA behavior,
+replan_stages, and the elastic resize's heterogeneity preservation."""
+
+import numpy as np
+import pytest
+
+from repro.core import (Objective, StagePlan, interval_cycle_times,
+                        make_platform, make_workload, plan)
+from repro.pipeline.replan import (StragglerMonitor, elastic_platform,
+                                   elastic_replan, replan_stages)
+
+
+def _instance():
+    wl = make_workload([4.0, 2.0, 6.0, 3.0, 5.0, 2.0],
+                       [1.0, 2.0, 1.0, 3.0, 1.0, 2.0, 1.0])
+    pf = make_platform([3.0, 2.0, 2.0, 1.0], 10.0)
+    return wl, pf
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor
+# ---------------------------------------------------------------------------
+
+def test_ewma_first_observation_copies():
+    mon = StragglerMonitor(num_stages=3)
+    out = mon.observe([1.0, 2.0, 3.0])
+    np.testing.assert_array_equal(out, [1.0, 2.0, 3.0])
+
+
+def test_ewma_convergence_to_stationary_times():
+    """Repeated identical observations converge the EWMA geometrically."""
+    mon = StragglerMonitor(num_stages=2, alpha=0.2)
+    mon.observe([1.0, 1.0])
+    target = np.array([3.0, 0.5])
+    for _ in range(60):
+        mon.observe(target)
+    np.testing.assert_allclose(mon.ewma, target, rtol=1e-5)
+
+
+def test_ewma_blend_is_exact():
+    mon = StragglerMonitor(num_stages=1, alpha=0.2)
+    mon.observe([1.0])
+    mon.observe([2.0])
+    assert mon.ewma[0] == pytest.approx(0.8 * 1.0 + 0.2 * 2.0)
+
+
+def test_threshold_flagging():
+    """Only stages whose EWMA/predicted ratio exceeds the threshold flag."""
+    mon = StragglerMonitor(num_stages=3, threshold=1.3)
+    mon.observe([1.0, 1.4, 1.2])
+    assert mon.stragglers([1.0, 1.0, 1.0]) == [1]
+
+
+def test_no_observation_means_no_stragglers():
+    mon = StragglerMonitor(num_stages=3)
+    assert mon.stragglers([1.0, 1.0, 1.0]) == []
+
+
+def test_replan_stages_no_straggler_fast_path():
+    """Healthy timings: no replan, the platform object passes through."""
+    wl, pf = _instance()
+    current = plan(wl, pf, Objective("period"))
+    mon = StragglerMonitor(num_stages=current.num_stages)
+    predicted = interval_cycle_times(wl, pf, current.mapping)
+    mon.observe(predicted)   # exactly as predicted
+    new_plan, out_pf = replan_stages(wl, pf, current, mon)
+    assert new_plan is None
+    assert out_pf is pf
+
+
+def test_replan_stages_degrades_and_replans():
+    wl, pf = _instance()
+    current = plan(wl, pf, Objective("period"))
+    mon = StragglerMonitor(num_stages=current.num_stages)
+    predicted = interval_cycle_times(wl, pf, current.mapping)
+    slow = predicted.copy()
+    slow[0] *= 2.0           # stage 0's pod runs 2x slow
+    mon.observe(slow)
+    new_plan, degraded = replan_stages(wl, pf, current, mon)
+    assert isinstance(new_plan, StagePlan)
+    bad_pod = current.mapping.alloc[0]
+    assert degraded.s[bad_pod] == pytest.approx(pf.s[bad_pod] / 2.0)
+    # the other pods are untouched
+    for u in range(pf.p):
+        if u != bad_pod:
+            assert degraded.s[u] == pf.s[u]
+
+
+# ---------------------------------------------------------------------------
+# Elastic resize
+# ---------------------------------------------------------------------------
+
+def test_elastic_platform_preserves_surviving_speeds():
+    """Shrink keeps the survivors' observed speeds verbatim."""
+    pf = make_platform([3.0, 1.5, 2.0, 0.5], 10.0)
+    out = elastic_platform(pf, 3)
+    np.testing.assert_array_equal(out.s, [3.0, 1.5, 2.0])
+    assert out.b == pf.b
+
+
+def test_elastic_platform_fills_new_pods_with_median():
+    """Growth: survivors keep their speeds, new pods get the median prior."""
+    pf = make_platform([3.0, 1.0, 2.0], 10.0)
+    out = elastic_platform(pf, 5)
+    np.testing.assert_array_equal(out.s[:3], pf.s)
+    assert out.s[3] == out.s[4] == pytest.approx(np.median(pf.s))
+
+
+def test_elastic_platform_explicit_survivors():
+    pf = make_platform([3.0, 1.0, 2.0, 4.0], 10.0)
+    out = elastic_platform(pf, 2, surviving=[3, 1])
+    np.testing.assert_array_equal(out.s, [4.0, 1.0])
+
+
+def test_elastic_platform_rejects_zero_pods():
+    pf = make_platform([1.0, 2.0], 10.0)
+    with pytest.raises(ValueError):
+        elastic_platform(pf, 0)
+
+
+def test_elastic_replan_uses_measured_heterogeneity():
+    """The resized plan must see the observed speeds: with one pod far
+    faster than the rest, a median-rebuilt (homogeneous) platform would
+    spread stages evenly, while the true heterogeneous platform loads the
+    fast pod — the plan's stage allocation must reflect the latter."""
+    wl = make_workload([4.0, 2.0, 6.0, 3.0, 5.0, 2.0, 4.0, 3.0],
+                       np.ones(9))
+    pf = make_platform([10.0, 1.0, 1.0, 1.0, 1.0], 10.0)
+    new = elastic_replan(wl, pf, 4)   # drop the last pod, keep 10.0 + 1.0s
+    # the fast surviving pod (index 0) must carry the largest interval
+    sizes = {u: e - d + 1 for (d, e), u in
+             zip(new.mapping.intervals, new.mapping.alloc)}
+    assert 0 in sizes, "fast pod unused: measured speeds were discarded"
+    assert sizes[0] == max(sizes.values())
