@@ -51,6 +51,9 @@ REQUIRED_PREFIXES = (
     "fleet_replan_latency",
     "fleet_replan_dedup",
     "fleet_replan_churn",
+    "fleet_chaos_robustness",
+    "fleet_chaos_recovery",
+    "tri_criteria_",
 )
 
 # warm span-bucketed fused may trail numpy-batched by at most this factor on
@@ -63,6 +66,17 @@ FUSED_VS_BATCHED_FLOOR = 0.4
 # engine, not on runner speed)
 FLEET_DEDUP_FLOOR = 0.3
 FLEET_REPLANS_PER_SEC_FLOOR = 200.0
+
+# chaos-trace robustness bounds: invalid_published must be exactly zero (the
+# keep-last-valid guarantee is a correctness contract, not a perf number);
+# recovery from a reliability-floor dip is bounded well under the 30-tick
+# standard trace (measured max 18 — recovery waits on flapped capacity
+# returning, so the bound is about the repair pass firing, not its speed)
+FLEET_MAX_RECOVERY_TICKS = 25
+
+# tri-criteria knee: never choose a LESS reliable plan than the bi-criteria
+# portfolio on the same instance (tiny negative tolerance for float noise)
+TRI_CRITERIA_GAIN_FLOOR = -1e-9
 
 
 def _fail(msgs: list, msg: str) -> None:
@@ -121,6 +135,30 @@ def check(bench: dict, baseline: dict = None, tolerance: float = 1.6) -> list:
                 _fail(fails, f"{k}: replans_per_sec={rps!r} below floor "
                              f"{FLEET_REPLANS_PER_SEC_FLOOR}")
 
+    # 5b. chaos-trace robustness: zero invalid publishes, bounded recovery
+    for k, v in rows.items():
+        if k.startswith("fleet_chaos_") and "invalid_published" in v:
+            if v["invalid_published"] != 0:
+                _fail(fails, f"{k}: invalid_published="
+                             f"{v['invalid_published']} — an instance ended "
+                             "a tick with a plan addressing dead pods "
+                             "(keep-last-valid guarantee broken)")
+        if k.startswith("fleet_chaos_recovery"):
+            mrt = v.get("max_recovery_ticks")
+            if mrt is None or mrt > FLEET_MAX_RECOVERY_TICKS:
+                _fail(fails, f"{k}: max_recovery_ticks={mrt!r} exceeds bound "
+                             f"{FLEET_MAX_RECOVERY_TICKS} — reliability-floor "
+                             "repair not recovering")
+
+    # 5c. tri-criteria knee must not lose reliability vs the bi-criteria pick
+    for k, v in rows.items():
+        if k.startswith("tri_criteria_") and "min_reliability_gain" in v:
+            if v["min_reliability_gain"] < TRI_CRITERIA_GAIN_FLOOR:
+                _fail(fails, f"{k}: min_reliability_gain="
+                             f"{v['min_reliability_gain']:.2e} < 0 — the "
+                             "tri-criteria knee chose a less reliable plan "
+                             "than the bi-criteria portfolio")
+
     # 6. cross-run regression vs a same-mode baseline
     if baseline is not None:
         mode = bench.get("_meta", {}).get("mode")
@@ -161,7 +199,9 @@ def main() -> int:
         extras = {f: v[f] for f in ("speedup_vs_scalar", "vs_batched",
                                     "dispatches", "bucket_traces",
                                     "cache_speedup", "vs_numpy",
-                                    "dedup_hit_rate", "replans_per_sec")
+                                    "dedup_hit_rate", "replans_per_sec",
+                                    "invalid_published", "max_recovery_ticks",
+                                    "min_reliability_gain")
                   if f in v}
         if extras:
             print(f"  {k}: {extras}")

@@ -1,0 +1,96 @@
+"""Tri-criteria planning benchmark: what replication buys on the R families.
+
+For each reliability experiment family (R1 uniform, R2 bimodal, R3
+speed-correlated, R4 compute-heavy bimodal) this script runs the tri-criteria
+portfolio :func:`repro.core.plan_pareto_tri` on a few seeded instances and
+records, as ``tri_criteria_*`` rows:
+
+  - the 3-D Pareto front size (period x latency x reliability),
+  - the reliability of the chosen plan vs the best *bi-criteria* plan on the
+    same instance (the gain replication buys at the knee),
+  - wall time per tri-criteria plan.
+
+``bench_gate.py`` requires the rows and floors the reliability gain: the
+tri-criteria knee must never choose a plan LESS reliable than the bi-criteria
+portfolio's pick on the same instance (the degenerate singleton case is
+bit-identical, so gain >= 0 is structural — a negative gain means the
+consensus evaluation or the knee policy broke).
+
+Rows MERGE into BENCH_planner.json (same contract as fleet_bench.py).
+
+    PYTHONPATH=src python benchmarks/reliability_bench.py [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.core import (ReplicatedMapping, plan_pareto, plan_pareto_tri,  # noqa: E402
+                        reliability)
+from repro.sim import RELIABILITY_FAMILIES  # noqa: E402
+from repro.sim.generators import gen_instance  # noqa: E402
+
+from fleet_bench import merge_bench_json  # noqa: E402
+
+STANDARD = dict(n=12, p=8, seeds=(0, 1, 2))
+QUICK = dict(n=8, p=5, seeds=(0, 1))
+
+
+def _plan_reliability(wl, pf, plan) -> float:
+    if plan.groups is not None:
+        return reliability(wl, pf, ReplicatedMapping(plan.mapping.intervals,
+                                                     plan.groups))
+    return reliability(wl, pf, plan.mapping)
+
+
+def run(quick: bool = False) -> list:
+    cfg = QUICK if quick else STANDARD
+    rows = []
+    for exp in RELIABILITY_FAMILIES:
+        fronts, gains, rels, walls = [], [], [], []
+        for seed in cfg["seeds"]:
+            wl, pf = gen_instance(exp, cfg["n"], cfg["p"], seed=seed)
+            t0 = time.perf_counter()
+            tri = plan_pareto_tri(wl, pf)
+            walls.append(time.perf_counter() - t0)
+            bi = plan_pareto(wl, pf)
+            tri_rel = _plan_reliability(wl, pf, tri.plan)
+            bi_rel = _plan_reliability(wl, pf, bi.plan)
+            fronts.append(len(tri.pareto))
+            rels.append(tri_rel)
+            gains.append(tri_rel - bi_rel)
+        us = float(np.mean(walls)) * 1e6
+        extra = {"front_size": float(np.mean(fronts)),
+                 "reliability_gain": float(np.mean(gains)),
+                 "min_reliability_gain": float(np.min(gains)),
+                 "chosen_reliability": float(np.mean(rels)),
+                 "n": cfg["n"], "p": cfg["p"], "seeds": len(cfg["seeds"])}
+        rows.append((f"tri_criteria_{exp}", us,
+                     f"front {np.mean(fronts):.1f} pts, chosen rel "
+                     f"{np.mean(rels):.4f} (+{np.mean(gains):.4f} vs "
+                     f"bi-criteria), {us:.0f}us/plan",
+                     extra))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args()
+    rows = run(quick=args.quick)
+    for name, us, derived, _ in rows:
+        print(f"{name},{'' if us is None else f'{us:.1f}'},{derived}")
+    merge_bench_json(rows, mode="quick" if args.quick else "full")
+    print("# merged into BENCH_planner.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -12,8 +12,10 @@ algorithms plug in via ``@register_solver`` without touching any consumer.
 """
 
 from .workload import Workload, make_workload, uniform_workload
-from .platform import Platform, make_platform, homogeneous_platform, tpu_pod_platform
-from .metrics import (Mapping, period, latency, evaluate, evaluate_batch,
+from .platform import (Platform, make_platform, homogeneous_platform,
+                       sample_failures, tpu_pod_platform)
+from .metrics import (Mapping, ReplicatedMapping, period, latency, reliability,
+                      evaluate, evaluate_batch, evaluate_tri,
                       interval_cycle_times, optimal_latency,
                       single_processor_mapping, intervals_from_cuts,
                       all_interval_partitions)
@@ -25,7 +27,8 @@ from .batched import (ProblemBatch, batched_fixed_latency, batched_min_period,
                       batched_sp_bi_p, batched_trajectories, stack_instances)
 from .exact import (brute_force, exact_min_period, exact_min_latency,
                     dp_homogeneous_period, dp_speed_ordered, pareto_exact)
-from .pareto import pareto_front, tradeoff_curves, sweep_heuristic, sweep_solver
+from .pareto import (pareto_front, pareto_front_tri, tradeoff_curves,
+                     sweep_heuristic, sweep_solver)
 from .solvers import (Candidate, Solution, SolverSpec, applicable, get_solver,
                       register_solver, registered_solvers, solve, solver_names)
 from .planner import (AUTO_PORTFOLIO, InfeasiblePlan, Objective, PlanReport,
@@ -33,11 +36,15 @@ from .planner import (AUTO_PORTFOLIO, InfeasiblePlan, Objective, PlanReport,
                       plan, plan_pareto, plan_request, register_selection,
                       replan_for_straggler)
 from .deal import DealPlan, plan_with_deal
+from .replication import (plan_pareto_tri, replicate_greedy,
+                          replicate_stage_plan)
 
 __all__ = [
     "Workload", "make_workload", "uniform_workload",
-    "Platform", "make_platform", "homogeneous_platform", "tpu_pod_platform",
-    "Mapping", "period", "latency", "evaluate", "evaluate_batch",
+    "Platform", "make_platform", "homogeneous_platform", "sample_failures",
+    "tpu_pod_platform",
+    "Mapping", "ReplicatedMapping", "period", "latency", "reliability",
+    "evaluate", "evaluate_batch", "evaluate_tri",
     "interval_cycle_times", "optimal_latency", "single_processor_mapping",
     "intervals_from_cuts", "all_interval_partitions",
     "HeuristicResult", "run_heuristic", "NAMES",
@@ -48,11 +55,13 @@ __all__ = [
     "batched_sp_bi_p", "batched_trajectories", "stack_instances",
     "brute_force", "exact_min_period", "exact_min_latency",
     "dp_homogeneous_period", "dp_speed_ordered", "pareto_exact",
-    "pareto_front", "tradeoff_curves", "sweep_heuristic", "sweep_solver",
+    "pareto_front", "pareto_front_tri", "tradeoff_curves", "sweep_heuristic",
+    "sweep_solver",
     "Candidate", "Solution", "SolverSpec", "applicable", "get_solver",
     "register_solver", "registered_solvers", "solve", "solver_names",
     "AUTO_PORTFOLIO", "InfeasiblePlan", "Objective", "PlanReport", "PlanRequest",
     "SELECTION_POLICIES", "StagePlan", "auto_request", "plan", "plan_pareto",
     "plan_request", "register_selection", "replan_for_straggler",
     "DealPlan", "plan_with_deal",
+    "plan_pareto_tri", "replicate_greedy", "replicate_stage_plan",
 ]

@@ -11,6 +11,21 @@ Note the asymmetry, faithful to the paper: the period charges *both* the input
 and the output communication of every interval (one-port: each processor both
 receives and sends every period), while the latency charges each inter-processor
 hand-off once, plus the final output.
+
+The sequel paper (arXiv 0711.1231) adds a third criterion, reliability:
+processors fail independently with probability ``Platform.fail[u]``, and an
+interval replicated on a *set* of processors survives unless all replicas
+fail.  :class:`ReplicatedMapping` models that allocation (disjoint replica
+sets), with period/latency charged at the SLOWEST replica of each interval —
+the sequel's consensus model, where every replica processes every data set
+(contrast the deal/farm extension in :mod:`repro.core.deal`, which
+round-robins tasks so a group's aggregate *rate* is the sum of speeds).  The
+third metric is
+
+    reliability = prod_j ( 1 − prod_{u ∈ alloc_j} fail_u )
+
+and a single-replica ``ReplicatedMapping`` is bit-identical to the plain
+``Mapping`` on period/latency (asserted by tests/test_engine_properties.py).
 """
 
 from __future__ import annotations
@@ -67,62 +82,169 @@ class Mapping:
                 raise ValueError(f"processor {a} out of range")
 
 
-def interval_cycle_times(workload: Workload, platform: Platform, mapping: Mapping) -> np.ndarray:
+@dataclasses.dataclass(frozen=True)
+class ReplicatedMapping:
+    """Interval mapping where interval j runs replicated on the processor SET
+    ``groups[j]`` (sets disjoint across intervals).  Consensus model of the
+    sequel paper: every replica processes every data set, so the interval's
+    compute speed is its slowest replica's, and the interval fails only if
+    ALL replicas fail.  ``groups[j][0]`` is the interval's leader (the base
+    mapping's processor in the greedy replication solvers)."""
+
+    intervals: tuple  # tuple[tuple[int, int], ...], 1-indexed as in Mapping
+    groups: tuple     # tuple[tuple[int, ...], ...] — replica set per interval
+
+    def __post_init__(self):
+        object.__setattr__(self, "intervals", tuple((int(d), int(e)) for d, e in self.intervals))
+        object.__setattr__(self, "groups", tuple(tuple(int(u) for u in g) for g in self.groups))
+        if len(self.intervals) != len(self.groups):
+            raise ValueError("one replica set per interval")
+        if any(len(g) == 0 for g in self.groups):
+            raise ValueError("empty replica set")
+
+    @property
+    def m(self) -> int:
+        return len(self.intervals)
+
+    @property
+    def alloc(self) -> tuple:
+        """Leader processor per interval (first replica)."""
+        return tuple(g[0] for g in self.groups)
+
+    def leader_mapping(self) -> Mapping:
+        """The plain (non-replicated) mapping of the group leaders."""
+        return Mapping(intervals=self.intervals, alloc=self.alloc)
+
+    def validate(self, n: int, p: int) -> None:
+        """Partition conditions of Mapping.validate plus global disjointness
+        of the replica sets."""
+        self.leader_mapping().validate(n, p)
+        flat = [u for g in self.groups for u in g]
+        if len(set(flat)) != len(flat):
+            raise ValueError("replica sets must be disjoint")
+        for u in flat:
+            if not (0 <= u < p):
+                raise ValueError(f"processor {u} out of range")
+
+
+def _interval_speeds(platform: Platform, mapping) -> np.ndarray:
+    """Per-interval effective compute speed: the allocated processor's speed
+    for a Mapping; the slowest replica's (consensus model) for a
+    ReplicatedMapping.  A singleton replica set yields exactly the leader's
+    speed, keeping the degenerate case bit-identical to the plain path."""
+    if isinstance(mapping, ReplicatedMapping):
+        s = platform.s
+        return np.array([s[list(g)].min() for g in mapping.groups])
+    return platform.s[np.asarray(mapping.alloc, dtype=np.int64)]
+
+
+def interval_cycle_times(workload: Workload, platform: Platform, mapping) -> np.ndarray:
     """Per-interval cycle time: in-comm + compute + out-comm (the max of these is the period)."""
-    w, delta, b, s = workload.w, workload.delta, platform.b, platform.s
+    w, delta, b = workload.w, workload.delta, platform.b
+    sp = _interval_speeds(platform, mapping)
     out = np.empty(mapping.m)
-    for j, ((d, e), a) in enumerate(zip(mapping.intervals, mapping.alloc)):
-        out[j] = delta[d - 1] / b + w[d - 1 : e].sum() / s[a] + delta[e] / b
+    for j, (d, e) in enumerate(mapping.intervals):
+        out[j] = delta[d - 1] / b + w[d - 1 : e].sum() / sp[j] + delta[e] / b
     return out
 
 
-def period(workload: Workload, platform: Platform, mapping: Mapping) -> float:
+def period(workload: Workload, platform: Platform, mapping) -> float:
     """Eq. (1)."""
     return float(interval_cycle_times(workload, platform, mapping).max())
 
 
-def latency(workload: Workload, platform: Platform, mapping: Mapping) -> float:
+def latency(workload: Workload, platform: Platform, mapping) -> float:
     """Eq. (2)."""
-    w, delta, b, s = workload.w, workload.delta, platform.b, platform.s
+    w, delta, b = workload.w, workload.delta, platform.b
+    sp = _interval_speeds(platform, mapping)
     tot = 0.0
-    for (d, e), a in zip(mapping.intervals, mapping.alloc):
-        tot += delta[d - 1] / b + w[d - 1 : e].sum() / s[a]
+    for j, (d, e) in enumerate(mapping.intervals):
+        tot += delta[d - 1] / b + w[d - 1 : e].sum() / sp[j]
     return float(tot + delta[workload.n] / b)
 
 
-def evaluate(workload: Workload, platform: Platform, mapping: Mapping) -> tuple:
+def reliability(workload: Workload, platform: Platform, mapping) -> float:
+    """Sequel metric: R = prod_j (1 − prod_{u ∈ alloc_j} f_u).
+
+    Accepts both Mapping (each interval a single processor) and
+    ReplicatedMapping.  With ``platform.fail`` unset every processor is
+    perfectly reliable and R == 1.0 exactly."""
+    if platform.fail is None:
+        return 1.0
+    f = platform.fail
+    groups = (mapping.groups if isinstance(mapping, ReplicatedMapping)
+              else tuple((a,) for a in mapping.alloc))
+    r = 1.0
+    for g in groups:
+        miss = 1.0
+        for u in g:
+            miss *= float(f[u])
+        r *= 1.0 - miss
+    return float(r)
+
+
+def evaluate(workload: Workload, platform: Platform, mapping) -> tuple:
     """(period, latency) for a mapping."""
     return (period(workload, platform, mapping), latency(workload, platform, mapping))
 
 
+def evaluate_tri(workload: Workload, platform: Platform, mapping) -> tuple:
+    """(period, latency, reliability) for a Mapping or ReplicatedMapping."""
+    return (period(workload, platform, mapping),
+            latency(workload, platform, mapping),
+            reliability(workload, platform, mapping))
+
+
 def evaluate_batch(workload: Workload, platform: Platform,
-                   mappings: Sequence[Mapping]) -> np.ndarray:
+                   mappings: Sequence[Mapping], *,
+                   with_reliability: bool = False) -> np.ndarray:
     """Vectorized ``evaluate`` over a batch of mappings.
 
     Returns an array of shape (len(mappings), 2): column 0 the period (Eq. 1),
-    column 1 the latency (Eq. 2).  Mappings are stacked into (B, m) index
-    arrays per interval count so the cycle and latency terms of the whole
-    batch are computed with numpy instead of per-mapping Python loops — this
-    is what makes portfolio and sweep evaluation cheap.
+    column 1 the latency (Eq. 2).  With ``with_reliability=True`` a third
+    column carries the sequel's reliability metric, so the tri-criteria
+    Pareto machinery sees all three criteria in one stacked evaluation.
+    Mappings are stacked into (B, m) index arrays per interval count so the
+    cycle and latency terms of the whole batch are computed with numpy
+    instead of per-mapping Python loops — this is what makes portfolio and
+    sweep evaluation cheap.  ReplicatedMapping entries are allowed (their
+    compute speed is the group minimum, reliability the survival product).
     """
-    out = np.empty((len(mappings), 2))
+    out = np.empty((len(mappings), 3 if with_reliability else 2))
     if not len(mappings):
         return out
     pre = workload.prefix_w()
     delta, b, s = workload.delta, platform.b, platform.s
+    fail = platform.fail
     tail = delta[workload.n] / b
     by_m: dict = {}
     for i, mp in enumerate(mappings):
         by_m.setdefault(mp.m, []).append(i)
     for idxs in by_m.values():
         iv = np.array([mappings[i].intervals for i in idxs])   # (B, m, 2)
-        al = np.array([mappings[i].alloc for i in idxs])       # (B, m)
         D, E = iv[:, :, 0], iv[:, :, 1]
-        lat_terms = delta[D - 1] / b + (pre[E] - pre[D - 1]) / s[al]
+        plain = all(not isinstance(mappings[i], ReplicatedMapping) for i in idxs)
+        if plain:
+            al = np.array([mappings[i].alloc for i in idxs])   # (B, m)
+            sp = s[al]
+        else:
+            sp = np.array([[s[list(g)].min() for g in
+                            (mappings[i].groups if isinstance(mappings[i], ReplicatedMapping)
+                             else tuple((a,) for a in mappings[i].alloc))]
+                           for i in idxs])
+        lat_terms = delta[D - 1] / b + (pre[E] - pre[D - 1]) / sp
         cyc = lat_terms + delta[E] / b
         ix = np.asarray(idxs)
         out[ix, 0] = cyc.max(axis=1)
         out[ix, 1] = lat_terms.sum(axis=1) + tail
+        if with_reliability:
+            if fail is None:
+                out[ix, 2] = 1.0
+            elif plain:
+                out[ix, 2] = np.prod(1.0 - fail[al], axis=1)
+            else:
+                out[ix, 2] = [reliability(workload, platform, mappings[i])
+                              for i in idxs]
     return out
 
 

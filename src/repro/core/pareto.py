@@ -29,6 +29,32 @@ def pareto_front(points: Iterable, rtol: float = 1e-9) -> list:
     return front
 
 
+def pareto_front_tri(points: Iterable, rtol: float = 1e-9) -> list:
+    """Non-dominated subset of (period, latency, reliability) points.
+
+    Period and latency are minimized, reliability is MAXIMIZED (the sequel's
+    third criterion).  Point a dominates b when a is no worse on all three
+    coordinates (within relative tolerance ``rtol``, so floating-point noise
+    cannot leak dominated points) — equal-within-tolerance duplicates
+    collapse onto the first in sort order.  Returned sorted by (period,
+    latency, -reliability).  O(k^2), fine for portfolio-sized fronts."""
+    pts = sorted(set((float(p), float(l), float(r)) for p, l, r in points),
+                 key=lambda t: (t[0], t[1], -t[2]))
+    front: list = []
+
+    def dominates(a, b):
+        return (a[0] <= b[0] * (1 + rtol) and a[1] <= b[1] * (1 + rtol)
+                and a[2] >= b[2] * (1 - rtol))
+
+    for cand in pts:
+        if any(dominates(f, cand) for f in front):
+            continue
+        front = [f for f in front if not dominates(cand, f)]
+        front.append(cand)
+    front.sort(key=lambda t: (t[0], t[1], -t[2]))
+    return front
+
+
 def sweep_heuristic(
     code: str,
     workload: Workload,

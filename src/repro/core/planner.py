@@ -312,7 +312,8 @@ def _run_jobs(workload: Workload, platform: Platform, jobs: list,
         else:
             per, lat = (float(v) for v in mets[met_at[i]])
         cands.append(Candidate(spec.name, obj, sol.mapping, per, lat,
-                               meets_bound(obj, per, lat), wall, groups=sol.groups))
+                               meets_bound(obj, per, lat), wall, groups=sol.groups,
+                               reliability=sol.reliability))
     return cands
 
 

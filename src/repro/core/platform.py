@@ -5,6 +5,16 @@ bandwidth ``b`` (paper Section 2).  The one-port linear cost model is captured
 by the metric functions in :mod:`repro.core.metrics`; the platform itself only
 stores speeds and bandwidth.
 
+The sequel paper ("Optimizing Latency and Reliability of Pipeline Workflow
+Applications", arXiv 0711.1231) adds a third criterion: each processor ``u``
+carries an independent failure probability ``f_u``, and replicating an
+interval across a set of processors trades period/latency for reliability.
+``Platform.fail`` is that optional per-processor failure vector (``None`` —
+the default everywhere the bi-criteria model is enough — means "processors
+never die" and keeps every original code path byte-identical).  Seeded
+failure samplers live here (:func:`sample_failures`) and as scenario-family
+combinators in :mod:`repro.sim.generators` (the R1-R4 families).
+
 For the TPU adaptation a "processor" is a pod slice: its speed is
 ``chips * peak_flops * efficiency`` and can be degraded online to model
 stragglers (see :mod:`repro.pipeline.replan`).
@@ -13,18 +23,27 @@ stragglers (see :mod:`repro.pipeline.replan`).
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import numpy as np
 
 
+def _suffix_once(name: str, suffix: str) -> str:
+    """Append ``suffix`` unless the name already carries it — event-driven
+    platform updates (stragglers, pod failures) fire repeatedly over long
+    traces, and naively appending per event grows names without bound."""
+    return name if name.endswith(suffix) else name + suffix
+
+
 @dataclasses.dataclass(frozen=True)
 class Platform:
-    """p processors with speeds ``s`` and homogeneous link bandwidth ``b``."""
+    """p processors with speeds ``s``, homogeneous link bandwidth ``b``, and
+    optional per-processor failure probabilities ``fail`` (None = reliable)."""
 
     s: np.ndarray          # shape (p,), processor speeds (flops / time-unit)
     b: float               # link bandwidth (bytes / time-unit), identical links
     name: str = "platform"
+    fail: Optional[np.ndarray] = None   # shape (p,), failure prob in [0, 1)
 
     def __post_init__(self):
         s = np.asarray(self.s, dtype=np.float64)
@@ -35,10 +54,25 @@ class Platform:
             raise ValueError("processor speeds must be positive")
         if self.b <= 0:
             raise ValueError("bandwidth must be positive")
+        if self.fail is not None:
+            f = np.asarray(self.fail, dtype=np.float64)
+            object.__setattr__(self, "fail", f)
+            if f.shape != s.shape:
+                raise ValueError(f"fail must have shape {s.shape}, got {f.shape}")
+            if ((f < 0) | (f >= 1)).any():
+                raise ValueError("failure probabilities must be in [0, 1)")
 
     @property
     def p(self) -> int:
         return int(len(self.s))
+
+    @property
+    def failures(self) -> np.ndarray:
+        """Per-processor failure probabilities; zeros when ``fail`` is None
+        (the bi-criteria model's perfectly reliable processors)."""
+        if self.fail is None:
+            return np.zeros(self.p)
+        return self.fail
 
     def sorted_indices(self) -> np.ndarray:
         """Processor indices by non-increasing speed (ties broken by index,
@@ -55,15 +89,61 @@ class Platform:
             raise ValueError("factor must be positive")
         s = self.s.copy()
         s[proc] = s[proc] / factor
-        return Platform(s, self.b, name=f"{self.name}-degraded")
+        return Platform(s, self.b, name=_suffix_once(self.name, "-degraded"),
+                        fail=self.fail)
+
+    def without(self, proc: int) -> "Platform":
+        """The platform after processor ``proc`` died (sequel-paper failure
+        event): speeds and failure probabilities both lose that row."""
+        if self.p <= 1:
+            raise ValueError("cannot remove the last processor")
+        return Platform(np.delete(self.s, proc), self.b,
+                        name=_suffix_once(self.name, "-failed"),
+                        fail=(None if self.fail is None
+                              else np.delete(self.fail, proc)))
+
+    def with_failures(self, fail) -> "Platform":
+        """The same platform with per-processor failure probabilities
+        attached (or stripped, with ``fail=None``)."""
+        return Platform(self.s, self.b, name=self.name,
+                        fail=None if fail is None else np.asarray(fail, float))
 
 
-def make_platform(s: Sequence[float], b: float, name: str = "platform") -> Platform:
-    return Platform(np.asarray(s, dtype=np.float64), float(b), name)
+def make_platform(s: Sequence[float], b: float, name: str = "platform",
+                  fail=None) -> Platform:
+    return Platform(np.asarray(s, dtype=np.float64), float(b), name,
+                    fail=None if fail is None else np.asarray(fail, float))
 
 
 def homogeneous_platform(p: int, s: float = 1.0, b: float = 10.0) -> Platform:
     return Platform(np.full(p, s), b, name=f"homog-{p}")
+
+
+def sample_failures(p: int, *, kind: str = "uniform", lo: float = 1e-3,
+                    hi: float = 2e-2, seed: Optional[int] = None,
+                    rng: Optional[np.random.Generator] = None) -> np.ndarray:
+    """Seeded per-processor failure-probability sampler (sequel model).
+
+      - ``"uniform"``  — i.i.d. uniform in [lo, hi];
+      - ``"bimodal"``  — mostly near ``lo`` with a flaky minority near ``hi``
+        (20% of processors), the realistic mixed-fleet shape;
+      - ``"loguniform"`` — log-uniform in [lo, hi], spanning orders of
+        magnitude of hardware quality.
+
+    Pass either ``seed`` (new Generator) or an existing ``rng`` (draws
+    consume its stream — the scenario-family contract)."""
+    if rng is None:
+        rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        return rng.uniform(lo, hi, p)
+    if kind == "bimodal":
+        flaky = rng.random(p) < 0.2
+        base = rng.uniform(lo, 2 * lo, p)
+        bad = rng.uniform(0.5 * hi, hi, p)
+        return np.where(flaky, bad, base)
+    if kind == "loguniform":
+        return np.exp(rng.uniform(np.log(lo), np.log(hi), p))
+    raise ValueError(f"unknown failure sampler kind {kind!r}")
 
 
 def tpu_pod_platform(

@@ -47,6 +47,7 @@ class Solution:
     groups: Optional[tuple] = None       # tuple[tuple[int, ...], ...] or None
     period: Optional[float] = None
     latency: Optional[float] = None
+    reliability: Optional[float] = None  # sequel's third criterion (replication)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,10 +79,18 @@ class Candidate:
     wall_time: float                     # seconds spent inside the solver
     groups: Optional[tuple] = None
     error: Optional[str] = None
+    reliability: Optional[float] = None  # third criterion; None = not evaluated
 
     @property
     def point(self) -> tuple:
         return (self.period, self.latency)
+
+    @property
+    def point_tri(self) -> tuple:
+        """(period, latency, reliability); an unevaluated reliability reads
+        as 1.0 (no failure model = perfectly reliable)."""
+        return (self.period, self.latency,
+                self.reliability if self.reliability is not None else 1.0)
 
 
 _REGISTRY: "dict[str, SolverSpec]" = {}
@@ -205,7 +214,7 @@ def solve(
         per, lat = evaluate(workload, platform, sol.mapping)
     return Candidate(name, objective, sol.mapping, float(per), float(lat),
                      meets_bound(objective, float(per), float(lat)), wall,
-                     groups=sol.groups)
+                     groups=sol.groups, reliability=sol.reliability)
 
 
 def meets_bound(objective, per: float, lat: float) -> bool:

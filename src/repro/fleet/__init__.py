@@ -20,7 +20,10 @@ Modules:
   - :mod:`repro.fleet.service`    — the controller loop: collect, dedup,
     warm-start, batch-solve, publish
   - :mod:`repro.fleet.metrics`    — replans/sec, p50/p99 replan latency,
-    dedup hit-rate, plan churn (the BENCH surface)
+    dedup hit-rate, plan churn, graceful-degradation counters (the BENCH
+    surface)
+  - :mod:`repro.fleet.chaos`      — fault injection over telemetry traces:
+    correlated pod-failure storms, flapping pods, event drop/dup/reorder
 """
 
 from .telemetry import (PodCountChange, PodFailure, StageDrift, StageTimings,
@@ -29,6 +32,7 @@ from .signatures import (Signature, canonicalize, remap_alloc, signature,
                          span_bucket)
 from .service import InstanceState, ReplanService
 from .metrics import FleetMetrics
+from .chaos import ChaosSpec, inject_chaos
 
 __all__ = [
     "StageTimings", "StageDrift", "PodCountChange", "PodFailure",
@@ -36,4 +40,5 @@ __all__ = [
     "Signature", "signature", "canonicalize", "remap_alloc", "span_bucket",
     "ReplanService", "InstanceState",
     "FleetMetrics",
+    "ChaosSpec", "inject_chaos",
 ]

@@ -38,9 +38,24 @@ class FleetMetrics:
     solve_wall: float = 0.0  # seconds spent collect-to-publish
     latencies: list = dataclasses.field(default_factory=list)
     churns: list = dataclasses.field(default_factory=list)
+    # Robustness counters (the chaos-harness surface; all zero on the clean
+    # path, so PR-6 consumers see identical numbers):
+    degraded_ticks: int = 0      # ticks where a deadline deferral or solver
+                                 # fallback fired (service ran but degraded)
+    deferred: int = 0            # replan requests pushed to a later tick
+    fallback_solves: int = 0     # scalar solves after a batched group raised
+    dropped_events: int = 0      # stale/out-of-range events discarded
+    below_floor_ticks: int = 0   # instance-ticks spent below the reliability floor
+    recovery_ticks: list = dataclasses.field(default_factory=list)
+    #                            ^ ticks from dipping below the floor to recovery
+    invalid_published: int = 0   # instance-ticks ending with an invalid plan
+    #                            (must stay 0: the keep-last-valid guarantee)
 
     def record_tick(self, *, requests: int, solves: int, warm_hits: int,
-                    events: int, wall: float, churns) -> None:
+                    events: int, wall: float, churns,
+                    deferred: int = 0, fallback_solves: int = 0,
+                    dropped_events: int = 0, below_floor: int = 0,
+                    recoveries=(), invalid_published: int = 0) -> None:
         self.ticks += 1
         self.requests += requests
         self.solves += solves
@@ -49,6 +64,14 @@ class FleetMetrics:
         self.solve_wall += wall
         self.latencies.extend([wall] * requests)
         self.churns.extend(float(c) for c in churns)
+        if deferred or fallback_solves:
+            self.degraded_ticks += 1
+        self.deferred += deferred
+        self.fallback_solves += fallback_solves
+        self.dropped_events += dropped_events
+        self.below_floor_ticks += below_floor
+        self.recovery_ticks.extend(int(r) for r in recoveries)
+        self.invalid_published += invalid_published
 
     # -- aggregates -----------------------------------------------------------
     def dedup_hit_rate(self) -> float:
@@ -71,6 +94,9 @@ class FleetMetrics:
             return 0.0
         return float(np.mean(self.churns))
 
+    def max_recovery_ticks(self) -> int:
+        return max(self.recovery_ticks) if self.recovery_ticks else 0
+
     def summary(self) -> dict:
         return {
             "ticks": self.ticks,
@@ -83,6 +109,20 @@ class FleetMetrics:
             "p50_latency_us": self.latency_percentile(50) * 1e6,
             "p99_latency_us": self.latency_percentile(99) * 1e6,
             "mean_churn": self.mean_churn(),
+        }
+
+    def robustness_summary(self) -> dict:
+        return {
+            "degraded_ticks": self.degraded_ticks,
+            "deferred": self.deferred,
+            "fallback_solves": self.fallback_solves,
+            "dropped_events": self.dropped_events,
+            "below_floor_ticks": self.below_floor_ticks,
+            "recoveries": len(self.recovery_ticks),
+            "max_recovery_ticks": self.max_recovery_ticks(),
+            "mean_recovery_ticks": (float(np.mean(self.recovery_ticks))
+                                    if self.recovery_ticks else 0.0),
+            "invalid_published": self.invalid_published,
         }
 
     def bench_rows(self, suffix: str = "", extra: Optional[dict] = None) -> list:
@@ -113,4 +153,33 @@ class FleetMetrics:
              f"mean fraction of layers remapped per replan: "
              f"{s['mean_churn']:.3f}",
              {"mean_churn": s["mean_churn"]}),
+        ]
+
+    def chaos_rows(self, suffix: str = "", extra: Optional[dict] = None) -> list:
+        """``fleet_chaos_*`` BENCH rows: graceful-degradation counters under
+        fault injection.  ``bench_gate.py`` floors ``invalid_published == 0``
+        (never publish a plan addressing dead pods) and bounds
+        ``max_recovery_ticks`` (bounded return above the reliability floor)."""
+        r = self.robustness_summary()
+        tag = f"_{suffix}" if suffix else ""
+        shared = dict(r)
+        shared["ticks"] = self.ticks
+        if extra:
+            shared.update(extra)
+        return [
+            (f"fleet_chaos_robustness{tag}", None,
+             f"{r['degraded_ticks']} degraded ticks, {r['deferred']} deferred, "
+             f"{r['fallback_solves']} fallback solves, "
+             f"{r['dropped_events']} dropped events, "
+             f"{r['invalid_published']} invalid published",
+             shared),
+            (f"fleet_chaos_recovery{tag}", None,
+             f"{r['recoveries']} floor recoveries, max {r['max_recovery_ticks']} "
+             f"ticks, mean {r['mean_recovery_ticks']:.2f}; "
+             f"{r['below_floor_ticks']} instance-ticks below floor",
+             {"below_floor_ticks": r["below_floor_ticks"],
+              "recoveries": r["recoveries"],
+              "max_recovery_ticks": r["max_recovery_ticks"],
+              "mean_recovery_ticks": r["mean_recovery_ticks"],
+              "invalid_published": r["invalid_published"]}),
         ]

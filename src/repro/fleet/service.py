@@ -24,6 +24,25 @@ The published plans are bit-identical to running the scalar portfolio
 ``min_period_exhaustive(workload, platform)`` per instance (relabeling
 theorem + the batched engine's equivalence contract; asserted in
 tests/test_fleet.py).
+
+Graceful degradation (the chaos-harness contract, tests/test_fleet.py +
+``fleet_bench.py --chaos``):
+
+  - ``solve_deadline`` — a per-tick solve budget in seconds.  Groups past
+    the budget are NOT solved this tick: their instances keep their last
+    valid plan and are retried next tick.  Instances whose current plan is
+    *invalid* (it addresses pods that no longer exist) are never deferred —
+    their groups solve regardless of the budget, which is what guarantees
+    zero ticks ending with an invalid published plan.
+  - scalar fallback — when a batched group solve raises, each member is
+    re-solved with the scalar reference portfolio on its canonical problem
+    (bit-identical by the equivalence contract), so one poisoned batch
+    degrades throughput, not correctness.
+  - ``reliability_floor`` — when platforms carry failure probabilities, any
+    instance whose plan's reliability drops below the floor gets a greedy
+    replication pass (:func:`repro.core.replication.replicate_stage_plan`);
+    time spent below the floor and recovery latency are counted in
+    :class:`FleetMetrics` and floor-gated in ``bench_gate.py``.
 """
 
 from __future__ import annotations
@@ -35,9 +54,11 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core import Mapping, Platform, StagePlan, interval_cycle_times
+from ..core import (Mapping, Platform, ReplicatedMapping, StagePlan,
+                    interval_cycle_times, min_period_exhaustive, reliability)
 from ..core.batched import ProblemBatch, batched_min_period
 from ..core.planner import _realize
+from ..core.replication import replicate_stage_plan
 from ..pipeline.replan import StragglerMonitor, elastic_platform
 from .metrics import FleetMetrics
 from .signatures import canonicalize, remap_alloc, signature
@@ -66,19 +87,34 @@ class ReplanService:
     device program).  ``warm_start=False`` drops the cross-tick plan cache
     at every tick (same-tick dedup always applies) — it exists to *prove*
     warm-starting never changes results, not to be used.
+
+    ``solve_deadline`` (seconds per tick) and ``reliability_floor`` (minimum
+    plan reliability, needs platforms with failure probabilities) enable the
+    graceful-degradation behaviors documented in the module docstring; both
+    default to off, keeping the clean path byte-identical.
     """
 
     def __init__(self, instances: Sequence, backend: str = "numpy",
-                 warm_start: bool = True):
+                 warm_start: bool = True,
+                 solve_deadline: Optional[float] = None,
+                 reliability_floor: Optional[float] = None):
         self.backend = backend
         self.warm_start = warm_start
+        self.solve_deadline = solve_deadline
+        self.reliability_floor = reliability_floor
         self.metrics = FleetMetrics()
         self.states = [InstanceState(wl, pf) for wl, pf in instances]
         self.plan_cache: dict = {}   # digest -> canonical HeuristicResult
         self.tick_count = 0
+        self._pending: dict = {}     # deadline-deferred ids, retried next tick
+        self._dropped = 0            # stale events discarded this tick
+        self._below_since: dict = {} # iid -> tick it dipped below the floor
         # Initial fleet-wide planning runs through the same dedup+batch path
-        # but is not a *re*plan: it stays out of the metrics.
+        # but is not a *re*plan: it stays out of the metrics.  (No plan
+        # exists yet, so nothing is deferrable: a deadline cannot leave an
+        # instance unplanned.)
         self._replan(range(len(self.states)))
+        self._repair_reliability(dict.fromkeys(range(len(self.states))))
 
     # -- event application ----------------------------------------------------
 
@@ -86,7 +122,8 @@ class ReplanService:
         """Feed one timing observation; degrade the platform if the EWMA
         flags stragglers (the ``replan_for_straggler`` recipe).  Returns
         whether the platform changed."""
-        if len(observed) != st.plan.num_stages or not _plan_valid(st):
+        if not _plan_valid(st) or len(observed) != st.plan.num_stages:
+            self._dropped += 1
             return False   # stale report from a pre-replan plan shape
         st.monitor.observe(observed)
         predicted = interval_cycle_times(st.workload, st.platform,
@@ -109,10 +146,16 @@ class ReplanService:
         if isinstance(ev, StageDrift):
             if not _plan_valid(st):
                 return False   # platform already changed this tick
+            if not (0 <= ev.stage < st.plan.num_stages):
+                # stale event addressed at a pre-replan plan shape: drop it,
+                # like stale StageTimings — remapping it (the old
+                # ``stage % num_stages``) would slow an arbitrary stage
+                self._dropped += 1
+                return False
             predicted = interval_cycle_times(st.workload, st.platform,
                                              st.plan.mapping)
             observed = predicted.copy()
-            observed[ev.stage % st.plan.num_stages] *= ev.factor
+            observed[ev.stage] *= ev.factor
             return self._observe(st, observed)
         if isinstance(ev, PodCountChange):
             target = max(1, int(ev.num_pods))
@@ -124,9 +167,10 @@ class ReplanService:
             if st.platform.p <= 1:
                 return False   # last pod: nothing to fail over to
             pod = int(ev.pod) % st.platform.p
-            st.platform = Platform(np.delete(st.platform.s, pod),
-                                   st.platform.b,
-                                   name=f"{st.platform.name}-failed")
+            # Platform.without appends "-failed" at most once (names stay
+            # bounded over long traces) and drops the pod's failure
+            # probability alongside its speed.
+            st.platform = st.platform.without(pod)
             return True
         raise TypeError(f"unknown fleet event {type(ev).__name__}")
 
@@ -134,8 +178,19 @@ class ReplanService:
 
     def _replan(self, ids) -> dict:
         """Dedup, batch-solve, and publish new plans for the given instance
-        ids.  Returns {iid: StagePlan}; sets ``self._last_tick_stats``."""
+        ids.  Returns {iid: StagePlan}; sets ``self._last_tick_stats``.
+
+        With a ``solve_deadline``, canonical problems are solved group by
+        group until the budget runs out; later groups are deferred — their
+        subscribers keep their last valid plan and are retried next tick —
+        EXCEPT problems with a subscriber whose plan is invalid or missing,
+        which always solve (keep-last-VALID-plan, never keep-broken-plan).
+        A batched group solve that raises falls back to per-member scalar
+        solves of the same canonical problems (bit-identical results)."""
         ids = list(ids)
+        t0 = time.perf_counter()
+        deadline = (None if self.solve_deadline is None
+                    else t0 + self.solve_deadline)
         sig_of = {i: signature(self.states[i].workload,
                                self.states[i].platform) for i in ids}
         warm_hits = sum(sig_of[i].digest in self.plan_cache for i in ids)
@@ -144,23 +199,42 @@ class ReplanService:
             sig = sig_of[i]
             if sig.digest not in self.plan_cache and sig.digest not in need:
                 need[sig.digest] = (sig, self.states[i])
+        must = {sig_of[i].digest for i in ids
+                if self.states[i].plan is None
+                or not _plan_valid(self.states[i])}
         by_shape: dict = {}
         for digest, (sig, st) in need.items():
             by_shape.setdefault(sig.shape, []).append((digest, st))
+        fallback_solves = 0
+        solved = 0
         for (n, p, b), entries in by_shape.items():
+            if deadline is not None and time.perf_counter() > deadline:
+                entries = [e for e in entries if e[0] in must]
+            if not entries:
+                continue
             pb = ProblemBatch.from_arrays(
                 np.stack([st.workload.w for _, st in entries]),
                 np.stack([st.workload.delta for _, st in entries]),
                 np.stack([st.platform.s[st.platform.sorted_indices()]
                           for _, st in entries]),
                 b)
-            for (digest, _), res in zip(entries,
-                                        batched_min_period(pb, self.backend)):
+            try:
+                results = list(batched_min_period(pb, self.backend))
+            except Exception:  # noqa: BLE001 — degrade, don't die mid-tick
+                results = [min_period_exhaustive(st.workload,
+                                                 canonicalize(st.platform)[0])
+                           for _, st in entries]
+                fallback_solves += len(entries)
+            for (digest, _), res in zip(entries, results):
                 self.plan_cache[digest] = res
-        published, churns = {}, []
+            solved += len(entries)
+        published, churns, deferred = {}, [], []
         for i in ids:
             st = self.states[i]
-            res = self.plan_cache[sig_of[i].digest]
+            res = self.plan_cache.get(sig_of[i].digest)
+            if res is None:
+                deferred.append(i)   # keep the last valid plan, retry next tick
+                continue
             _, perm = canonicalize(st.platform)
             mapping = Mapping(res.mapping.intervals,
                               remap_alloc(res.mapping.alloc, perm))
@@ -170,23 +244,75 @@ class ReplanService:
             st.plan = plan
             st.monitor = StragglerMonitor(plan.num_stages)
             published[i] = plan
-        self._last_tick_stats = (len(ids), len(need), warm_hits, churns)
+        self._pending.update(dict.fromkeys(deferred))
+        self._last_tick_stats = (len(ids), solved, warm_hits, churns,
+                                 len(deferred), fallback_solves)
         return published
+
+    def _plan_reliability(self, st: InstanceState) -> float:
+        """Reliability of the instance's published plan (consensus model when
+        the plan carries replication groups)."""
+        if st.plan.groups is not None:
+            rm = ReplicatedMapping(st.plan.mapping.intervals, st.plan.groups)
+            return reliability(st.workload, st.platform, rm)
+        return reliability(st.workload, st.platform, st.plan.mapping)
+
+    def _repair_reliability(self, published: dict) -> tuple:
+        """Reliability-floor pass: re-replicate any instance whose plan sits
+        below the floor, republishing into ``published`` when the plan
+        actually changed.  Returns (instance-ticks below the floor, list of
+        recovery latencies closed this tick)."""
+        floor = self.reliability_floor
+        if floor is None:
+            return 0, []
+        below, recoveries = 0, []
+        for i, st in enumerate(self.states):
+            if st.platform.fail is None or not _plan_valid(st):
+                continue
+            rel = self._plan_reliability(st)
+            if rel < floor - _FLOOR_EPS:
+                new = replicate_stage_plan(st.workload, st.platform, st.plan,
+                                           target=floor)
+                if (new is not st.plan
+                        and (new.groups != st.plan.groups
+                             or new.mapping != st.plan.mapping)):
+                    st.plan = new
+                    st.monitor = StragglerMonitor(new.num_stages)
+                    published[i] = new
+                rel = self._plan_reliability(st)
+            if rel < floor - _FLOOR_EPS:
+                below += 1
+                self._below_since.setdefault(i, self.tick_count)
+            elif i in self._below_since:
+                recoveries.append(self.tick_count - self._below_since.pop(i))
+        return below, recoveries
 
     def tick(self, events: Sequence) -> dict:
         """Process one tick's events; returns the republished plans."""
         t0 = time.perf_counter()
         if not self.warm_start:
             self.plan_cache.clear()
-        dirty: dict = {}   # insertion-ordered unique dirty ids
+        self._dropped = 0
+        # Deadline-deferred instances retry before this tick's events touch
+        # anything; new dirtiness merges in behind them.
+        dirty: dict = dict.fromkeys(self._pending)
+        self._pending = {}
         for ev in events:
             if self._apply(ev):
                 dirty[ev.instance] = None
         published = self._replan(dirty.keys())
-        requests, solves, warm_hits, churns = self._last_tick_stats
+        below, recoveries = self._repair_reliability(published)
+        (requests, solves, warm_hits, churns,
+         deferred, fallback_solves) = self._last_tick_stats
+        invalid = sum(not _plan_valid(st) for st in self.states)
         self.metrics.record_tick(requests=requests, solves=solves,
                                  warm_hits=warm_hits, events=len(events),
-                                 wall=time.perf_counter() - t0, churns=churns)
+                                 wall=time.perf_counter() - t0, churns=churns,
+                                 deferred=deferred,
+                                 fallback_solves=fallback_solves,
+                                 dropped_events=self._dropped,
+                                 below_floor=below, recoveries=recoveries,
+                                 invalid_published=invalid)
         self.tick_count += 1
         return published
 
@@ -208,15 +334,25 @@ class ReplanService:
         h = hashlib.blake2b(digest_size=16)
         for st in self.states:
             h.update(repr((st.plan.mapping.intervals, st.plan.mapping.alloc,
-                           st.plan.period, st.plan.latency)).encode())
+                           st.plan.period, st.plan.latency,
+                           st.plan.groups)).encode())
         return h.hexdigest()
+
+
+_FLOOR_EPS = 1e-12   # matches the greedy replicator's target tolerance
 
 
 def _plan_valid(st: InstanceState) -> bool:
     """Whether the published plan still addresses the current platform — a
     same-tick pod removal/resize invalidates the plan's allocation until the
     end-of-tick replan; timing reports against it are meaningless."""
-    return max(st.plan.mapping.alloc) < st.platform.p
+    if st.plan is None:
+        return False
+    if max(st.plan.mapping.alloc) >= st.platform.p:
+        return False
+    if st.plan.groups is not None:
+        return max(u for g in st.plan.groups for u in g) < st.platform.p
+    return True
 
 
 def _plan_churn(old: StagePlan, new: StagePlan, n: int) -> float:

@@ -69,21 +69,30 @@ class Signature:
 
 def signature(workload: Workload, platform: Platform) -> Signature:
     """Canonical signature of a replan problem: hash of the exact bytes of
-    (n, p, b, w, delta, speed-sorted s)."""
+    (n, p, b, w, delta, speed-sorted s) — plus the speed-sorted failure
+    probabilities when the platform carries them (reliability-floor replans
+    depend on them; platforms without a failure model keep their exact PR-6
+    digests, so existing caches and dedup behavior are unchanged)."""
     order = platform.sorted_indices()
     h = hashlib.blake2b(digest_size=16)
     h.update(struct.pack("<qqd", workload.n, platform.p, float(platform.b)))
     h.update(np.ascontiguousarray(workload.w).tobytes())
     h.update(np.ascontiguousarray(workload.delta).tobytes())
     h.update(np.ascontiguousarray(platform.s[order]).tobytes())
+    if platform.fail is not None:
+        h.update(b"fail")
+        h.update(np.ascontiguousarray(platform.fail[order]).tobytes())
     return Signature(h.hexdigest(), workload.n, platform.p, float(platform.b))
 
 
 def canonicalize(platform: Platform) -> tuple:
     """(canonical platform, perm): speeds sorted non-increasing, stable.
-    ``perm[c]`` is the original index of canonical processor ``c``."""
+    ``perm[c]`` is the original index of canonical processor ``c``.  Failure
+    probabilities (when present) follow their processors through the
+    permutation."""
     perm = platform.sorted_indices()
-    canon = Platform(platform.s[perm], platform.b, name=f"{platform.name}-canon")
+    canon = Platform(platform.s[perm], platform.b, name=f"{platform.name}-canon",
+                     fail=None if platform.fail is None else platform.fail[perm])
     return canon, perm
 
 

@@ -48,8 +48,10 @@ class StageTimings:
 
 @dataclasses.dataclass(frozen=True)
 class StageDrift:
-    """Stage ``stage`` (mod the current plan's stage count) of ``instance``
-    runs ``factor`` times slower than predicted."""
+    """Stage ``stage`` of ``instance``'s *current plan* runs ``factor`` times
+    slower than predicted.  An out-of-range stage is a stale event from a
+    pre-replan plan shape; the service drops it (like stale StageTimings)
+    rather than remapping it onto an arbitrary stage."""
 
     instance: int
     stage: int

@@ -75,8 +75,14 @@ def elastic_platform(old_platform: Platform, new_num_pods: int,
         surviving = np.asarray(surviving, dtype=np.int64)[:new_num_pods]
     kept = old_platform.s[surviving]
     fill = np.full(new_num_pods - len(kept), float(np.median(kept)))
+    if old_platform.fail is None:
+        fail = None
+    else:
+        kept_f = old_platform.fail[surviving]
+        fail = np.concatenate(
+            [kept_f, np.full(new_num_pods - len(kept_f), float(np.median(kept_f)))])
     return Platform(np.concatenate([kept, fill]), old_platform.b,
-                    name=f"elastic-{new_num_pods}")
+                    name=f"elastic-{new_num_pods}", fail=fail)
 
 
 def elastic_replan(workload: Workload, old_platform: Platform,

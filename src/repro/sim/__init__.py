@@ -1,16 +1,18 @@
 """Paper simulation study (Section 5): the scenario-family registry (the
-source paper's E1-E4 plus the image-processing follow-up's I1-I4), experiment
-runner (scalar / batched / fused engines), replication sweeps, failure
-thresholds."""
+source paper's E1-E4, the image-processing follow-up's I1-I4, and the
+reliability sequel's R1-R4), experiment runner (scalar / batched / fused
+engines), replication sweeps, failure thresholds."""
 
 from .generators import (EXPERIMENTS, FAMILY_SETS, IMAGE_FAMILIES,
-                         PAPER_FAMILIES, ExperimentSpec, InstanceBatch,
-                         gen_instance, gen_instance_batch, register_experiment)
+                         PAPER_FAMILIES, RELIABILITY_FAMILIES, ExperimentSpec,
+                         InstanceBatch, gen_instance, gen_instance_batch,
+                         register_experiment)
 from .experiments import (ReplicatedResult, failure_thresholds, run_campaign,
                           run_experiment, run_replicated, summarize_experiment,
                           summarize_replicated, trajectory)
 
 __all__ = ["EXPERIMENTS", "FAMILY_SETS", "PAPER_FAMILIES", "IMAGE_FAMILIES",
+           "RELIABILITY_FAMILIES",
            "ExperimentSpec", "register_experiment", "InstanceBatch",
            "gen_instance", "gen_instance_batch",
            "ReplicatedResult", "run_experiment", "run_campaign",

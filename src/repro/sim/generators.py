@@ -33,6 +33,25 @@ per-stage comm/comp structure; we register them as I1-I4:
   I3  correlated comm ∝ comp: inter-stage volumes proportional to the
       adjacent stages' work (heavy stages exchange heavy data);
   I4  uniform wide-range: continuous uniform comm and comp over [0.5, 50].
+
+The reliability sequel (arXiv 0711.1231) adds per-processor failure
+probabilities; its scenario families are registered as R1-R4 (family
+"reliability"), each an E-style comm/comp pair plus a pluggable *failure
+sampler* ``fail(rng, p, s) -> (p,)`` which sees the drawn speeds so failure
+can correlate with hardware quality:
+
+  R1  balanced comm/comp, uniform failures:      f in [1e-3, 2e-2] i.i.d.
+  R2  balanced comm/comp, bimodal failures:      reliable majority + a flaky
+      20% minority an order of magnitude worse;
+  R3  speed-correlated failures: slower processors (older hardware) fail
+      more — f interpolates [1e-3, 3e-2] from fastest to slowest, with
+      multiplicative jitter;
+  R4  large computations + bimodal failures: E3's compute-heavy stages on a
+      mixed-quality fleet (long intervals concentrate work on few
+      processors, making replication decisions non-trivial).
+
+Failure draws happen AFTER comp/comm/speeds so the E/I streams are untouched
+(the draw order is the seed contract asserted by the golden CSVs).
 """
 
 from __future__ import annotations
@@ -130,6 +149,48 @@ def jpeg_profile_comm(jitter: float = 0.2) -> Callable:
 
 
 # ---------------------------------------------------------------------------
+# Failure samplers (the reliability sequel's platform model).
+#
+# fail samplers: fn(rng, p, s) -> (p,) per-processor failure probabilities in
+#                [0, 1); they see the drawn speeds so failure probability can
+#                correlate with hardware quality.
+# ---------------------------------------------------------------------------
+
+def uniform_fail(lo: float = 1e-3, hi: float = 2e-2) -> Callable:
+    """I.i.d. uniform failure probabilities (R1)."""
+    return lambda rng, p, s: rng.uniform(lo, hi, p)
+
+
+def bimodal_fail(lo: float = 1e-3, hi: float = 2e-2,
+                 flaky_frac: float = 0.2) -> Callable:
+    """A reliable majority near ``lo`` plus a flaky minority near ``hi`` (R2):
+    the realistic mixed-fleet shape, where replication pays only when it
+    avoids pairing two flaky processors."""
+    def fn(rng, p, s):
+        flaky = rng.random(p) < flaky_frac
+        base = rng.uniform(lo, 2 * lo, p)
+        bad = rng.uniform(0.5 * hi, hi, p)
+        return np.where(flaky, bad, base)
+    return fn
+
+
+def speed_correlated_fail(lo: float = 1e-3, hi: float = 3e-2,
+                          noise: float = 0.25) -> Callable:
+    """Failure probability anti-correlated with speed (R3): the slowest
+    processor sits near ``hi``, the fastest near ``lo`` (older hardware is
+    both slower and flakier), with multiplicative jitter.  Homogeneous
+    speeds degenerate to ~``hi`` everywhere."""
+    def fn(rng, p, s):
+        s = np.asarray(s, dtype=float)
+        span = s.max() - s.min()
+        t = (s.max() - s) / span if span > 0 else np.ones(p)   # 0 fast .. 1 slow
+        base = lo + (hi - lo) * t
+        f = base * rng.uniform(1.0 - noise, 1.0 + noise, p)
+        return np.clip(f, 0.0, 0.999)
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # Family registry
 # ---------------------------------------------------------------------------
 
@@ -146,6 +207,9 @@ class ExperimentSpec:
     comp: Callable            # (rng, n) -> (n,) stage works
     comm: Callable            # (rng, n, w) -> (n+1,) inter-stage volumes
     family: str = "paper"
+    # Reliability-sequel families carry a failure sampler (rng, p, s) -> (p,);
+    # None keeps the platform's fail unset (bi-criteria families unchanged).
+    fail: "Callable | None" = None
 
 
 EXPERIMENTS: dict = {}
@@ -185,15 +249,29 @@ for _spec in (
     ExperimentSpec("I4", "uniform wide-range comm/comp",
                    uniform_comp(0.5, 50.0, integer=False),
                    uniform_comm(0.5, 50.0, integer=False), family="image"),
+    ExperimentSpec("R1", "balanced comm/comp, uniform failures",
+                   uniform_comp(1, 20), uniform_comm(1, 100),
+                   family="reliability", fail=uniform_fail()),
+    ExperimentSpec("R2", "balanced comm/comp, bimodal failures (flaky minority)",
+                   uniform_comp(1, 20), uniform_comm(1, 100),
+                   family="reliability", fail=bimodal_fail()),
+    ExperimentSpec("R3", "speed-correlated failures (slow = old = flaky)",
+                   uniform_comp(1, 20), uniform_comm(1, 100),
+                   family="reliability", fail=speed_correlated_fail()),
+    ExperimentSpec("R4", "large computations on a mixed-quality fleet",
+                   uniform_comp(10, 1000), uniform_comm(1, 20),
+                   family="reliability", fail=bimodal_fail()),
 ):
     register_experiment(_spec)
 
 PAPER_FAMILIES = ("E1", "E2", "E3", "E4")
 IMAGE_FAMILIES = ("I1", "I2", "I3", "I4")
+RELIABILITY_FAMILIES = ("R1", "R2", "R3", "R4")
 FAMILY_SETS = {
     "paper": PAPER_FAMILIES,
     "image": IMAGE_FAMILIES,
-    "all": PAPER_FAMILIES + IMAGE_FAMILIES,
+    "reliability": RELIABILITY_FAMILIES,
+    "all": PAPER_FAMILIES + IMAGE_FAMILIES + RELIABILITY_FAMILIES,
 }
 
 BANDWIDTH = 10.0
@@ -215,9 +293,13 @@ def gen_instance(exp: str, n: int, p: int, seed: int) -> tuple:
         raise ValueError(f"family {exp!r} sampler shapes {w.shape}/{delta.shape}"
                          f" do not match (n,)/(n+1,) for n={n}")
     s = rng.integers(SPEED_LOW, SPEED_HIGH + 1, p).astype(float)
+    # failure draws come LAST so families without a fail sampler keep their
+    # original byte-identical streams (the seed contract)
+    fail = (np.asarray(spec.fail(rng, p, s), dtype=float)
+            if spec.fail is not None else None)
     return (
         Workload(w, delta, name=f"{exp}-n{n}-seed{seed}"),
-        Platform(s, BANDWIDTH, name=f"{exp}-p{p}-seed{seed}"),
+        Platform(s, BANDWIDTH, name=f"{exp}-p{p}-seed{seed}", fail=fail),
     )
 
 

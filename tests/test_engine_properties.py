@@ -19,7 +19,9 @@ invariant is a plain checker over a random instance:
 import numpy as np
 import pytest
 
-from repro.core import make_platform, make_workload, optimal_latency
+from repro.core import (Mapping, ReplicatedMapping, evaluate_tri, latency,
+                        make_platform, make_workload, optimal_latency, period,
+                        reliability)
 from repro.core.batched import batched_trajectories
 from repro.core.heuristics import _EPS, split_trajectory
 from repro.sim.generators import SPEED_HIGH, SPEED_LOW
@@ -221,6 +223,101 @@ def test_bucket_padding_lanes_inert():
         ref = batched_trajectories(code, pairs, backend="numpy")
         got = batched_trajectories(code, pairs, backend="fused")
         assert got == ref, code
+
+
+# ---------------------------------------------------------------------------
+# Reliability / replication invariants (the sequel's consensus model)
+# ---------------------------------------------------------------------------
+
+def _reliable_instance(rng, n_max=10, p_max=8):
+    wl, pf = _draw_instance(rng, n_max, p_max)
+    fail = rng.uniform(1e-4, 0.2, pf.p)
+    return wl, pf.with_failures(fail)
+
+
+def _contiguous_mapping(rng, n, p):
+    """A random valid interval mapping: m contiguous intervals on m distinct
+    processors."""
+    m = int(rng.integers(1, min(n, p) + 1))
+    cuts = (sorted(int(c) for c in
+                   rng.choice(np.arange(1, n), size=m - 1, replace=False))
+            if m > 1 else [])
+    bounds = [0] + cuts + [n]
+    intervals = tuple((bounds[j] + 1, bounds[j + 1]) for j in range(m))
+    alloc = tuple(int(a) for a in rng.choice(p, size=m, replace=False))
+    return Mapping(intervals, alloc)
+
+
+def seeded_property(f):
+    """Run ``f(rng)`` over random seeds: hypothesis-driven when available,
+    a fixed seeded sweep otherwise."""
+    if HAVE_HYPOTHESIS:
+        @settings(max_examples=20, deadline=None)
+        @given(st.integers(0, 2 ** 31 - 1))
+        def wrapper(seed):
+            f(np.random.default_rng(seed))
+        wrapper.__name__ = f.__name__
+        wrapper.__doc__ = f.__doc__
+        return wrapper
+
+    @pytest.mark.parametrize("seed", range(N_FALLBACK_SEEDS))
+    def wrapper(seed):
+        f(np.random.default_rng(seed))
+    wrapper.__name__ = f.__name__
+    wrapper.__doc__ = f.__doc__
+    return wrapper
+
+
+@seeded_property
+def test_replication_monotone(rng):
+    """Adding a replica to any group never DEcreases reliability (the
+    interval fails only when every replica fails) and never DEcreases period
+    or latency (the consensus interval runs at its slowest replica's speed) —
+    with reliability in [0, 1] throughout."""
+    wl, pf = _reliable_instance(rng)
+    base = _contiguous_mapping(rng, wl.n, pf.p)
+    groups = [[a] for a in base.alloc]
+    free = [u for u in range(pf.p) if u not in base.alloc]
+    rng.shuffle(free)
+    prev_per, prev_lat, prev_rel = evaluate_tri(
+        wl, pf, ReplicatedMapping(base.intervals,
+                                  tuple(tuple(g) for g in groups)))
+    for u in free:
+        groups[int(rng.integers(len(groups)))].append(int(u))
+        rm = ReplicatedMapping(base.intervals, tuple(tuple(g) for g in groups))
+        rm.validate(wl.n, pf.p)
+        per, lat, rel = evaluate_tri(wl, pf, rm)
+        assert 0.0 <= rel <= 1.0
+        assert rel >= prev_rel - 1e-12
+        assert per >= prev_per * (1 - 1e-12)
+        assert lat >= prev_lat * (1 - 1e-12)
+        prev_per, prev_lat, prev_rel = per, lat, rel
+
+
+@seeded_property
+def test_reliability_bounds(rng):
+    """Reliability is always in [0, 1]; without failure probabilities it is
+    exactly 1.0."""
+    wl, pf = _reliable_instance(rng)
+    mapping = _contiguous_mapping(rng, wl.n, pf.p)
+    rel = reliability(wl, pf, mapping)
+    assert 0.0 <= rel <= 1.0
+    bare = make_platform(pf.s, pf.b)
+    assert reliability(wl, bare, mapping) == 1.0
+
+
+@seeded_property
+def test_singleton_replication_bit_identical(rng):
+    """A ReplicatedMapping whose groups are all singletons IS the plain
+    mapping: period and latency agree bit-for-bit (same array reads, same
+    accumulation order), and reliability matches the per-interval product."""
+    wl, pf = _reliable_instance(rng)
+    mapping = _contiguous_mapping(rng, wl.n, pf.p)
+    rm = ReplicatedMapping(mapping.intervals,
+                           tuple((a,) for a in mapping.alloc))
+    assert period(wl, pf, rm) == period(wl, pf, mapping)
+    assert latency(wl, pf, rm) == latency(wl, pf, mapping)
+    assert reliability(wl, pf, rm) == reliability(wl, pf, mapping)
 
 
 @fixed_shape_property

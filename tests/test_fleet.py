@@ -8,11 +8,12 @@ import numpy as np
 import pytest
 
 from repro.core import (Platform, make_platform, min_period_exhaustive,
-                        stack_instances)
+                        sample_failures, stack_instances)
 from repro.core.batched import ProblemBatch, batched_min_period
-from repro.fleet import (PodCountChange, PodFailure, ReplanService, StageDrift,
-                         StageTimings, canonicalize, gen_burst_trace,
-                         make_fleet, remap_alloc, signature, span_bucket)
+from repro.fleet import (ChaosSpec, PodCountChange, PodFailure, ReplanService,
+                         StageDrift, StageTimings, canonicalize,
+                         gen_burst_trace, inject_chaos, make_fleet,
+                         remap_alloc, signature, span_bucket)
 from repro.launch.serve import sample_tokens
 from repro.sim.generators import gen_instance
 
@@ -201,6 +202,139 @@ def test_straggler_fast_path_no_replan():
     assert published == {}
     assert svc.fleet_digest() == before
     assert svc.metrics.requests == 0
+
+
+# ---------------------------------------------------------------------------
+# Chaos: fault injection, graceful degradation, reliability floor
+# ---------------------------------------------------------------------------
+
+def _chaos_fleet():
+    """The small fleet with seeded per-group failure probabilities and a
+    chaos-injected burst trace."""
+    pairs, groups = make_fleet(n_groups=3, replicas=4, n=8, p=4, seed=42)
+    shared, withfail = {}, []
+    for wl, pf in pairs:
+        if id(pf) not in shared:
+            shared[id(pf)] = pf.with_failures(
+                sample_failures(pf.p, kind="bimodal", seed=len(shared)))
+        withfail.append((wl, shared[id(pf)]))
+    trace = gen_burst_trace(groups, num_ticks=12, seed=7, n_stages=8,
+                            initial_pods=4, burst_prob=0.8)
+    chaos = inject_chaos(trace, groups, ChaosSpec(), seed=13, initial_pods=4)
+    return withfail, groups, chaos
+
+
+def test_chaos_injection_deterministic():
+    """Same (trace, groups, spec, seed) -> identical chaos trace; zero
+    probabilities -> the input trace unchanged; and a full replay of the
+    chaos trace is deterministic (same fleet_digest and counters)."""
+    pairs, groups, chaos = _chaos_fleet()
+    _, _, chaos2 = _chaos_fleet()
+    assert chaos == chaos2
+    base = gen_burst_trace(groups, num_ticks=12, seed=7, n_stages=8,
+                           initial_pods=4, burst_prob=0.8)
+    calm = ChaosSpec(storm_prob=0, flap_prob=0, drop_prob=0, dup_prob=0,
+                     reorder_prob=0)
+    assert inject_chaos(base, groups, calm, seed=13).ticks == base.ticks
+    a, b = ReplanService(pairs), ReplanService(pairs)
+    a.run_trace(chaos)
+    b.run_trace(chaos)
+    assert a.fleet_digest() == b.fleet_digest()
+    for f in ("requests", "solves", "dropped_events", "invalid_published"):
+        assert getattr(a.metrics, f) == getattr(b.metrics, f)
+
+
+def test_chaos_never_publishes_invalid_plans():
+    """Through storms, flaps, and delivery faults, no instance ever ends a
+    tick with a plan addressing dead pods."""
+    pairs, _, chaos = _chaos_fleet()
+    svc = ReplanService(pairs, reliability_floor=0.9)
+    m = svc.run_trace(chaos)
+    assert m.invalid_published == 0
+    for st in svc.states:
+        assert max(st.plan.mapping.alloc) < st.platform.p
+        if st.plan.groups is not None:
+            assert max(u for g in st.plan.groups for u in g) < st.platform.p
+
+
+def test_solve_deadline_defers_then_recovers():
+    """With a zero solve budget, non-urgent replans are deferred (keeping the
+    last valid plan); when the budget returns, the pending retries converge to
+    the exact no-deadline outcome."""
+    pairs, _, chaos = _chaos_fleet()
+    svc = ReplanService(pairs, solve_deadline=0.0)
+    svc.run_trace(chaos)
+    assert svc.metrics.deferred > 0
+    assert svc.metrics.degraded_ticks > 0
+    assert svc.metrics.invalid_published == 0
+    # lift the deadline: one empty tick drains the pending retries, and every
+    # published plan equals the scalar portfolio on the instance's CURRENT
+    # effective platform (deferral may have skipped intermediate replans, but
+    # it never changes what the final converged answer is)
+    svc.solve_deadline = None
+    svc.tick([])
+    assert not svc._pending
+    for st in svc.states:
+        assert _plans_equal(st.plan, min_period_exhaustive(st.workload,
+                                                           st.platform))
+
+
+def test_batched_failure_falls_back_to_scalar(monkeypatch):
+    """A poisoned batched solve degrades to per-member scalar solves with
+    bit-identical published plans."""
+    import repro.fleet.service as svc_mod
+    pairs, _, chaos = _chaos_fleet()
+    ref = ReplanService(pairs)
+    ref.run_trace(chaos)
+
+    def boom(pb, backend):
+        raise RuntimeError("poisoned batch")
+
+    monkeypatch.setattr(svc_mod, "batched_min_period", boom)
+    svc = ReplanService(pairs)
+    svc.run_trace(chaos)
+    assert svc.metrics.fallback_solves > 0
+    assert svc.fleet_digest() == ref.fleet_digest()
+
+
+def test_reliability_floor_triggers_replication():
+    """An instance whose plan reliability sits below the floor gets greedy
+    replicas until it clears the floor (pods permitting)."""
+    wl, pf = gen_instance("E2", 4, 10, seed=5)
+    pf = pf.with_failures(np.full(pf.p, 0.1))
+    svc = ReplanService([(wl, pf)], reliability_floor=0.97)
+    st = svc.states[0]
+    assert st.plan.groups is not None          # replication actually fired
+    assert svc._plan_reliability(st) >= 0.97 - 1e-9
+    # without the floor the same instance plans below it
+    bare = ReplanService([(wl, pf)])
+    assert bare._plan_reliability(bare.states[0]) < 0.97
+
+
+def test_stale_stage_drift_dropped():
+    """An out-of-range StageDrift (stale plan shape) is dropped — counted,
+    no replan, no wrap-around onto an arbitrary stage."""
+    wl, pf = gen_instance("E2", 8, 4, 3)
+    svc = ReplanService([(wl, pf)])
+    before = svc.fleet_digest()
+    published = svc.tick([StageDrift(0, 50, 3.0)])
+    assert published == {}
+    assert svc.fleet_digest() == before
+    assert svc.metrics.dropped_events == 1
+
+
+def test_platform_names_stay_bounded():
+    """Repeated degradation / pod failure appends each suffix at most once —
+    names cannot accrete over a long trace — and the name never feeds the
+    signature, so dedup is unaffected."""
+    wl, pf = gen_instance("E2", 8, 6, 3)
+    d = pf.degrade(0, 2.0).degrade(1, 2.0).degrade(0, 1.5)
+    assert d.name.count("-degraded") == 1
+    f = d.without(0).without(1).without(2)
+    assert f.name.count("-failed") == 1
+    assert f.name.count("-degraded") == 1
+    renamed = Platform(pf.s, pf.b, name="something-else")
+    assert signature(wl, renamed).digest == signature(wl, pf).digest
 
 
 # ---------------------------------------------------------------------------

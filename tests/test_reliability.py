@@ -1,0 +1,202 @@
+"""Reliability layer: failure samplers, greedy replication, -rel solvers,
+tri-criteria planning, and the R experiment families.
+
+The consensus model of the sequel paper (arXiv 0711.1231): interval j runs
+replicated on a disjoint processor set, every replica processes every data
+set, so period/latency are charged at the slowest replica and the interval
+fails only when ALL replicas fail — R = prod_j (1 - prod_{u in g_j} f_u).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import (Objective, ReplicatedMapping, evaluate_batch,
+                        evaluate_tri, latency, pareto_front_tri, period,
+                        plan_pareto, plan_pareto_tri, reliability,
+                        replicate_greedy, sample_failures, solve)
+from repro.sim import RELIABILITY_FAMILIES
+from repro.sim.generators import gen_instance
+
+SEED = 1234
+
+
+def _instance(exp="R1", n=8, p=6, seed=SEED):
+    return gen_instance(exp, n, p, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# Failure samplers
+# ---------------------------------------------------------------------------
+
+def test_sample_failures_deterministic_and_bounded():
+    for kind in ("uniform", "bimodal", "loguniform"):
+        a = sample_failures(16, kind=kind, seed=3)
+        b = sample_failures(16, kind=kind, seed=3)
+        np.testing.assert_array_equal(a, b)
+        assert a.shape == (16,)
+        assert np.all(a >= 0.0) and np.all(a < 1.0)
+    with pytest.raises(ValueError):
+        sample_failures(4, kind="nope", seed=0)
+
+
+def test_r_families_share_workload_streams():
+    """R1 draws failure probabilities LAST: its workload and speeds are
+    byte-identical to E2's at the same (n, p, seed) — reliability columns can
+    be compared against bi-criteria results on literally the same instances."""
+    wl_r, pf_r = _instance("R1")
+    wl_e, pf_e = _instance("E2")
+    np.testing.assert_array_equal(wl_r.w, wl_e.w)
+    np.testing.assert_array_equal(wl_r.delta, wl_e.delta)
+    np.testing.assert_array_equal(pf_r.s, pf_e.s)
+    assert pf_e.fail is None
+    assert pf_r.fail is not None and np.all(pf_r.fail > 0)
+    for exp in RELIABILITY_FAMILIES:
+        _, pf = _instance(exp)
+        assert pf.fail is not None
+
+
+# ---------------------------------------------------------------------------
+# Greedy replication
+# ---------------------------------------------------------------------------
+
+def _base_plan(wl, pf):
+    return solve("H5", wl, pf, Objective("period"))
+
+
+def test_replicate_greedy_valid_and_improves():
+    wl, pf = _instance()
+    base = _base_plan(wl, pf).mapping
+    rm = replicate_greedy(wl, pf, base)
+    rm.validate(wl.n, pf.p)
+    assert reliability(wl, pf, rm) >= reliability(wl, pf, base)
+    assert rm.intervals == tuple(base.intervals)
+    assert rm.alloc == tuple(base.alloc)   # leaders are the base processors
+
+
+def test_replicate_greedy_respects_period_bound():
+    wl, pf = _instance()
+    base = _base_plan(wl, pf).mapping
+    bound = period(wl, pf, base) * 1.05
+    rm = replicate_greedy(wl, pf, base, period_bound=bound)
+    assert period(wl, pf, rm) <= bound * (1 + 1e-12)
+    assert reliability(wl, pf, rm) >= reliability(wl, pf, base)
+
+
+def test_replicate_greedy_stops_at_target():
+    wl, pf = _instance()
+    base = _base_plan(wl, pf).mapping
+    full = replicate_greedy(wl, pf, base)
+    target = 0.5 * (reliability(wl, pf, base) + reliability(wl, pf, full))
+    rm = replicate_greedy(wl, pf, base, target=target)
+    assert reliability(wl, pf, rm) >= target - 1e-12
+    assert (sum(len(g) for g in rm.groups)
+            <= sum(len(g) for g in full.groups))
+
+
+def test_replicate_greedy_no_failures_is_identity():
+    wl, pf = _instance("E2")
+    assert pf.fail is None
+    base = _base_plan(wl, pf).mapping
+    rm = replicate_greedy(wl, pf, base)
+    assert all(len(g) == 1 for g in rm.groups)
+    assert period(wl, pf, rm) == period(wl, pf, base)
+    assert latency(wl, pf, rm) == latency(wl, pf, base)
+
+
+# ---------------------------------------------------------------------------
+# -rel solvers and the tri-criteria portfolio
+# ---------------------------------------------------------------------------
+
+def test_rel_solver_degenerates_to_plain_without_failures():
+    """On a failure-free platform H1-rel IS H1: same mapping, same metrics,
+    bit for bit."""
+    wl, pf = _instance("E2")
+    from repro.core import min_period_exhaustive
+    bound = 2.0 * min_period_exhaustive(wl, pf).period
+    plain = solve("H1", wl, pf, Objective("latency", bound=bound))
+    rel = solve("H1-rel", wl, pf, Objective("latency", bound=bound))
+    assert rel.feasible and plain.feasible
+    assert rel.mapping == plain.mapping
+    assert rel.period == plain.period
+    assert rel.latency == plain.latency
+
+
+def test_rel_solver_meets_bound_and_replicates():
+    wl, pf = _instance("R2", n=8, p=8)
+    from repro.core import min_period_exhaustive
+    bound = 2.0 * min_period_exhaustive(wl, pf).period
+    cand = solve("H1-rel", wl, pf, Objective("latency", bound=bound))
+    assert cand.feasible
+    assert cand.period <= bound * (1 + 1e-9)
+    assert cand.reliability is not None
+
+
+def test_plan_pareto_tri_front_nondominated():
+    wl, pf = _instance("R1", n=8, p=6)
+    report = plan_pareto_tri(wl, pf, k=6)
+    assert report.plan is not None
+    front = report.pareto
+    assert front and all(len(pt) == 3 for pt in front)
+    for a in front:
+        for b in front:
+            if a is b:
+                continue
+            assert not (b[0] <= a[0] * (1 + 1e-12)
+                        and b[1] <= a[1] * (1 + 1e-12)
+                        and b[2] >= a[2] * (1 - 1e-12)
+                        and (b[0] < a[0] or b[1] < a[1] or b[2] > a[2]))
+
+
+def test_plan_pareto_tri_floor_prefers_reliable_plans():
+    """With a reliability floor, the chosen plan clears it when any candidate
+    can; and the knee never picks something less reliable than what the
+    bi-criteria portfolio would have shipped."""
+    wl, pf = _instance("R2", n=8, p=8)
+    tri = plan_pareto_tri(wl, pf, reliability_floor=0.95)
+    rm = (ReplicatedMapping(tri.plan.mapping.intervals, tri.plan.groups)
+          if tri.plan.groups is not None else tri.plan.mapping)
+    tri_rel = reliability(wl, pf, rm)
+    best = max(pt[2] for pt in tri.pareto)
+    if best >= 0.95:
+        assert tri_rel >= 0.95 - 1e-9
+    bi = plan_pareto(wl, pf)
+    assert tri_rel >= reliability(wl, pf, bi.plan.mapping) - 1e-12
+
+
+def test_pareto_front_tri_hand_case():
+    pts = [
+        (1.0, 9.0, 0.90),   # fast, short, fragile       -> kept
+        (1.0, 9.0, 0.99),   # same but more reliable     -> dominates above
+        (2.0, 8.0, 0.95),   # slower period, better lat  -> kept
+        (3.0, 9.5, 0.90),   # dominated by all           -> dropped
+        (0.5, 20.0, 0.50),  # fastest period             -> kept
+    ]
+    front = pareto_front_tri(pts)
+    assert (1.0, 9.0, 0.99) in front
+    assert (1.0, 9.0, 0.90) not in front
+    assert (3.0, 9.5, 0.90) not in front
+    assert (2.0, 8.0, 0.95) in front
+    assert (0.5, 20.0, 0.50) in front
+
+
+# ---------------------------------------------------------------------------
+# Vectorized reliability column
+# ---------------------------------------------------------------------------
+
+def test_evaluate_batch_reliability_matches_scalar():
+    wl, pf = _instance("R3", n=8, p=8)
+    base = _base_plan(wl, pf).mapping
+    rm = replicate_greedy(wl, pf, base)
+    mappings = [base, rm, base]
+    out = evaluate_batch(wl, pf, mappings, with_reliability=True)
+    assert out.shape == (3, 3)
+    for row, mp in zip(out, mappings):
+        per, lat, rel = evaluate_tri(wl, pf, mp)
+        assert row[0] == per and row[1] == lat and row[2] == rel
+
+
+def test_evaluate_batch_reliability_ones_without_failures():
+    wl, pf = _instance("E2")
+    base = _base_plan(wl, pf).mapping
+    out = evaluate_batch(wl, pf, [base, base], with_reliability=True)
+    np.testing.assert_array_equal(out[:, 2], [1.0, 1.0])
