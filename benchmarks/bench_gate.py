@@ -17,7 +17,10 @@ string; this gate turns those into hard CI failures:
      it must stay within the O(log n) budget they also record.
   5. **Fleet service floors** — the ``fleet_replan_*`` rows (burst-trace
      replay through the replanning service) must clear a dedup hit-rate
-     floor and a replans/sec floor on the standard trace.
+     floor and a replans/sec floor on the standard trace; the
+     ``fleet_recovery_*`` rows must show bit-identical crash-restart
+     recovery (digest match, zero invalid publishes, zero quarantines on a
+     clean trace) with WAL replay bounded by the snapshot cadence.
   6. **Cross-run regression** (optional ``--baseline``) — when a baseline
      BENCH_planner.json of the SAME ``_meta.mode`` is given, warm fused
      rows must not regress more than ``--tolerance`` (default 1.6x, absorbing
@@ -53,6 +56,8 @@ REQUIRED_PREFIXES = (
     "fleet_replan_churn",
     "fleet_chaos_robustness",
     "fleet_chaos_recovery",
+    "fleet_recovery_restart",
+    "fleet_recovery_digest",
     "tri_criteria_",
 )
 
@@ -73,6 +78,13 @@ FLEET_REPLANS_PER_SEC_FLOOR = 200.0
 # standard trace (measured max 18 — recovery waits on flapped capacity
 # returning, so the bound is about the repair pass firing, not its speed)
 FLEET_MAX_RECOVERY_TICKS = 25
+
+# crash-restart durability bounds: the restored digest must match the
+# uninterrupted run exactly (bit-identical recovery is a correctness
+# contract), a clean trace must quarantine nothing, the WAL replay length is
+# capped by the snapshot cadence, and the total restore wall time gets a
+# generous runner-independent ceiling (measured ~0.02s quick / ~0.1s full)
+FLEET_MAX_RESTORE_SECONDS = 10.0
 
 # tri-criteria knee: never choose a LESS reliable plan than the bi-criteria
 # portfolio on the same instance (tiny negative tolerance for float noise)
@@ -150,6 +162,33 @@ def check(bench: dict, baseline: dict = None, tolerance: float = 1.6) -> list:
                              f"{FLEET_MAX_RECOVERY_TICKS} — reliability-floor "
                              "repair not recovering")
 
+    # 5d. crash-restart durability: bit-identical recovery, bounded replay
+    for k, v in rows.items():
+        if k.startswith("fleet_recovery_digest"):
+            if not v.get("digest_match"):
+                _fail(fails, f"{k}: restored fleet digest does not match the "
+                             "uninterrupted run — journal replay is not "
+                             "bit-identical")
+            if v.get("invalid_published") != 0:
+                _fail(fails, f"{k}: invalid_published="
+                             f"{v.get('invalid_published')!r} across the "
+                             "crash/restart run (must be 0)")
+            if v.get("quarantined_problems") != 0:
+                _fail(fails, f"{k}: quarantined_problems="
+                             f"{v.get('quarantined_problems')!r} on a clean "
+                             "trace (poison quarantine misfiring)")
+        if k.startswith("fleet_recovery_restart"):
+            replayed = v.get("max_replayed_ticks")
+            cadence = v.get("snapshot_every")
+            if replayed is None or cadence is None or replayed > cadence:
+                _fail(fails, f"{k}: max_replayed_ticks={replayed!r} exceeds "
+                             f"snapshot cadence {cadence!r} — WAL compaction "
+                             "or snapshot cadence broken")
+            wall = v.get("total_restore_wall_s")
+            if wall is None or wall > FLEET_MAX_RESTORE_SECONDS:
+                _fail(fails, f"{k}: total_restore_wall_s={wall!r} exceeds "
+                             f"{FLEET_MAX_RESTORE_SECONDS}s bound")
+
     # 5c. tri-criteria knee must not lose reliability vs the bi-criteria pick
     for k, v in rows.items():
         if k.startswith("tri_criteria_") and "min_reliability_gain" in v:
@@ -201,6 +240,8 @@ def main() -> int:
                                     "cache_speedup", "vs_numpy",
                                     "dedup_hit_rate", "replans_per_sec",
                                     "invalid_published", "max_recovery_ticks",
+                                    "digest_match", "max_replayed_ticks",
+                                    "quarantined_problems",
                                     "min_reliability_gain")
                   if f in v}
         if extras:

@@ -18,13 +18,21 @@ counters land as ``fleet_chaos_*`` rows.  The chaos run deliberately leaves
 gated numbers (zero invalid published plans, bounded floor recovery) must be
 deterministic.  The deadline path is covered by tests/test_fleet.py instead.
 
+With ``--recovery`` the standard chaos trace is run through
+:func:`repro.fleet.crash_restart_run`: the controller is journaled
+(write-ahead log + snapshots), killed mid-tick at two seeded ticks, and
+restarted from its journal each time.  The ``fleet_recovery_*`` rows record
+the restore wall time, the WAL replay length, and — the gated contract —
+whether the survivor's ``fleet_digest()`` is bit-identical to an
+uninterrupted run with zero invalid published ticks and zero quarantines.
+
 Unlike ``planner_bench.py`` (which regenerates BENCH_planner.json wholesale),
 this script MERGES its rows into the existing file so the two benchmarks can
 run independently; ``benchmarks/bench_gate.py`` requires the rows and gates
 the dedup and throughput floors.
 
     PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--chaos]
-                                                    [--backend B]
+                                                    [--recovery] [--backend B]
 """
 
 from __future__ import annotations
@@ -33,14 +41,16 @@ import argparse
 import json
 import pathlib
 import sys
+import tempfile
 
 REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(REPO_ROOT / "src"))
 BENCH_JSON = REPO_ROOT / "BENCH_planner.json"
 
 from repro.core import sample_failures  # noqa: E402
-from repro.fleet import (ChaosSpec, ReplanService, gen_burst_trace,  # noqa: E402
-                         inject_chaos, make_fleet)
+from repro.fleet import (ChaosSpec, Journal, ReplanService,  # noqa: E402
+                         crash_restart_run, gen_burst_trace, inject_chaos,
+                         make_fleet)
 
 # The standard trace: every number fixed so the measured dedup hit-rate and
 # throughput are comparable across PRs (bench_gate floors assume this shape).
@@ -55,6 +65,10 @@ QUICK = dict(n_groups=6, replicas=8, n=8, p=4, fleet_seed=2007,
 # below-floor time and the recovery latencies the gate bounds (measured 428
 # instance-ticks below / 19 recoveries / max 18 ticks on this trace).
 CHAOS = dict(chaos_seed=77, fail_seed=5, reliability_floor=0.98)
+# The recovery run crashes the controller at 1/3 and 2/3 of the trace (one
+# crash lands mid-snapshot-interval, one right after a cadence snapshot) and
+# snapshots every 8 ticks — so the gated max WAL replay length is <= 8.
+RECOVERY = dict(snapshot_every=8, crash_fracs=(1 / 3, 2 / 3))
 
 
 def _with_failures(pairs, seed: int) -> list:
@@ -104,6 +118,52 @@ def run_chaos(quick: bool = False, backend: str = "numpy") -> list:
     return metrics.chaos_rows(extra=extra)
 
 
+def run_recovery(quick: bool = False, backend: str = "numpy") -> list:
+    cfg = QUICK if quick else STANDARD
+    pairs, groups = make_fleet(cfg["n_groups"], cfg["replicas"], cfg["n"],
+                               cfg["p"], seed=cfg["fleet_seed"])
+    pairs = _with_failures(pairs, CHAOS["fail_seed"])
+    trace = gen_burst_trace(groups, cfg["num_ticks"], seed=cfg["trace_seed"],
+                            n_stages=cfg["n"], initial_pods=cfg["p"],
+                            burst_prob=cfg["burst_prob"])
+    trace = inject_chaos(trace, groups, ChaosSpec(),
+                         seed=CHAOS["chaos_seed"], initial_pods=cfg["p"])
+    svc_kwargs = dict(backend=backend,
+                      reliability_floor=CHAOS["reliability_floor"])
+    ref = ReplanService(pairs, **svc_kwargs)
+    ref.run_trace(trace)
+    crash_ticks = sorted({max(1, int(cfg["num_ticks"] * f))
+                          for f in RECOVERY["crash_fracs"]})
+    with tempfile.TemporaryDirectory() as d:
+        journal = Journal(d, snapshot_every=RECOVERY["snapshot_every"],
+                          fsync=False)
+        svc, restarts = crash_restart_run(pairs, trace, journal,
+                                          crash_ticks=crash_ticks,
+                                          **svc_kwargs)
+    match = svc.fleet_digest() == ref.fleet_digest()
+    replayed = max(r["replayed_ticks"] for r in restarts)
+    wall = sum(r["restore_wall"] for r in restarts)
+    shared = {"backend": backend, "fleet_size": len(pairs),
+              "crash_ticks": crash_ticks,
+              "snapshot_every": RECOVERY["snapshot_every"]}
+    return [
+        ("fleet_recovery_restart", wall * 1e6 / len(restarts),
+         f"{len(restarts)} crash/restart cycles, max {replayed} WAL ticks "
+         f"replayed, {wall:.3f}s total restore wall",
+         dict(shared, restarts=len(restarts), max_replayed_ticks=replayed,
+              total_restore_wall_s=wall)),
+        ("fleet_recovery_digest", None,
+         f"restored fleet digest "
+         f"{'matches' if match else 'MISMATCHES'} the uninterrupted run "
+         f"({svc.metrics.invalid_published} invalid published, "
+         f"{svc.metrics.quarantined_problems} quarantined)",
+         dict(shared, digest_match=bool(match), digest=svc.fleet_digest(),
+              ref_digest=ref.fleet_digest(), ticks=svc.metrics.ticks,
+              invalid_published=svc.metrics.invalid_published,
+              quarantined_problems=svc.metrics.quarantined_problems)),
+    ]
+
+
 def merge_bench_json(rows, path: pathlib.Path = BENCH_JSON,
                      mode: str = "full") -> None:
     """Merge rows into the existing BENCH json (planner_bench owns the file
@@ -125,9 +185,13 @@ def main() -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="run the standard trace through fault injection and "
                          "emit fleet_chaos_* robustness rows instead")
+    ap.add_argument("--recovery", action="store_true",
+                    help="crash/restart the journaled controller mid-trace "
+                         "and emit fleet_recovery_* durability rows instead")
     ap.add_argument("--backend", default="numpy")
     args = ap.parse_args()
-    runner = run_chaos if args.chaos else run
+    runner = (run_recovery if args.recovery
+              else run_chaos if args.chaos else run)
     rows = runner(quick=args.quick, backend=args.backend)
     for name, us, derived, _ in rows:
         print(f"{name},{'' if us is None else f'{us:.1f}'},{derived}")

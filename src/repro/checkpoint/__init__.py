@@ -1,3 +1,5 @@
-from .checkpointer import Checkpointer, CheckpointManager
+from .checkpointer import (Checkpointer, CheckpointManager,
+                           atomic_write_bytes, atomic_write_json)
 
-__all__ = ["Checkpointer", "CheckpointManager"]
+__all__ = ["Checkpointer", "CheckpointManager",
+           "atomic_write_bytes", "atomic_write_json"]

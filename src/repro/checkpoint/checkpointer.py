@@ -16,16 +16,43 @@ blocks on the previous save (one outstanding write, Orbax-style).
 from __future__ import annotations
 
 import json
+import os
 import pathlib
 import shutil
 import threading
 from typing import Any, Optional
 
-import jax
 import numpy as np
+
+# jax is imported lazily inside the pytree save/restore paths: the atomic
+# write helpers above them are also the commit primitive for the (jax-free)
+# fleet journal, which must stay importable without pulling in jax.
+
+
+def atomic_write_bytes(path, data: bytes, fsync: bool = True) -> None:
+    """Crash-safe file write: write to a same-directory temp file, fsync it,
+    then atomically rename over the destination — a reader never observes a
+    torn file, only the old bytes or the new bytes.  This is the commit
+    primitive under both the training checkpoints here and the fleet
+    replanning service's snapshots (:mod:`repro.fleet.journal`)."""
+    path = pathlib.Path(path)
+    tmp = path.with_name(path.name + ".tmp")
+    with open(tmp, "wb") as fh:
+        fh.write(data)
+        if fsync:
+            fh.flush()
+            os.fsync(fh.fileno())
+    os.replace(tmp, path)
+
+
+def atomic_write_json(path, obj, fsync: bool = True) -> None:
+    """``atomic_write_bytes`` for a JSON-serializable object."""
+    atomic_write_bytes(path, json.dumps(obj).encode(), fsync=fsync)
 
 
 def _flatten(tree) -> tuple:
+    import jax
+
     leaves, treedef = jax.tree.flatten(tree)
     return leaves, treedef
 
@@ -60,8 +87,8 @@ class Checkpointer:
             "dtypes": [str(a.dtype) for a in arrays],
             "extras": extras or {},
         }
-        (tmp / "manifest.json").write_text(json.dumps(manifest))
-        (tmp / "_COMMITTED").write_text("ok")
+        atomic_write_json(tmp / "manifest.json", manifest)
+        atomic_write_bytes(tmp / "_COMMITTED", b"ok")
         if path.exists():
             shutil.rmtree(path)
         tmp.rename(path)
@@ -78,6 +105,8 @@ class Checkpointer:
         if len(like_leaves) != len(leaves):
             raise ValueError(
                 f"checkpoint has {len(leaves)} leaves, expected {len(like_leaves)}")
+        import jax
+
         restored = []
         for i, (got, want) in enumerate(zip(leaves, like_leaves)):
             arr = np.asarray(got)
@@ -122,6 +151,8 @@ class CheckpointManager:
             self._pending = None
 
     def save(self, step: int, tree: Any, extras: Optional[dict] = None) -> None:
+        import jax
+
         self.wait()  # at most one outstanding async write
         # Materialize device arrays on the calling thread (cheap: host copies)
         host_tree = jax.tree.map(np.asarray, tree)

@@ -23,22 +23,36 @@ Modules:
     dedup hit-rate, plan churn, graceful-degradation counters (the BENCH
     surface)
   - :mod:`repro.fleet.chaos`      — fault injection over telemetry traces:
-    correlated pod-failure storms, flapping pods, event drop/dup/reorder
+    correlated pod-failure storms, flapping pods, event drop/dup/reorder,
+    and controller kill/restart-from-journal
+  - :mod:`repro.fleet.journal`    — write-ahead event log + CRC-checked
+    atomic snapshots; the crash-recovery substrate under
+    ``ReplanService.restore``
+  - :mod:`repro.fleet.supervision` — the controller/worker split: supervised
+    solve workers with heartbeats, timeouts, backoff retries, and restarts
 """
 
 from .telemetry import (PodCountChange, PodFailure, StageDrift, StageTimings,
-                        Trace, gen_burst_trace, make_fleet)
+                        Trace, event_from_wire, event_to_wire,
+                        gen_burst_trace, make_fleet)
 from .signatures import (Signature, canonicalize, remap_alloc, signature,
                          span_bucket)
+from .journal import Journal, JournalError
+from .supervision import (InlineWorker, Supervisor, ThreadWorker,
+                          WorkerFailed, WorkerTimeout)
 from .service import InstanceState, ReplanService
 from .metrics import FleetMetrics
-from .chaos import ChaosSpec, inject_chaos
+from .chaos import ChaosSpec, SimulatedCrash, crash_restart_run, inject_chaos
 
 __all__ = [
     "StageTimings", "StageDrift", "PodCountChange", "PodFailure",
     "Trace", "gen_burst_trace", "make_fleet",
+    "event_to_wire", "event_from_wire",
     "Signature", "signature", "canonicalize", "remap_alloc", "span_bucket",
+    "Journal", "JournalError",
+    "Supervisor", "InlineWorker", "ThreadWorker",
+    "WorkerFailed", "WorkerTimeout",
     "ReplanService", "InstanceState",
     "FleetMetrics",
-    "ChaosSpec", "inject_chaos",
+    "ChaosSpec", "inject_chaos", "SimulatedCrash", "crash_restart_run",
 ]

@@ -50,12 +50,23 @@ class FleetMetrics:
     #                            ^ ticks from dipping below the floor to recovery
     invalid_published: int = 0   # instance-ticks ending with an invalid plan
     #                            (must stay 0: the keep-last-valid guarantee)
+    # Durability / supervision counters (PR-8; zero on the clean path):
+    quarantined_requests: int = 0  # requests answered by a quarantined
+    #                              problem's last valid plan (not retried)
+    quarantine_strikes: int = 0    # batched+scalar double-failure rounds
+    quarantined_problems: int = 0  # canonical problems quarantined
+    solve_retries: int = 0         # supervisor retry attempts (with backoff)
+    worker_restarts: int = 0       # workers replaced (timeout / stale heartbeat)
+    cache_evictions: int = 0       # plan-cache LRU evictions (cap pressure)
 
     def record_tick(self, *, requests: int, solves: int, warm_hits: int,
                     events: int, wall: float, churns,
                     deferred: int = 0, fallback_solves: int = 0,
                     dropped_events: int = 0, below_floor: int = 0,
-                    recoveries=(), invalid_published: int = 0) -> None:
+                    recoveries=(), invalid_published: int = 0,
+                    quarantined_requests: int = 0, quarantine_strikes: int = 0,
+                    quarantined_problems: int = 0, solve_retries: int = 0,
+                    worker_restarts: int = 0, cache_evictions: int = 0) -> None:
         self.ticks += 1
         self.requests += requests
         self.solves += solves
@@ -64,7 +75,7 @@ class FleetMetrics:
         self.solve_wall += wall
         self.latencies.extend([wall] * requests)
         self.churns.extend(float(c) for c in churns)
-        if deferred or fallback_solves:
+        if deferred or fallback_solves or quarantined_requests:
             self.degraded_ticks += 1
         self.deferred += deferred
         self.fallback_solves += fallback_solves
@@ -72,6 +83,12 @@ class FleetMetrics:
         self.below_floor_ticks += below_floor
         self.recovery_ticks.extend(int(r) for r in recoveries)
         self.invalid_published += invalid_published
+        self.quarantined_requests += quarantined_requests
+        self.quarantine_strikes += quarantine_strikes
+        self.quarantined_problems += quarantined_problems
+        self.solve_retries += solve_retries
+        self.worker_restarts += worker_restarts
+        self.cache_evictions += cache_evictions
 
     # -- aggregates -----------------------------------------------------------
     def dedup_hit_rate(self) -> float:
@@ -123,6 +140,12 @@ class FleetMetrics:
             "mean_recovery_ticks": (float(np.mean(self.recovery_ticks))
                                     if self.recovery_ticks else 0.0),
             "invalid_published": self.invalid_published,
+            "quarantined_requests": self.quarantined_requests,
+            "quarantine_strikes": self.quarantine_strikes,
+            "quarantined_problems": self.quarantined_problems,
+            "solve_retries": self.solve_retries,
+            "worker_restarts": self.worker_restarts,
+            "cache_evictions": self.cache_evictions,
         }
 
     def bench_rows(self, suffix: str = "", extra: Optional[dict] = None) -> list:

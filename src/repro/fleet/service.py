@@ -34,23 +34,45 @@ Graceful degradation (the chaos-harness contract, tests/test_fleet.py +
     *invalid* (it addresses pods that no longer exist) are never deferred —
     their groups solve regardless of the budget, which is what guarantees
     zero ticks ending with an invalid published plan.
-  - scalar fallback — when a batched group solve raises, each member is
-    re-solved with the scalar reference portfolio on its canonical problem
+  - supervised workers — each solve group is dispatched to a worker actor
+    (:mod:`repro.fleet.supervision`): per-group timeout, exponential-backoff
+    retries, heartbeat-based worker restarts.  A group the workers cannot
+    solve is re-solved per member with the scalar reference portfolio
     (bit-identical by the equivalence contract), so one poisoned batch
     degrades throughput, not correctness.
+  - poison quarantine — a canonical problem that fails the batched solve
+    *and* the scalar fallback ``quarantine_after`` times is quarantined: its
+    subscribers keep their last valid plan (counted per tick in
+    ``FleetMetrics.quarantined_requests``) and the problem is never retried
+    until drift changes its signature — a poison problem costs a metric, not
+    a wedged tick loop.
   - ``reliability_floor`` — when platforms carry failure probabilities, any
     instance whose plan's reliability drops below the floor gets a greedy
     replication pass (:func:`repro.core.replication.replicate_stage_plan`);
     time spent below the floor and recovery latency are counted in
     :class:`FleetMetrics` and floor-gated in ``bench_gate.py``.
+
+Durability (the crash-safety contract, tests/test_fleet_recovery.py +
+``fleet_bench.py --recovery``): pass ``journal=`` (a directory or a
+:class:`repro.fleet.journal.Journal`) and the service write-ahead-logs every
+tick's events *before* mutating state and snapshots its full state (the
+instances with their effective platforms, plans, monitors, the plan cache in
+LRU order, ``_pending``, ``_below_since``, quarantine state, and metrics —
+RNG-free by construction) every ``Journal.snapshot_every`` ticks with
+CRC-checked, atomic-rename writes.  :meth:`ReplanService.restore` rebuilds
+the controller from the newest snapshot and replays the WAL tail through the
+ordinary ``tick()`` path; determinism of replay makes the restored
+``fleet_digest()`` bit-identical to an uninterrupted run.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
+import pathlib
 import time
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 import numpy as np
 
@@ -60,10 +82,25 @@ from ..core.batched import ProblemBatch, batched_min_period
 from ..core.planner import _realize
 from ..core.replication import replicate_stage_plan
 from ..pipeline.replan import StragglerMonitor, elastic_platform
+from .journal import (Journal, JournalError, decode_monitor, decode_plan,
+                      decode_platform, decode_result, decode_workload,
+                      encode_monitor, encode_plan, encode_platform,
+                      encode_result, encode_workload)
 from .metrics import FleetMetrics
 from .signatures import canonicalize, remap_alloc, signature
+from .supervision import Supervisor
 from .telemetry import (PodCountChange, PodFailure, StageDrift, StageTimings,
-                        Trace)
+                        Trace, event_from_wire)
+
+#: Engines ``batched_min_period`` accepts; validated up front so a typo fails
+#: at construction, not deep inside the first tick's solve.
+KNOWN_BACKENDS = ("numpy", "jax", "pallas", "fused")
+
+#: Default LRU bound on the cross-tick plan cache.  Far above the distinct
+#: canonical problems of the standard traces (so the default-config hit-rate
+#: is unchanged — asserted in tests), but a hard ceiling on controller
+#: memory over unbounded uptime.
+DEFAULT_PLAN_CACHE_CAP = 4096
 
 
 @dataclasses.dataclass
@@ -76,6 +113,48 @@ class InstanceState:
     platform: Platform
     plan: Optional[StagePlan] = None
     monitor: Optional[StragglerMonitor] = None
+
+
+class _PlanCache:
+    """Bounded LRU over canonical digest → ``HeuristicResult``.
+
+    Eviction can never change a result — signatures are exact bytes, so a
+    re-solve after eviction is bit-identical to the evicted entry; the cap
+    only trades memory for occasional re-solves (``evictions`` counts them,
+    surfaced as ``FleetMetrics.cache_evictions``)."""
+
+    def __init__(self, cap: Optional[int]):
+        self.cap = cap
+        self.evictions = 0
+        self._d: collections.OrderedDict = collections.OrderedDict()
+
+    def __contains__(self, digest) -> bool:
+        return digest in self._d
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def lookup(self, digest):
+        """Get-and-touch: a hit refreshes recency."""
+        if digest not in self._d:
+            return None
+        self._d.move_to_end(digest)
+        return self._d[digest]
+
+    def put(self, digest, res) -> None:
+        self._d[digest] = res
+        self._d.move_to_end(digest)
+        while self.cap is not None and len(self._d) > self.cap:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def clear(self) -> None:
+        self._d.clear()
+
+    def items(self):
+        """(digest, result) pairs oldest-first — serialized in this order so
+        a restored cache carries the exact LRU recency order."""
+        return self._d.items()
 
 
 class ReplanService:
@@ -92,29 +171,95 @@ class ReplanService:
     plan reliability, needs platforms with failure probabilities) enable the
     graceful-degradation behaviors documented in the module docstring; both
     default to off, keeping the clean path byte-identical.
+
+    ``plan_cache_cap`` bounds the cross-tick plan cache (LRU; ``None`` means
+    unbounded).  ``journal`` (a directory path or :class:`Journal`) enables
+    the write-ahead log + snapshot durability layer.  ``supervisor``
+    overrides the default in-process supervised worker pool (e.g. to use
+    :class:`~repro.fleet.supervision.ThreadWorker` actors with a solve
+    timeout); ``quarantine_after`` is the strike count at which a poison
+    problem is quarantined.
     """
 
     def __init__(self, instances: Sequence, backend: str = "numpy",
                  warm_start: bool = True,
                  solve_deadline: Optional[float] = None,
-                 reliability_floor: Optional[float] = None):
+                 reliability_floor: Optional[float] = None,
+                 plan_cache_cap: Optional[int] = DEFAULT_PLAN_CACHE_CAP,
+                 journal=None,
+                 supervisor: Optional[Supervisor] = None,
+                 quarantine_after: int = 2):
+        # Fail fast: every knob is validated here, with the error naming the
+        # knob — not three frames deep inside the first group solve.
+        if backend not in KNOWN_BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; known engines: "
+                             f"{', '.join(KNOWN_BACKENDS)}")
+        if solve_deadline is not None and solve_deadline < 0:
+            raise ValueError(f"solve_deadline must be >= 0 seconds, got "
+                             f"{solve_deadline}")
+        if reliability_floor is not None and \
+                not (0.0 <= reliability_floor <= 1.0):
+            raise ValueError(f"reliability_floor must be in [0, 1], got "
+                             f"{reliability_floor}")
+        if plan_cache_cap is not None and plan_cache_cap < 1:
+            raise ValueError(f"plan_cache_cap must be >= 1 or None, got "
+                             f"{plan_cache_cap}")
+        if quarantine_after < 1:
+            raise ValueError(f"quarantine_after must be >= 1, got "
+                             f"{quarantine_after}")
         self.backend = backend
         self.warm_start = warm_start
         self.solve_deadline = solve_deadline
         self.reliability_floor = reliability_floor
-        self.metrics = FleetMetrics()
+        self.plan_cache_cap = plan_cache_cap
+        self.quarantine_after = int(quarantine_after)
         self.states = [InstanceState(wl, pf) for wl, pf in instances]
-        self.plan_cache: dict = {}   # digest -> canonical HeuristicResult
-        self.tick_count = 0
-        self._pending: dict = {}     # deadline-deferred ids, retried next tick
-        self._dropped = 0            # stale events discarded this tick
-        self._below_since: dict = {} # iid -> tick it dipped below the floor
+        self._init_runtime(journal=journal, supervisor=supervisor)
         # Initial fleet-wide planning runs through the same dedup+batch path
         # but is not a *re*plan: it stays out of the metrics.  (No plan
         # exists yet, so nothing is deferrable: a deadline cannot leave an
         # instance unplanned.)
         self._replan(range(len(self.states)))
         self._repair_reliability(dict.fromkeys(range(len(self.states))))
+        self._sync_acct_baselines()
+        if self.journal is not None:
+            # Genesis snapshot: restore() is self-contained from the journal
+            # directory alone, even before the first cadence snapshot.
+            self._maybe_snapshot(force=True)
+
+    def _init_runtime(self, journal=None,
+                      supervisor: Optional[Supervisor] = None) -> None:
+        """Runtime state shared by ``__init__`` and snapshot restore."""
+        self.metrics = FleetMetrics()
+        self.plan_cache = _PlanCache(self.plan_cache_cap)
+        self.tick_count = 0
+        self._pending: dict = {}     # deadline-deferred ids, retried next tick
+        self._dropped = 0            # stale events discarded this tick
+        self._below_since: dict = {} # iid -> tick it dipped below the floor
+        self.quarantine_strikes: dict = {}   # digest -> failed-round count
+        self.quarantined: set = set()        # digests pinned to last valid plan
+        self.journal = (Journal(journal) if isinstance(journal,
+                                                       (str, pathlib.Path))
+                        else journal)
+        self.supervisor = supervisor if supervisor is not None else \
+            Supervisor(self._solve_group, max_attempts=2)
+        self.crash_hook: Optional[Callable] = None  # fault injection point
+        self.replayed_ticks = 0      # WAL records re-applied by restore()
+        self._replaying = False
+        self._last_tick_stats = (0, 0, 0, [], 0, 0, 0)
+        self._sync_acct_baselines()
+
+    def _sync_acct_baselines(self) -> None:
+        """Supervisor/cache counters are cumulative on their objects; the
+        per-tick metrics record deltas against these baselines."""
+        self._seen_retries = self.supervisor.stats.retries
+        self._seen_restarts = self.supervisor.stats.restarts
+        self._seen_evictions = self.plan_cache.evictions
+
+    def _solve_group(self, pb: ProblemBatch) -> list:
+        # Late-bound module global so test fault injection (monkeypatching
+        # ``service.batched_min_period``) reaches the workers too.
+        return batched_min_period(pb, self.backend)
 
     # -- event application ----------------------------------------------------
 
@@ -176,6 +321,16 @@ class ReplanService:
 
     # -- solve + publish ------------------------------------------------------
 
+    def _strike(self, digest: str) -> None:
+        """One failed batched+scalar round for this canonical problem; at
+        ``quarantine_after`` strikes the problem is quarantined."""
+        n = self.quarantine_strikes.get(digest, 0) + 1
+        self.quarantine_strikes[digest] = n
+        self._tick_strikes += 1
+        if n >= self.quarantine_after and digest not in self.quarantined:
+            self.quarantined.add(digest)
+            self._tick_quarantined += 1
+
     def _replan(self, ids) -> dict:
         """Dedup, batch-solve, and publish new plans for the given instance
         ids.  Returns {iid: StagePlan}; sets ``self._last_tick_stats``.
@@ -185,19 +340,25 @@ class ReplanService:
         subscribers keep their last valid plan and are retried next tick —
         EXCEPT problems with a subscriber whose plan is invalid or missing,
         which always solve (keep-last-VALID-plan, never keep-broken-plan).
-        A batched group solve that raises falls back to per-member scalar
-        solves of the same canonical problems (bit-identical results)."""
+        Group solves go through the supervised worker pool; a group the
+        workers give up on falls back to per-member scalar solves of the
+        same canonical problems (bit-identical results), and a member whose
+        scalar solve *also* raises is struck toward quarantine."""
         ids = list(ids)
         t0 = time.perf_counter()
         deadline = (None if self.solve_deadline is None
                     else t0 + self.solve_deadline)
+        self._tick_strikes = 0
+        self._tick_quarantined = 0
         sig_of = {i: signature(self.states[i].workload,
                                self.states[i].platform) for i in ids}
         warm_hits = sum(sig_of[i].digest in self.plan_cache for i in ids)
         need: dict = {}
         for i in ids:
             sig = sig_of[i]
-            if sig.digest not in self.plan_cache and sig.digest not in need:
+            if (sig.digest not in self.plan_cache
+                    and sig.digest not in need
+                    and sig.digest not in self.quarantined):
                 need[sig.digest] = (sig, self.states[i])
         must = {sig_of[i].digest for i in ids
                 if self.states[i].plan is None
@@ -207,6 +368,10 @@ class ReplanService:
             by_shape.setdefault(sig.shape, []).append((digest, st))
         fallback_solves = 0
         solved = 0
+        # Tick-local results: publishing reads from here first, so LRU
+        # eviction pressure can only cost cross-tick re-solves — it can never
+        # evict a result between its solve and its publish in the same tick.
+        fresh: dict = {}
         for (n, p, b), entries in by_shape.items():
             if deadline is not None and time.perf_counter() > deadline:
                 entries = [e for e in entries if e[0] in must]
@@ -219,21 +384,39 @@ class ReplanService:
                           for _, st in entries]),
                 b)
             try:
-                results = list(batched_min_period(pb, self.backend))
+                results = list(self.supervisor.solve(pb))
             except Exception:  # noqa: BLE001 — degrade, don't die mid-tick
-                results = [min_period_exhaustive(st.workload,
-                                                 canonicalize(st.platform)[0])
-                           for _, st in entries]
-                fallback_solves += len(entries)
+                for digest, st in entries:
+                    try:
+                        res = min_period_exhaustive(
+                            st.workload, canonicalize(st.platform)[0])
+                    except Exception:  # noqa: BLE001 — poison problem
+                        self._strike(digest)
+                        continue
+                    fresh[digest] = res
+                    self.plan_cache.put(digest, res)
+                    fallback_solves += 1
+                    solved += 1
+                continue
             for (digest, _), res in zip(entries, results):
-                self.plan_cache[digest] = res
+                fresh[digest] = res
+                self.plan_cache.put(digest, res)
             solved += len(entries)
         published, churns, deferred = {}, [], []
+        quarantined_requests = 0
         for i in ids:
             st = self.states[i]
-            res = self.plan_cache.get(sig_of[i].digest)
+            res = self.plan_cache.lookup(sig_of[i].digest)
             if res is None:
-                deferred.append(i)   # keep the last valid plan, retry next tick
+                res = fresh.get(sig_of[i].digest)
+            if res is None:
+                if sig_of[i].digest in self.quarantined:
+                    # Pinned to the last valid plan; NOT retried — the
+                    # problem re-enters the solve path only when drift
+                    # changes its signature.
+                    quarantined_requests += 1
+                else:
+                    deferred.append(i)   # keep last valid plan, retry next tick
                 continue
             _, perm = canonicalize(st.platform)
             mapping = Mapping(res.mapping.intervals,
@@ -246,7 +429,8 @@ class ReplanService:
             published[i] = plan
         self._pending.update(dict.fromkeys(deferred))
         self._last_tick_stats = (len(ids), solved, warm_hits, churns,
-                                 len(deferred), fallback_solves)
+                                 len(deferred), fallback_solves,
+                                 quarantined_requests)
         return published
 
     def _plan_reliability(self, st: InstanceState) -> float:
@@ -289,6 +473,14 @@ class ReplanService:
 
     def tick(self, events: Sequence) -> dict:
         """Process one tick's events; returns the republished plans."""
+        events = tuple(events)
+        if self.journal is not None and not self._replaying:
+            # Write-ahead: the tick's events hit stable storage before any
+            # state mutates, so a controller killed anywhere inside this
+            # method replays the tick from disk on restore.
+            self.journal.append(self.tick_count, events)
+            if self.crash_hook is not None:
+                self.crash_hook(self.tick_count)
         t0 = time.perf_counter()
         if not self.warm_start:
             self.plan_cache.clear()
@@ -302,9 +494,12 @@ class ReplanService:
                 dirty[ev.instance] = None
         published = self._replan(dirty.keys())
         below, recoveries = self._repair_reliability(published)
-        (requests, solves, warm_hits, churns,
-         deferred, fallback_solves) = self._last_tick_stats
+        (requests, solves, warm_hits, churns, deferred,
+         fallback_solves, quarantined_requests) = self._last_tick_stats
         invalid = sum(not _plan_valid(st) for st in self.states)
+        retries = self.supervisor.stats.retries - self._seen_retries
+        restarts = self.supervisor.stats.restarts - self._seen_restarts
+        evictions = self.plan_cache.evictions - self._seen_evictions
         self.metrics.record_tick(requests=requests, solves=solves,
                                  warm_hits=warm_hits, events=len(events),
                                  wall=time.perf_counter() - t0, churns=churns,
@@ -312,8 +507,16 @@ class ReplanService:
                                  fallback_solves=fallback_solves,
                                  dropped_events=self._dropped,
                                  below_floor=below, recoveries=recoveries,
-                                 invalid_published=invalid)
+                                 invalid_published=invalid,
+                                 quarantined_requests=quarantined_requests,
+                                 quarantine_strikes=self._tick_strikes,
+                                 quarantined_problems=self._tick_quarantined,
+                                 solve_retries=retries,
+                                 worker_restarts=restarts,
+                                 cache_evictions=evictions)
+        self._sync_acct_baselines()
         self.tick_count += 1
+        self._maybe_snapshot()
         return published
 
     def run_trace(self, trace: Trace) -> FleetMetrics:
@@ -322,6 +525,129 @@ class ReplanService:
         for events in trace.ticks:
             self.tick(events)
         return self.metrics
+
+    def resume_trace(self, trace: Trace) -> FleetMetrics:
+        """Continue a (restored) service through the tail of ``trace``: the
+        ticks it has not yet processed, ``trace.ticks[self.tick_count:]``.
+        Valid when this service has been driven by exactly this trace from
+        tick 0 — the crash/restart replay contract."""
+        for events in trace.ticks[self.tick_count:]:
+            self.tick(events)
+        return self.metrics
+
+    # -- durability -----------------------------------------------------------
+
+    def _maybe_snapshot(self, force: bool = False) -> None:
+        if self.journal is None:
+            return
+        if force or self.tick_count % self.journal.snapshot_every == 0:
+            self.journal.write_snapshot(self.tick_count, self._state_dict())
+
+    def _state_dict(self) -> dict:
+        """Full service state as JSON scalars — everything a future tick's
+        behavior depends on (the service is RNG-free, so this is exhaustive).
+        Exact float round-trip makes restore bit-identical."""
+        return {
+            "config": {
+                "backend": self.backend,
+                "warm_start": self.warm_start,
+                "solve_deadline": self.solve_deadline,
+                "reliability_floor": self.reliability_floor,
+                "plan_cache_cap": self.plan_cache_cap,
+                "quarantine_after": self.quarantine_after,
+                "snapshot_every": (None if self.journal is None
+                                   else self.journal.snapshot_every),
+            },
+            "tick_count": self.tick_count,
+            "instances": [{"workload": encode_workload(st.workload),
+                           "platform": encode_platform(st.platform),
+                           "plan": encode_plan(st.plan),
+                           "monitor": encode_monitor(st.monitor)}
+                          for st in self.states],
+            "plan_cache": [[digest, encode_result(res)]
+                           for digest, res in self.plan_cache.items()],
+            "cache_evictions": self.plan_cache.evictions,
+            "pending": list(self._pending),
+            "below_since": [[int(i), int(t)]
+                            for i, t in self._below_since.items()],
+            "quarantine_strikes": [[d, int(n)] for d, n
+                                   in self.quarantine_strikes.items()],
+            "quarantined": sorted(self.quarantined),
+            "metrics": dataclasses.asdict(self.metrics),
+        }
+
+    @classmethod
+    def _from_state(cls, state: dict, journal: Optional[Journal],
+                    supervisor: Optional[Supervisor]) -> "ReplanService":
+        cfg = state["config"]
+        svc = object.__new__(cls)
+        svc.backend = cfg["backend"]
+        svc.warm_start = cfg["warm_start"]
+        svc.solve_deadline = cfg["solve_deadline"]
+        svc.reliability_floor = cfg["reliability_floor"]
+        svc.plan_cache_cap = cfg["plan_cache_cap"]
+        svc.quarantine_after = cfg["quarantine_after"]
+        svc.states = [InstanceState(decode_workload(d["workload"]),
+                                    decode_platform(d["platform"]),
+                                    decode_plan(d["plan"]),
+                                    decode_monitor(d["monitor"]))
+                      for d in state["instances"]]
+        svc._init_runtime(journal=journal, supervisor=supervisor)
+        for digest, res in state["plan_cache"]:
+            svc.plan_cache.put(digest, decode_result(res))
+        svc.plan_cache.evictions = int(state["cache_evictions"])
+        svc.tick_count = int(state["tick_count"])
+        svc._pending = dict.fromkeys(int(i) for i in state["pending"])
+        svc._below_since = {int(i): int(t) for i, t in state["below_since"]}
+        svc.quarantine_strikes = {d: int(n)
+                                  for d, n in state["quarantine_strikes"]}
+        svc.quarantined = set(state["quarantined"])
+        svc.metrics = FleetMetrics(**state["metrics"])
+        svc._sync_acct_baselines()
+        return svc
+
+    @classmethod
+    def restore(cls, journal_or_dir, *, supervisor: Optional[Supervisor] = None,
+                strict: bool = False) -> "ReplanService":
+        """Rebuild a crashed controller from its journal directory.
+
+        Loads the newest CRC-valid snapshot, then re-applies the WAL tail
+        through the ordinary ``tick()`` path (suppressing re-journaling).
+        The restored service's ``fleet_digest()`` is bit-identical to an
+        uninterrupted run over the same ticks, it keeps journaling into the
+        same directory, and ``resume_trace`` continues exactly where the
+        crashed controller left off.  ``strict=True`` turns a torn WAL tail
+        (normal after a crash mid-append) into a :class:`JournalError`
+        instead of recovering to the last good record.
+        """
+        journal = (journal_or_dir if isinstance(journal_or_dir, Journal)
+                   else Journal(journal_or_dir))
+        snap = journal.latest_snapshot()
+        if snap is None:
+            raise JournalError(f"no valid snapshot in {journal.dir} — "
+                               "cannot restore")
+        snap_tick, state = snap
+        every = state["config"].get("snapshot_every")
+        if every:
+            journal.snapshot_every = int(every)
+        svc = cls._from_state(state, journal, supervisor)
+        records, _ = journal.read_wal(strict=strict)
+        expect = svc.tick_count
+        svc._replaying = True
+        try:
+            for rec in records:
+                if rec["tick"] < expect:
+                    continue   # pre-snapshot record not yet compacted away
+                if rec["tick"] != expect:
+                    raise JournalError(
+                        f"WAL gap: expected tick {expect}, found record for "
+                        f"tick {rec['tick']}")
+                svc.tick([event_from_wire(e) for e in rec["events"]])
+                expect += 1
+        finally:
+            svc._replaying = False
+        svc.replayed_ticks = expect - snap_tick
+        return svc
 
     # -- introspection --------------------------------------------------------
 

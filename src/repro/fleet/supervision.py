@@ -1,0 +1,210 @@
+"""Supervised solve workers: the fleet controller/worker split.
+
+The controller (:class:`~repro.fleet.service.ReplanService`) no longer calls
+the batched engine inline; each deduped solve group is dispatched to a
+**worker actor** through a :class:`Supervisor`.  The worker API is shaped for
+multi-host deployment — a worker owns its execution context, exposes a
+heartbeat, and can be killed and replaced without touching controller state —
+while the default implementation stays in-process and deterministic:
+
+  - :class:`InlineWorker` — synchronous in-process execution, the default.
+    No threads, no timeouts, bit-identical to calling the engine directly.
+  - :class:`ThreadWorker` — runs each solve on a dedicated worker thread so
+    the supervisor can enforce a per-group ``timeout`` (a hung solve raises
+    :class:`WorkerTimeout` on the controller side while the worker is
+    replaced underneath it).
+
+The supervisor dispatches round-robin over its pool, retries a failed group
+with **exponential backoff** (``backoff_base`` doubling up to
+``backoff_max``), and **restarts** workers that time out or whose heartbeat
+has gone stale.  After ``max_attempts`` failures it raises
+:class:`WorkerFailed` — at which point the service falls back to per-member
+scalar solves, and problems that fail *that* too are quarantined (see
+``ReplanService``).  On the clean path none of this machinery fires, so
+published plans remain bit-identical to the pre-supervision service
+(asserted in tests/test_fleet.py).
+"""
+
+from __future__ import annotations
+
+import concurrent.futures
+import time
+from typing import Callable, Optional
+
+
+class WorkerFailed(RuntimeError):
+    """A solve group failed on every attempt; the last cause is chained."""
+
+
+class WorkerTimeout(RuntimeError):
+    """A worker exceeded the per-group solve timeout (hung or wedged)."""
+
+
+class InlineWorker:
+    """Synchronous in-process worker — deterministic, zero overhead.
+
+    ``timeout`` cannot preempt a synchronous call, so it is ignored here;
+    use :class:`ThreadWorker` when a hung solve must not wedge the
+    controller.
+    """
+
+    def __init__(self, solve_fn: Callable, worker_id: int = 0):
+        self.solve_fn = solve_fn
+        self.worker_id = worker_id
+        self.solves = 0
+        self.heartbeat = time.monotonic()
+
+    def solve(self, batch, timeout: Optional[float] = None):
+        self.heartbeat = time.monotonic()
+        out = self.solve_fn(batch)
+        self.heartbeat = time.monotonic()
+        self.solves += 1
+        return out
+
+    def alive(self, heartbeat_timeout: Optional[float]) -> bool:
+        # A synchronous worker cannot be secretly wedged: if control returned
+        # to the supervisor, the worker is idle.
+        return True
+
+    def close(self) -> None:
+        pass
+
+
+class ThreadWorker:
+    """Worker actor on its own thread: per-group timeout + heartbeat.
+
+    The multi-host-shaped executor — ``solve`` submits to the worker's
+    single-thread executor and bounds the wait.  On timeout the controller
+    raises :class:`WorkerTimeout` and the supervisor replaces the worker;
+    the abandoned thread finishes (or leaks) in the background, which is the
+    in-process analogue of declaring a remote actor dead.
+    """
+
+    def __init__(self, solve_fn: Callable, worker_id: int = 0):
+        self.solve_fn = solve_fn
+        self.worker_id = worker_id
+        self.solves = 0
+        self.heartbeat = time.monotonic()
+        self._ex = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix=f"fleet-worker-{worker_id}")
+
+    def _run(self, batch):
+        out = self.solve_fn(batch)
+        self.heartbeat = time.monotonic()
+        self.solves += 1
+        return out
+
+    def solve(self, batch, timeout: Optional[float] = None):
+        self.heartbeat = time.monotonic()
+        fut = self._ex.submit(self._run, batch)
+        try:
+            return fut.result(timeout)
+        except concurrent.futures.TimeoutError:
+            fut.cancel()
+            raise WorkerTimeout(
+                f"worker {self.worker_id} exceeded {timeout}s solve "
+                "timeout") from None
+
+    def alive(self, heartbeat_timeout: Optional[float]) -> bool:
+        if heartbeat_timeout is None:
+            return True
+        return time.monotonic() - self.heartbeat <= heartbeat_timeout
+
+    def close(self) -> None:
+        self._ex.shutdown(wait=False)
+
+
+class SupervisorStats:
+    """Lifetime counters the service folds into :class:`FleetMetrics`."""
+
+    def __init__(self):
+        self.dispatches = 0
+        self.failures = 0
+        self.retries = 0
+        self.restarts = 0
+
+    def as_dict(self) -> dict:
+        return {"dispatches": self.dispatches, "failures": self.failures,
+                "retries": self.retries, "restarts": self.restarts}
+
+
+class Supervisor:
+    """Dispatch solve groups to a supervised worker pool.
+
+    ``solve_fn`` is the actual group solver (the service binds it to
+    ``batched_min_period`` on its backend).  ``worker_cls`` picks the actor
+    flavor; ``workers`` the pool width (all workers run the same pure
+    function, so width only affects liveness, never results).  A failed
+    dispatch is retried up to ``max_attempts`` total attempts with
+    exponential backoff; timed-out or heartbeat-stale workers are closed and
+    replaced (counted in ``stats.restarts``).  ``sleep`` is injectable so
+    tests can assert the backoff schedule without waiting it out.
+    """
+
+    def __init__(self, solve_fn: Callable, *, workers: int = 1,
+                 worker_cls=InlineWorker, max_attempts: int = 2,
+                 timeout: Optional[float] = None,
+                 backoff_base: float = 0.01, backoff_max: float = 1.0,
+                 heartbeat_timeout: Optional[float] = None,
+                 sleep: Callable = time.sleep):
+        if workers < 1:
+            raise ValueError(f"need at least one worker, got {workers}")
+        if max_attempts < 1:
+            raise ValueError(f"max_attempts must be >= 1, got {max_attempts}")
+        self.solve_fn = solve_fn
+        self.worker_cls = worker_cls
+        self.max_attempts = int(max_attempts)
+        self.timeout = timeout
+        self.backoff_base = float(backoff_base)
+        self.backoff_max = float(backoff_max)
+        self.heartbeat_timeout = heartbeat_timeout
+        self.sleep = sleep
+        self.stats = SupervisorStats()
+        self._next_id = 0
+        self.pool = [self._spawn() for _ in range(workers)]
+        self._rr = 0
+
+    def _spawn(self):
+        w = self.worker_cls(self.solve_fn, worker_id=self._next_id)
+        self._next_id += 1
+        return w
+
+    def _restart(self, idx: int) -> None:
+        self.pool[idx].close()
+        self.pool[idx] = self._spawn()
+        self.stats.restarts += 1
+
+    def solve(self, batch):
+        """Solve one group, supervising the worker.  Returns the worker's
+        result list; raises :class:`WorkerFailed` after ``max_attempts``
+        failed attempts (the service then degrades to scalar fallback)."""
+        delay = self.backoff_base
+        last: Optional[BaseException] = None
+        for attempt in range(self.max_attempts):
+            idx = self._rr % len(self.pool)
+            self._rr += 1
+            worker = self.pool[idx]
+            if not worker.alive(self.heartbeat_timeout):
+                self._restart(idx)
+                worker = self.pool[idx]
+            self.stats.dispatches += 1
+            try:
+                return worker.solve(batch, timeout=self.timeout)
+            except Exception as e:  # noqa: BLE001 — supervise, don't die
+                self.stats.failures += 1
+                last = e
+                if isinstance(e, WorkerTimeout) or \
+                        not worker.alive(self.heartbeat_timeout):
+                    self._restart(idx)
+                if attempt + 1 < self.max_attempts:
+                    self.stats.retries += 1
+                    if delay > 0:
+                        self.sleep(delay)
+                    delay = min(delay * 2 if delay > 0 else delay,
+                                self.backoff_max)
+        raise WorkerFailed(
+            f"solve group failed after {self.max_attempts} attempts") from last
+
+    def close(self) -> None:
+        for w in self.pool:
+            w.close()

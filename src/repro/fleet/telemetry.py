@@ -93,6 +93,47 @@ class Trace:
 
 
 # ---------------------------------------------------------------------------
+# Wire codec (the write-ahead journal's record payload)
+# ---------------------------------------------------------------------------
+
+_EVENT_TYPES = {cls.__name__: cls
+                for cls in (StageTimings, StageDrift, PodCountChange,
+                            PodFailure)}
+
+
+def event_to_wire(ev) -> list:
+    """``[type_name, field_dict]`` with only JSON scalars: the journal's
+    payload format.  Floats survive JSON exactly (shortest-repr round-trip),
+    so a replayed event is bit-identical to the applied one."""
+    cls = type(ev).__name__
+    if isinstance(ev, StageTimings):
+        return [cls, {"instance": int(ev.instance),
+                      "times": [float(t) for t in ev.times]}]
+    if isinstance(ev, StageDrift):
+        return [cls, {"instance": int(ev.instance), "stage": int(ev.stage),
+                      "factor": float(ev.factor)}]
+    if isinstance(ev, PodCountChange):
+        return [cls, {"instance": int(ev.instance),
+                      "num_pods": int(ev.num_pods)}]
+    if isinstance(ev, PodFailure):
+        return [cls, {"instance": int(ev.instance), "pod": int(ev.pod)}]
+    raise TypeError(f"unknown fleet event {cls}")
+
+
+def event_from_wire(obj):
+    """Inverse of :func:`event_to_wire`."""
+    try:
+        name, fields = obj
+        cls = _EVENT_TYPES[name]
+    except (ValueError, TypeError, KeyError):
+        raise ValueError(f"malformed wire event {obj!r}") from None
+    if cls is StageTimings:
+        return StageTimings(int(fields["instance"]),
+                            tuple(float(t) for t in fields["times"]))
+    return cls(**fields)
+
+
+# ---------------------------------------------------------------------------
 # Fleet + trace synthesis
 # ---------------------------------------------------------------------------
 

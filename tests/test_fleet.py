@@ -372,3 +372,65 @@ def test_sample_tokens_low_temperature_approaches_greedy():
     draws = [int(sample_tokens(logits, rng, greedy=False, temperature=1e-4)[0])
              for _ in range(50)]
     assert all(d == 1 for d in draws)
+
+
+# ---------------------------------------------------------------------------
+# Fail-fast construction + bounded plan cache (PR-8 satellites)
+# ---------------------------------------------------------------------------
+
+def test_init_validates_knobs_fail_fast():
+    wl, pf = gen_instance("E2", 8, 4, 0)
+    with pytest.raises(ValueError, match="unknown backend"):
+        ReplanService([(wl, pf)], backend="cuda")
+    with pytest.raises(ValueError, match="solve_deadline"):
+        ReplanService([(wl, pf)], solve_deadline=-1.0)
+    with pytest.raises(ValueError, match="reliability_floor"):
+        ReplanService([(wl, pf)], reliability_floor=1.5)
+    with pytest.raises(ValueError, match="plan_cache_cap"):
+        ReplanService([(wl, pf)], plan_cache_cap=0)
+    with pytest.raises(ValueError, match="quarantine_after"):
+        ReplanService([(wl, pf)], quarantine_after=0)
+
+
+def test_plan_cache_default_cap_never_evicts():
+    """The default LRU cap sits far above the standard traces' distinct
+    problem count: zero evictions, and the hit-rate + published plans are
+    identical to an unbounded cache."""
+    pairs, _, chaos = _chaos_fleet()
+    capped = ReplanService(pairs)                       # default cap
+    unbounded = ReplanService(pairs, plan_cache_cap=None)
+    capped.run_trace(chaos)
+    unbounded.run_trace(chaos)
+    assert capped.plan_cache.evictions == 0
+    assert capped.metrics.cache_evictions == 0
+    assert capped.metrics.dedup_hit_rate() == unbounded.metrics.dedup_hit_rate()
+    assert capped.metrics.warm_hits == unbounded.metrics.warm_hits
+    assert capped.fleet_digest() == unbounded.fleet_digest()
+
+
+def test_plan_cache_tiny_cap_evicts_but_stays_bit_identical():
+    """Eviction pressure costs re-solves, never correctness: a 2-entry cache
+    publishes the same plans as an unbounded one (exact-bytes signatures)."""
+    pairs, _, chaos = _chaos_fleet()
+    tiny = ReplanService(pairs, plan_cache_cap=2)
+    ref = ReplanService(pairs, plan_cache_cap=None)
+    tiny.run_trace(chaos)
+    ref.run_trace(chaos)
+    assert tiny.plan_cache.evictions > 0
+    # metrics count per-tick evictions; the cache counter also includes the
+    # initial (pre-metrics) fleet planning
+    assert 0 < tiny.metrics.cache_evictions <= tiny.plan_cache.evictions
+    assert len(tiny.plan_cache) <= 2
+    assert tiny.metrics.solves >= ref.metrics.solves   # evictions re-solve
+    assert tiny.fleet_digest() == ref.fleet_digest()
+
+
+def test_plan_cache_lru_order_touches_on_hit():
+    from repro.fleet.service import _PlanCache
+    c = _PlanCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.lookup("a") == 1        # touch "a": now "b" is oldest
+    c.put("c", 3)
+    assert c.evictions == 1
+    assert "b" not in c and "a" in c and "c" in c
