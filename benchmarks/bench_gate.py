@@ -13,6 +13,8 @@ string; this gate turns those into hard CI failures:
      scalar reference, and the span-bucketed fused warm path must stay
      within a small factor of numpy-batched on every campaign row (the
      static-grid tax this PR removed would show up here as a multiple).
+     The sharded SPMD rows must report bit-identical outputs, and the
+     8-forced-host-device row must clear the scaling-efficiency floor.
   4. **Bucket-trace cap** — large-grid rows record their bucket-trace count;
      it must stay within the O(log n) budget they also record.
   5. **Fleet service floors** — the ``fleet_replan_*`` rows (burst-trace
@@ -42,6 +44,8 @@ REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
 REQUIRED_PREFIXES = (
     "campaign_batched_",
     "campaign_fused_",
+    "campaign_sharded_1dev_",
+    "campaign_sharded_8dev_",
     "campaign_fused_h4scan_",
     "campaign_fused_bucketed_warm_",
     "campaign_fused_bucketed_cold_nocache_",
@@ -64,6 +68,14 @@ REQUIRED_PREFIXES = (
 # warm span-bucketed fused may trail numpy-batched by at most this factor on
 # CPU (measured ~1.0-1.3x either way; the pre-bucketing tax was 2.5-10x)
 FUSED_VS_BATCHED_FLOOR = 0.4
+
+# sharded SPMD engine: warm time through the shard_map engine at 8 forced
+# host devices must reach >= this fraction of the fused single-program time
+# (shards share the host's compute, so ideal scaling = fused time; measured
+# ~0.78 at n=20 p=100 — the floor trips on SPMD overhead regressions, not
+# runner noise).  On real multi-chip hardware efficiency e reads as e x D
+# throughput scaling.
+SHARDED_SCALING_FLOOR = 0.6
 
 # fleet service floors on the standard/quick burst traces (measured 0.86 full
 # / 0.68 quick hit-rate and ~6800/~3900 replans/s locally; the floors are set
@@ -95,13 +107,19 @@ def _fail(msgs: list, msg: str) -> None:
     msgs.append(msg)
 
 
-def check(bench: dict, baseline: dict = None, tolerance: float = 1.6) -> list:
-    """Return a list of failure strings (empty = gate passes)."""
+def check(bench: dict, baseline: dict = None, tolerance: float = 1.6,
+          required: tuple = None) -> list:
+    """Return a list of failure strings (empty = gate passes).
+
+    ``required`` overrides :data:`REQUIRED_PREFIXES` — partial bench runs
+    (e.g. the multi-device CI job, which only re-runs planner_bench) pass
+    the prefixes they DO produce via ``--require-prefix``; every
+    value/floor check still applies to whatever rows are present."""
     fails: list = []
     rows = {k: v for k, v in bench.items() if not k.startswith("_")}
 
     # 1. row presence
-    for prefix in REQUIRED_PREFIXES:
+    for prefix in (REQUIRED_PREFIXES if required is None else required):
         if not any(k.startswith(prefix) for k in rows):
             _fail(fails, f"missing benchmark row with prefix {prefix!r}")
 
@@ -126,6 +144,25 @@ def check(bench: dict, baseline: dict = None, tolerance: float = 1.6) -> list:
                          f"{FUSED_VS_BATCHED_FLOOR}x) — static-grid-tax "
                          "regression")
 
+    # 3b. sharded SPMD engine: bit-identity is a correctness contract on
+    # every sharded row; the 8-device row must clear the scaling floor
+    for k, v in rows.items():
+        if k.startswith("campaign_sharded_"):
+            if v.get("identical_outputs") is not True:
+                _fail(fails, f"{k}: identical_outputs="
+                             f"{v.get('identical_outputs')!r} — sharded "
+                             "engine output diverged from fused")
+            if k.startswith("campaign_sharded_8dev_"):
+                eff = v.get("scaling_efficiency")
+                if eff is None or eff < SHARDED_SCALING_FLOOR:
+                    _fail(fails, f"{k}: scaling_efficiency={eff!r} below "
+                                 f"floor {SHARDED_SCALING_FLOOR} at "
+                                 f"{v.get('devices')!r} devices — SPMD "
+                                 "overhead regression")
+                if v.get("devices", 0) < 8:
+                    _fail(fails, f"{k}: devices={v.get('devices')!r} — the "
+                                 "8-device row did not run on >= 8 devices")
+
     # 4. bucket-trace cap on rows that record it
     for k, v in rows.items():
         if "bucket_traces" in v and "bucket_trace_budget" in v:
@@ -146,6 +183,17 @@ def check(bench: dict, baseline: dict = None, tolerance: float = 1.6) -> list:
             if rps is None or rps < FLEET_REPLANS_PER_SEC_FLOOR:
                 _fail(fails, f"{k}: replans_per_sec={rps!r} below floor "
                              f"{FLEET_REPLANS_PER_SEC_FLOOR}")
+        if k.startswith("fleet_replan_latency"):
+            n_lat = v.get("latency_samples")
+            if not n_lat:
+                _fail(fails, f"{k}: latency_samples={n_lat!r} — a run that "
+                             "measured no per-request latencies cannot pass "
+                             "as a fast one")
+            elif v.get("p50_latency_us") is None or v.get("p99_latency_us") is None:
+                _fail(fails, f"{k}: non-finite latency percentiles "
+                             f"(p50={v.get('p50_latency_us')!r}, "
+                             f"p99={v.get('p99_latency_us')!r}) over "
+                             f"{n_lat} samples")
 
     # 5b. chaos-trace robustness: zero invalid publishes, bounded recovery
     for k, v in rows.items():
@@ -226,11 +274,17 @@ def main() -> int:
                     help="previous BENCH_planner.json to gate warm fused "
                          "rows against (same _meta.mode only)")
     ap.add_argument("--tolerance", type=float, default=1.6)
+    ap.add_argument("--require-prefix", action="append", default=None,
+                    metavar="PREFIX",
+                    help="replace the built-in required-row prefixes "
+                         "(repeatable; for partial bench runs)")
     args = ap.parse_args()
     bench = json.loads(pathlib.Path(args.bench).read_text())
     baseline = (json.loads(pathlib.Path(args.baseline).read_text())
                 if args.baseline else None)
-    fails = check(bench, baseline, args.tolerance)
+    fails = check(bench, baseline, args.tolerance,
+                  required=(tuple(args.require_prefix)
+                            if args.require_prefix else None))
     for k in sorted(bench):
         if k.startswith("_"):
             continue
@@ -239,10 +293,13 @@ def main() -> int:
                                     "dispatches", "bucket_traces",
                                     "cache_speedup", "vs_numpy",
                                     "dedup_hit_rate", "replans_per_sec",
+                                    "latency_samples",
                                     "invalid_published", "max_recovery_ticks",
                                     "digest_match", "max_replayed_ticks",
                                     "quarantined_problems",
-                                    "min_reliability_gain")
+                                    "min_reliability_gain",
+                                    "devices", "scaling_efficiency",
+                                    "vs_fused")
                   if f in v}
         if extras:
             print(f"  {k}: {extras}")

@@ -210,7 +210,8 @@ def _check_claims(exps, ns, ps, results, thr) -> list:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--engine", choices=("batched", "fused", "scalar", "auto"),
+    ap.add_argument("--engine",
+                    choices=("batched", "fused", "sharded", "scalar", "auto"),
                     default="batched",
                     help="campaign engine; 'auto' picks scalar/batched/fused "
                          "per (n, p) from the measured crossover table "

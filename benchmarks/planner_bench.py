@@ -378,6 +378,105 @@ def image_family_campaign(quick: bool = False) -> list:
                                    "image_family_")
 
 
+def sharded_campaign(quick: bool = False) -> list:
+    """The shard_map SPMD campaign engine (``backend="sharded"``) vs the
+    fused single-device engine it wraps, bit-identity asserted both times.
+
+    Two measurements:
+
+    - ``campaign_sharded_1dev_*`` — in-process on the default mesh (usually
+      one device): the degenerate mesh must stay bit-identical to fused and
+      close to it in warm time.
+    - ``campaign_sharded_8dev_*`` — a FRESH subprocess under
+      ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the README
+      "scaling out" recipe) timing the same campaign warm through both
+      engines.  On forced host devices every shard shares the host's
+      compute, so IDEAL 8-device scaling is elapsed time equal to the fused
+      single-program time; ``scaling_efficiency = fused_warm / sharded_warm``
+      is the fraction of that ideal the engine achieves — what it loses to
+      SPMD overhead (batch padding, per-shard dispatch, per-shard while-loop
+      divergence).  On real multi-chip hardware the same per-shard programs
+      run concurrently, so efficiency e here reads as e x D throughput
+      scaling.  ``bench_gate.py`` floors the 8-device efficiency at 0.6 and
+      requires ``identical_outputs`` on both rows.
+    """
+    exps = ("E1", "E2", "E3", "E4")
+
+    # in-process, default mesh; warm BOTH engines at this exact campaign
+    # signature before timing (the grids campaign_speedup traced use
+    # different pair/bound counts, so its cache entries don't apply)
+    from repro.core import sharded as sharded_mod
+
+    n1, p1 = 10, 10
+    kw1 = dict(n_pairs=4, n_bounds=4, h4_iters=4, include_h4=True)
+    run_campaign(exps, n1, p1, backend="fused", **kw1)     # cold: traces
+    run_campaign(exps, n1, p1, backend="sharded", **kw1)   # cold: traces
+    t0 = time.perf_counter()
+    ref = run_campaign(exps, n1, p1, backend="fused", **kw1)
+    us_f1 = (time.perf_counter() - t0) * 1e6
+    t0 = time.perf_counter()
+    shd = run_campaign(exps, n1, p1, backend="sharded", **kw1)
+    us_s1 = (time.perf_counter() - t0) * 1e6
+    for e in exps:
+        assert summarize_experiment(ref[e]) == summarize_experiment(shd[e]), e
+    d1 = sharded_mod.device_count()
+
+    # fresh subprocess with 8 forced host devices; warm best-of-reps both
+    # engines back to back so they see the same machine state
+    n, p = 20, 100
+    pairs, nb, iters, reps = (12, 8, 6, 3) if quick else (24, 8, 6, 5)
+    child = (
+        "import time\n"
+        "import jax\n"
+        "from repro.sim.experiments import run_campaign, summarize_experiment\n"
+        f"exps = {exps!r}\n"
+        f"kw = dict(n_pairs={pairs}, n_bounds={nb}, h4_iters={iters},\n"
+        "          include_h4=True)\n"
+        f"n, p = {n}, {p}\n"
+        "run_campaign(exps, n, p, backend='fused', **kw)\n"
+        "run_campaign(exps, n, p, backend='sharded', **kw)\n"
+        "tf = ts = float('inf')\n"
+        f"for _ in range({reps}):\n"
+        "    t0 = time.perf_counter()\n"
+        "    f = run_campaign(exps, n, p, backend='fused', **kw)\n"
+        "    tf = min(tf, time.perf_counter() - t0)\n"
+        "    t0 = time.perf_counter()\n"
+        "    s = run_campaign(exps, n, p, backend='sharded', **kw)\n"
+        "    ts = min(ts, time.perf_counter() - t0)\n"
+        "ident = all(summarize_experiment(f[e]) == summarize_experiment(s[e])\n"
+        "            for e in exps)\n"
+        "print('DEVICES=%d' % len(jax.devices()))\n"
+        "print('FUSED_US=%.0f' % (tf * 1e6))\n"
+        "print('SHARDED_US=%.0f' % (ts * 1e6))\n"
+        "print('IDENTICAL=%d' % ident)\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO_ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env.pop("JAX_COMPILATION_CACHE_DIR", None)
+    out = subprocess.run([sys.executable, "-c", child], capture_output=True,
+                         text=True, env=env, check=True)
+    vals = dict(line.split("=", 1) for line in out.stdout.splitlines()
+                if "=" in line)
+    devices = int(vals["DEVICES"])
+    us_f8, us_s8 = float(vals["FUSED_US"]), float(vals["SHARDED_US"])
+    identical = bool(int(vals["IDENTICAL"]))
+    eff = us_f8 / us_s8
+    return [
+        (f"campaign_sharded_1dev_E1-E4_n{n1}p{p1}", us_s1,
+         f"warm, {d1}-device mesh; fused_us={us_f1:.0f}, identical outputs",
+         {"devices": d1, "fused_us": us_f1, "vs_fused": us_f1 / us_s1,
+          "identical_outputs": True}),
+        (f"campaign_sharded_8dev_E1-E4_n{n}p{p}", us_s8,
+         f"warm, {devices} forced host devices; fused_us={us_f8:.0f}, "
+         f"scaling_efficiency={eff:.3f} of ideal (shards share the host), "
+         f"identical outputs",
+         {"devices": devices, "fused_us": us_f8, "scaling_efficiency": eff,
+          "identical_outputs": identical}),
+    ]
+
+
 def fused_h4_bisection(quick: bool = False) -> list:
     """The fused ``lax.scan`` H4 bisection (one dispatch per row-chunk for
     the WHOLE binary search) vs the host-driven probe loop it replaced
@@ -492,6 +591,7 @@ def run(quick: bool = False) -> list:
     rows += campaign_speedup(quick=quick)
     rows += fused_large_grid(quick=quick)
     rows += image_family_campaign(quick=quick)
+    rows += sharded_campaign(quick=quick)
     rows += fused_h4_bisection(quick=quick)
     rows += fused_bucketed_cold_start(quick=quick)
     rows += split_score_pallas(quick=quick)

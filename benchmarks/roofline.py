@@ -1,4 +1,4 @@
-"""Roofline analysis from the dry-run artifacts (deliverable g).
+"""Roofline analysis: dry-run artifacts + the Pallas split-score kernels.
 
 Per (arch x shape x mesh) cell, derive the three roofline terms from the
 per-device partitioned HLO (loop-aware parse, see repro.launch.hlo_analysis):
@@ -13,6 +13,13 @@ bound max(terms), MODEL_FLOPS (analytic useful flops) and the usefulness
 ratio MODEL_FLOPS / HLO_FLOPs, and the roofline fraction
 compute_term / max(terms) (the score: 1.0 = compute-bound at peak).
 
+Beyond the dryrun-JSON path, :func:`analyze_kernels` puts the planner's OWN
+hot kernels on the roofline: it compiles the ``pl.pallas_call`` split-score
+kernels of ``repro.kernels.split_score`` at campaign-representative shapes,
+reads flops / bytes-accessed from XLA's cost analysis of the program that
+actually executes, times it, and reports arithmetic intensity, the roofline
+step-time bound, and the achieved fraction of that bound.
+
 Reads results/dryrun/*.json; writes results/roofline.csv and prints a table.
 """
 
@@ -21,6 +28,10 @@ from __future__ import annotations
 import argparse
 import json
 import pathlib
+import re
+import time
+
+import numpy as np
 
 PEAK_FLOPS = 197e12        # bf16 per chip
 HBM_BW = 819e9             # bytes/s per chip
@@ -30,8 +41,22 @@ DRYRUN = pathlib.Path(__file__).resolve().parent.parent / "results" / "dryrun"
 OUT = pathlib.Path(__file__).resolve().parent.parent / "results" / "roofline.csv"
 
 
+def mesh_chips(mesh, devices=None) -> int:
+    """Chip count of a mesh tag: the product of its ``x``-separated dims
+    (``"pod16x16"`` -> 256, ``"pod2x16x16"`` -> 512, ``"4x8"`` -> 32),
+    falling back to the record's device count when the tag has no dims.
+    Every mesh derives uniformly — no hardcoded per-name constants."""
+    dims = re.findall(r"\d+", str(mesh or ""))
+    if dims:
+        chips = 1
+        for d in dims:
+            chips *= int(d)
+        return chips
+    return int(devices) if devices else 1
+
+
 def analyze_record(rec: dict) -> dict:
-    chips = rec["devices"] if rec["mesh"] != "pod16x16" else 256
+    chips = mesh_chips(rec.get("mesh"), rec.get("devices"))
     hlo = rec["hlo"]
     compute = hlo["dot_flops"] / PEAK_FLOPS
     memory = hlo["bytes_accessed"] / HBM_BW
@@ -67,8 +92,91 @@ def load_all(dryrun_dir=DRYRUN) -> list:
     return rows
 
 
+def _cost_analysis(compiled) -> dict:
+    """Normalize ``compiled.cost_analysis()`` across jax versions (dict, or a
+    one-element list of dicts)."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost or {})
+
+
+def analyze_kernels(rows_a: int = 128, n_stages: int = 64,
+                    repeats: int = 5) -> list:
+    """Roofline the Pallas split-score kernels from REAL cost analysis.
+
+    Compiles :func:`repro.kernels.split_score.score_2way_pallas` /
+    ``score_3way_pallas`` at a campaign-representative shape (``rows_a``
+    lockstep rows, worst-interval span ``n_stages``), reads flops and
+    bytes-accessed from XLA's cost analysis of the compiled program (the one
+    that actually executes — interpret-mode emulation on CPU, native on
+    TPU/GPU), times it, and reports per kernel: arithmetic intensity, the
+    roofline step-time bound ``max(flops/PEAK, bytes/HBM_BW)``, and the
+    achieved fraction of that bound.  Returns dicts shaped like
+    :func:`analyze_record` rows so they share the CSV/table.
+    """
+    try:
+        import jax
+        from repro.kernels.split_score import (pair_need, score_2way_pallas,
+                                               score_3way_pallas)
+    except Exception as e:  # pragma: no cover - jax is baked into the image
+        return [{"arch": "kernel", "shape": "split_score", "mesh": "local",
+                 "dominant": "FAILED", "error": str(e)[:80]}]
+    jax.config.update("jax_enable_x64", True)
+    rng = np.random.default_rng(0)
+    A, n = int(rows_a), int(n_stages)
+    out = []
+
+    def measure(name, fn, args, kwargs):
+        flat = lambda: jax.block_until_ready(fn(*args, **kwargs))
+        flat()                                   # compile + warm
+        times = []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            flat()
+            times.append(time.perf_counter() - t0)
+        measured = float(np.median(times))
+        lowered = jax.jit(lambda *a: fn(*a, **kwargs)).lower(*args)
+        cost = _cost_analysis(lowered.compile())
+        flops = float(cost.get("flops", 0.0))
+        byts = float(cost.get("bytes accessed", 0.0))
+        compute = flops / PEAK_FLOPS
+        memory = byts / HBM_BW
+        bound = max(compute, memory)
+        out.append({
+            "arch": "kernel", "shape": name, "mesh": "local",
+            "compute_s": compute, "memory_s": memory, "collective_s": 0.0,
+            "dominant": "compute" if compute >= memory else "memory",
+            "bound_s": bound,
+            "roofline_frac": compute / bound if bound else 0.0,
+            "model_flops": flops, "hlo_flops_global": flops,
+            "useful_ratio": 1.0, "temp_gb": 0.0, "arg_gb": byts / 1e9,
+            "flops": flops, "bytes": byts,
+            "intensity": flops / byts if byts else 0.0,
+            "measured_s": measured,
+            "achieved_frac": bound / measured if measured else 0.0,
+        })
+
+    # 2-way: K = n - 1 candidate cuts per row, full-span need
+    K2 = n - 1
+    pre_C = rng.random((A, K2))
+    measure("score2", score_2way_pallas,
+            (rng.random((A, 1)), pre_C, rng.random((A, 1)),
+             rng.random((A, 1)), rng.random((A, K2)), rng.random((A, 1)),
+             1.0, rng.random((A, 1)), rng.random((A, 1))),
+            {"need": np.full(A, K2)})
+    # 3-way: all r1-major (c1, c2) pairs of the full span x 6 permutations
+    K3 = (n - 1) * (n - 2) // 2
+    measure("score3", score_3way_pallas,
+            (rng.random((A, 1, 3, K3)), rng.random((A, 1, 3, K3)),
+             rng.random((A, 1, 3, K3)), rng.random((A, 6, 3, 1)),
+             rng.random((A, 1, 1))),
+            {"need": np.asarray(pair_need(np.full(A, n), K3))})
+    return out
+
+
 def run() -> list:
-    rows = load_all()
+    rows = load_all() + analyze_kernels()
     header = ("arch,shape,mesh,compute_s,memory_s,collective_s,dominant,"
               "bound_s,roofline_frac,useful_ratio,temp_gb")
     lines = [header]
@@ -82,15 +190,18 @@ def run() -> list:
             f"{r['memory_s']:.4f},{r['collective_s']:.4f},{r['dominant']},"
             f"{r['bound_s']:.4f},{r['roofline_frac']:.3f},"
             f"{r['useful_ratio']:.3f},{r['temp_gb']:.2f}")
+        extra = (f";int={r['intensity']:.1f};meas_us={r['measured_s'] * 1e6:.0f}"
+                 if "measured_s" in r else "")
         out_rows.append((f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}", 0.0,
-                         f"frac={r['roofline_frac']:.3f};dom={r['dominant']}"))
+                         f"frac={r['roofline_frac']:.3f};dom={r['dominant']}"
+                         + extra))
     OUT.parent.mkdir(parents=True, exist_ok=True)
     OUT.write_text("\n".join(lines))
     return out_rows
 
 
 def main() -> None:
-    rows = load_all()
+    rows = load_all() + analyze_kernels()
     print(f"{'arch':18s} {'shape':12s} {'mesh':12s} {'comp_s':>8s} {'mem_s':>8s} "
           f"{'coll_s':>8s} {'dominant':>10s} {'frac':>6s} {'useful':>7s} {'tmpGB':>6s}")
     for r in rows:

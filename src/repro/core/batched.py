@@ -29,9 +29,11 @@ Backends: ``backend="numpy"`` (default, bit-exact), ``backend="jax"``
 (scoring kernels under ``jax.jit`` with x64 enabled), ``backend="pallas"``
 (scoring through the masked-tile ``pl.pallas_call`` kernels of
 :mod:`repro.kernels.split_score` — interpret mode on CPU, compiled on
-TPU/GPU), or ``backend="fused"`` (the ENTIRE lockstep loop as one jitted
+TPU/GPU), ``backend="fused"`` (the ENTIRE lockstep loop as one jitted
 ``lax.while_loop`` — :mod:`repro.core.fused` — with span-bucketed candidate
-grids and O(1) host dispatches per heuristic arity).  All jit backends carry
+grids and O(1) host dispatches per heuristic arity), or ``backend="sharded"``
+(the fused loop as one ``shard_map`` SPMD program with the instance axis
+sharded across every device — :mod:`repro.core.sharded`).  All jit backends carry
 the kernels' runtime-zero FMA guard, so their split trajectories AND floats
 match the numpy reference exactly on all tested instances; numpy remains the
 contractual bit-exact reference.
@@ -194,7 +196,7 @@ class _Backend:
         self.name = name
         if name not in ("numpy", "jax", "pallas"):
             raise ValueError(f"unknown backend {name!r}; use 'numpy', 'jax', "
-                             "'pallas', or 'fused'")
+                             "'pallas', 'fused', or 'sharded'")
         self.score2, self.score3 = score_kernels(name)
         self.span_aware = name == "pallas"
 
@@ -599,6 +601,9 @@ def _run_loop(state: _BatchState, k: int, bi_mode: np.ndarray, stop: np.ndarray,
     engine (:mod:`repro.core.fused`): one jitted ``lax.while_loop`` executes
     every iteration on-device and this function returns after a single
     dispatch per row-chunk, instead of O(iterations) host round-trips.
+    ``backend="sharded"`` runs the same traced loop as one ``shard_map``
+    SPMD program with the row axis sharded across every device
+    (:mod:`repro.core.sharded`).
     """
     if backend == "fused":
         from . import fused
@@ -606,6 +611,13 @@ def _run_loop(state: _BatchState, k: int, bi_mode: np.ndarray, stop: np.ndarray,
         fused.run_fused(state, k, np.asarray(bi_mode, dtype=bool),
                         np.asarray(stop, dtype=float),
                         np.asarray(lat_limit, dtype=float), record)
+        return
+    if backend == "sharded":
+        from . import sharded
+
+        sharded.run_sharded(state, k, np.asarray(bi_mode, dtype=bool),
+                            np.asarray(stop, dtype=float),
+                            np.asarray(lat_limit, dtype=float), record)
         return
     pb = state.pb
     be = _get_backend(backend)
@@ -917,24 +929,34 @@ def batched_sp_bi_p(batch, bounds, iters: int = 40, backend: str = "numpy",
         groups = np.arange(B)
     groups = np.asarray(groups)
     lo, hi = h4_search_bounds(pb, groups)
-    if backend == "fused" and min(pb.n - 1, pb.p - 1) > 0:
+    if backend in ("fused", "sharded") and min(pb.n - 1, pb.p - 1) > 0:
         # the bisection itself is fused (one probe0 + lax.scan program per
-        # row-chunk); probe-run dedup is pointless when probes are free, so
-        # `groups` is ignored — results are identical either way.
-        return _sp_bi_p_fused(pb, p_fix, iters, lo, hi, with_mappings)
+        # row-chunk — sharded over the device mesh for backend="sharded");
+        # probe-run dedup is pointless when probes are free, so `groups`
+        # is ignored — results are identical either way.
+        return _sp_bi_p_fused(pb, p_fix, iters, lo, hi, with_mappings,
+                              backend)
     if not with_mappings:
         return _sp_bi_p_grouped(pb, p_fix, groups, iters, backend, lo, hi)
     return _sp_bi_p_rowwise(pb, p_fix, iters, backend, lo, hi, with_mappings)
 
 
-def _sp_bi_p_fused(pb, p_fix, iters, lo, hi, with_mappings):
+def _sp_bi_p_fused(pb, p_fix, iters, lo, hi, with_mappings,
+                   backend: str = "fused"):
     """H4 with the binary search fused into one jitted program per row-chunk
-    (:func:`repro.core.fused.run_fused_bisection`): O(1) host dispatches per
-    campaign instead of ~iters+1, outputs identical to the host-driven
-    probe-loop paths (asserted by tests/test_engine_equivalence.py)."""
-    from . import fused
+    (:func:`repro.core.fused.run_fused_bisection`, or its ``shard_map`` SPMD
+    twin :func:`repro.core.sharded.run_sharded_bisection`): O(1) host
+    dispatches per campaign instead of ~iters+1, outputs identical to the
+    host-driven probe-loop paths (asserted by
+    tests/test_engine_equivalence.py)."""
+    if backend == "sharded":
+        from . import sharded
 
-    r = fused.run_fused_bisection(pb, p_fix, lo, hi, iters)
+        r = sharded.run_sharded_bisection(pb, p_fix, lo, hi, iters)
+    else:
+        from . import fused
+
+        r = fused.run_fused_bisection(pb, p_fix, lo, hi, iters)
     out = []
     for i in range(pb.B):
         if not r["feas0"][i]:

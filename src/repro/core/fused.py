@@ -591,10 +591,9 @@ def _get_loop(n: int, p: int, k: int, T: int, S: int) -> Callable:
     return jax.jit(counted, donate_argnums=(10, 11, 12, 13, 14))
 
 
-@functools.lru_cache(maxsize=None)
-def _get_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
-    """The jitted FUSED H4 bisection for static shape (n, p): the probe at
-    the upper latency bound plus a ``lax.scan`` over ``iters`` probe
+def _build_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
+    """Build the UNJITTED fused H4 bisection for static shape (n, p): the
+    probe at the upper latency bound plus a ``lax.scan`` over ``iters`` probe
     iterations — each probe an inline :func:`_build_loop` run — carrying the
     per-row (lo, hi) bound state and the best-so-far probe outcome.  One
     dispatch replaces the ~iters+1 per-probe dispatches of the host-driven
@@ -603,7 +602,8 @@ def _get_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
     (latency, then period) best-probe tie-break all mirror
     ``batched._sp_bi_p_rowwise`` expression for expression.
 
-    Returned callable:
+    Returned callable (jitted by :func:`_get_bisect`, or sharded over the
+    row axis by ``repro.core.sharded``):
         fn(delta, s, b, zero, prefix, order, p_fix, lo0, hi0, active0)
         -> (items0, m0, sp0, per0, lat0, feas0,
             best_items, best_m, best_sp, best_per, best_lat)
@@ -618,7 +618,6 @@ def _get_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
     init_state, loop = _build_loop(n, p, 1, T, S)
 
     def fn(delta, s, b, zero, prefix, order, p_fix, lo0, hi0, active0):
-        _TRACES[0] += 1  # Python-executes only while tracing
         all_bi = jnp.ones(S, dtype=bool)
         tail = delta[:, n] / b
 
@@ -659,7 +658,22 @@ def _get_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
         return (arr0[:, :, :3], m0, sp0, per0, lat0, feas0,
                 b_it, b_m, b_sp, b_per, b_lat)
 
-    return jax.jit(fn)
+    return fn
+
+
+@functools.lru_cache(maxsize=None)
+def _get_bisect(n: int, p: int, T: int, S: int, iters: int) -> Callable:
+    """The jitted fused H4 bisection, cached per shape (see
+    :func:`_build_bisect` for the program's contract)."""
+    import jax
+
+    fn = _build_bisect(n, p, T, S, iters)
+
+    def counted(*args):
+        _TRACES[0] += 1  # Python-executes only while tracing
+        return fn(*args)
+
+    return jax.jit(counted)
 
 
 def run_fused(state, k: int, bi_mode: np.ndarray, stop: np.ndarray,

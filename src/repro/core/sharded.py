@@ -1,0 +1,290 @@
+"""Multi-device sharded campaign engine: the fused loop under ``shard_map``.
+
+The fused engine (:mod:`repro.core.fused`) runs the entire H1–H6 lockstep
+splitting loop as one jitted ``lax.while_loop`` — O(1) host dispatches — but
+on a single device.  A campaign over a replication study (seed banks x
+families x bound grids) is embarrassingly parallel across stacked instances,
+so this module shards the INSTANCE axis of that same loop across every
+available device via ``jax.sharding.Mesh`` + ``shard_map``: one SPMD program
+where each device runs the identical fused loop over its local rows.
+
+Design:
+
+  - The traced program is literally ``fused._build_loop``'s loop, wrapped in
+    ``shard_map`` over a 1-D device mesh along the row axis.  No collectives
+    are needed: rows never interact, and the only cross-row expressions in
+    the loop — the bucket-routing ``max(need)`` and the ``active.any()``
+    exit test — are intentionally evaluated PER SHARD.  Bucket choice cannot
+    change results (every bucket covering a row's span scores the same valid
+    lanes, and tie-break keys use absolute positions — see fused.py), so a
+    shard routing to a smaller bucket than its neighbors is pure savings,
+    and a shard whose rows all converge simply exits its while-loop early.
+  - Batches are padded to a device multiple with INERT rows: padding rows
+    replicate row 0's instance data but start inactive (``active0=False``),
+    so ``live`` is False for them in every iteration, they accept no splits,
+    and their state is discarded on write-back — the same trick the fused
+    engine already uses for its row-chunk padding (property-tested in
+    tests/test_engine_properties.py).
+  - Per-device rows-per-dispatch reuses :func:`fused.chunk_rows`, so the
+    per-shard lane budget matches the single-device engine and the global
+    chunk is ``chunk_rows(n, k) * num_devices``.
+
+Equivalence contract: bit-identical (``==``, not approx) to
+``backend="fused"`` — and therefore to the numpy/scalar reference — because
+each row's floats are produced by the exact same traced expressions on
+per-row data, with the same FMA guard and left-associated reductions; the
+device mesh only changes WHERE a row is computed, never what is computed.
+Asserted across the full differential harness by
+tests/test_engine_equivalence.py and on multi-device meshes by the CI job
+running under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
+Use via ``backend="sharded"`` on any :mod:`repro.core.batched` entry point,
+``engine="sharded"`` in ``repro.sim.experiments``, or
+``ReplanService(backend="sharded")`` in the fleet layer.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import numpy as np
+
+from . import fused
+from .fused import chunk_rows
+
+__all__ = ["sharded_available", "device_count", "run_sharded",
+           "run_sharded_bisection", "trace_count", "reset_trace_count",
+           "dispatch_count", "reset_dispatch_count"]
+
+# traces / dispatches of the SPMD programs, mirroring fused.py's counters
+# (the shared bucket branches still count into fused._BUCKET_TRACES).
+_TRACES = [0]
+_DISPATCHES = [0]
+
+
+def trace_count() -> int:
+    """Traces of the sharded SPMD programs since the last reset."""
+    return _TRACES[0]
+
+
+def reset_trace_count() -> None:
+    _TRACES[0] = 0
+
+
+def dispatch_count() -> int:
+    """SPMD-program dispatches since the last reset — one per global
+    row-chunk, independent of device count (the O(1)-dispatch contract
+    carries over from the fused engine)."""
+    return _DISPATCHES[0]
+
+
+def reset_dispatch_count() -> None:
+    _DISPATCHES[0] = 0
+
+
+def sharded_available() -> bool:
+    try:
+        import jax  # noqa: F401
+        from jax.experimental.shard_map import shard_map  # noqa: F401
+    except Exception:  # pragma: no cover - jax is baked into the image
+        return False
+    return True
+
+
+def device_count() -> int:
+    """Devices in the default mesh (respects
+    ``--xla_force_host_platform_device_count`` on CPU)."""
+    import jax
+
+    return len(jax.devices())
+
+
+@functools.lru_cache(maxsize=None)
+def _mesh():
+    import jax
+    from jax.sharding import Mesh
+
+    return Mesh(np.array(jax.devices()), ("i",))
+
+
+def _shard_wrap(fn: Callable, n_state_out: int, mesh) -> Callable:
+    """Wrap an unjitted per-shard program in ``shard_map`` over the row axis.
+
+    ``fn(*args) -> (*state..., per_rec, lat_rec, acc_rec, t)`` where the
+    state outputs are row-leading, the records are (T, S_local), and ``t``
+    is a per-shard scalar.  Scalar inputs (0-d) are replicated; every other
+    input is sharded along its leading axis.  The per-shard iteration count
+    comes back broadcast per-row so the host can take the global max.
+    """
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    row = P("i")
+    rec = P(None, "i")
+
+    def local(*args):
+        out = fn(*args)
+        state, trecs, t = out[:n_state_out], out[n_state_out:-1], out[-1]
+        t_rows = jnp.full((state[0].shape[0],), t, dtype=jnp.int64)
+        return (*state, *trecs, t_rows)
+
+    def specs_for(args):
+        return tuple(P() if np.ndim(a) == 0 else row for a in args)
+
+    def wrapped(*args):
+        _TRACES[0] += 1  # Python-executes only while tracing
+        body = shard_map(local, mesh=mesh, in_specs=specs_for(args),
+                         out_specs=(row,) * n_state_out + (rec,) * 3 + (row,),
+                         check_rep=False)
+        return body(*args)
+
+    return wrapped
+
+
+@functools.lru_cache(maxsize=None)
+def _get_sharded_loop(n: int, p: int, k: int, T: int, S_local: int) -> Callable:
+    """The jitted SPMD fused loop for static shape (n, p, k): per-shard rows
+    ``S_local``, global rows ``S_local * device_count()``.  SoA state buffers
+    donated, exactly like ``fused._get_loop``."""
+    import jax
+
+    _init_state, loop = fused._build_loop(n, p, k, T, S_local)
+    wrapped = _shard_wrap(loop, n_state_out=5, mesh=_mesh())
+    return jax.jit(wrapped, donate_argnums=(10, 11, 12, 13, 14))
+
+
+@functools.lru_cache(maxsize=None)
+def _get_sharded_bisect(n: int, p: int, T: int, S_local: int,
+                        iters: int) -> Callable:
+    """The jitted SPMD H4 bisection (probe0 + ``lax.scan``) — the per-shard
+    program is ``fused._build_bisect``'s, sharded over the row axis."""
+    import jax
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    fn = fused._build_bisect(n, p, T, S_local, iters)
+    mesh = _mesh()
+    row = P("i")
+
+    def wrapped(*args):
+        _TRACES[0] += 1  # Python-executes only while tracing
+        in_specs = tuple(P() if np.ndim(a) == 0 else row for a in args)
+        body = shard_map(fn, mesh=mesh, in_specs=in_specs,
+                         out_specs=(row,) * 11, check_rep=False)
+        return body(*args)
+
+    return jax.jit(wrapped)
+
+
+def run_sharded(state, k: int, bi_mode: np.ndarray, stop: np.ndarray,
+                lat_limit: np.ndarray, record: Optional[Callable] = None) -> None:
+    """Run the fused loop over ``state`` (a ``batched._BatchState``) as one
+    SPMD program per global row-chunk, sharded across all devices.  Drop-in
+    replacement for :func:`fused.run_fused` — same write-back, same record
+    replay, bit-identical floats on any device count.
+    """
+    pb = state.pb
+    B, n, p = pb.B, pb.n, pb.p
+    T = min(n - 1, p - 1)
+    if T <= 0 or not state.active.any():
+        state.active[:] = False
+        return
+    D = device_count()
+    S_local = chunk_rows(n, k)
+    S = S_local * D
+    fn = _get_sharded_loop(n, p, k, T, S_local)
+    b = np.float64(pb.b)
+    bi_mode = np.asarray(bi_mode, dtype=bool)
+    stop = np.asarray(stop, dtype=np.float64)
+    lat_limit = np.asarray(lat_limit, dtype=np.float64)
+    chunks = []  # (rows, per_rec, lat_rec, acc_rec, t_used)
+    for lo in range(0, B, S):
+        rows = np.arange(lo, min(lo + S, B))
+        pad = S - rows.size
+        # padding rows carry row 0's instance data but start INACTIVE, so
+        # they are live in no iteration and their state is never written back
+        sel = np.concatenate([rows, np.zeros(pad, dtype=np.int64)]) if pad else rows
+        act = np.zeros(S, dtype=bool)
+        act[:rows.size] = state.active[rows]
+        _DISPATCHES[0] += 1
+        # the SoA state slices are fresh fancy-index copies, safe to donate
+        out = fn(pb.delta[sel], pb.s[sel], b, np.float64(0.0),
+                 pb.prefix[sel], pb.order[sel].astype(np.int64), bi_mode[sel],
+                 stop[sel], lat_limit[sel], act,
+                 state.arr[sel], state.m[sel], state.next_idx[sel],
+                 state.lat_sum[sel], state.splits[sel])
+        (arr, m, next_idx, lat_sum, splits,
+         per_rec, lat_rec, acc_rec, t_rows) = (np.asarray(o) for o in out)
+        r = rows.size
+        state.arr[rows] = arr[:r]
+        state.m[rows] = m[:r]
+        state.next_idx[rows] = next_idx[:r]
+        state.lat_sum[rows] = lat_sum[:r]
+        state.splits[rows] = splits[:r]
+        state.active[rows] = False
+        if record is not None:
+            chunks.append((rows, per_rec[:, :r], lat_rec[:, :r],
+                           acc_rec[:, :r], int(t_rows.max())))
+    if record is None:
+        return
+    # Replay records in global lockstep order (a row's s-th accepted split
+    # lands at iteration s on every shard — see fused.run_fused).
+    t_max = max((t for *_, t in chunks), default=0)
+    for t in range(t_max):
+        rsel, pers, lats = [], [], []
+        for rows, per_rec, lat_rec, acc_rec, t_used in chunks:
+            if t >= t_used:
+                continue
+            a = acc_rec[t]
+            if a.any():
+                rsel.append(rows[a])
+                pers.append(per_rec[t][a])
+                lats.append(lat_rec[t][a])
+        if rsel:
+            record(np.concatenate(rsel), np.concatenate(pers),
+                   np.concatenate(lats))
+
+
+def run_sharded_bisection(pb, p_fix: np.ndarray, lo: np.ndarray,
+                          hi: np.ndarray, iters: int) -> dict:
+    """The fused H4 binary search (probe0 + ``lax.scan``) as one SPMD
+    program per global row-chunk — :func:`fused.run_fused_bisection` sharded
+    across the device mesh, same outputs bit-for-bit."""
+    B, n, p = pb.B, pb.n, pb.p
+    T = min(n - 1, p - 1)
+    if T <= 0:
+        raise ValueError("unsplittable shape: caller should use the host path")
+    D = device_count()
+    S_local = chunk_rows(n, 1)
+    S = S_local * D
+    fn = _get_sharded_bisect(n, p, T, S_local, int(iters))
+    b = np.float64(pb.b)
+    p_fix = np.asarray(p_fix, dtype=np.float64)
+    lo = np.asarray(lo, dtype=np.float64)
+    hi = np.asarray(hi, dtype=np.float64)
+    out = {
+        "items0": np.zeros((B, n, 3)), "m0": np.zeros(B, dtype=np.int64),
+        "sp0": np.zeros(B, dtype=np.int64), "per0": np.zeros(B),
+        "lat0": np.zeros(B), "feas0": np.zeros(B, dtype=bool),
+        "items": np.zeros((B, n, 3)), "m": np.zeros(B, dtype=np.int64),
+        "sp": np.zeros(B, dtype=np.int64), "per": np.zeros(B),
+        "lat": np.zeros(B),
+    }
+    names = ("items0", "m0", "sp0", "per0", "lat0", "feas0",
+             "items", "m", "sp", "per", "lat")
+    for lo_i in range(0, B, S):
+        rows = np.arange(lo_i, min(lo_i + S, B))
+        pad = S - rows.size
+        sel = (np.concatenate([rows, np.zeros(pad, dtype=np.int64)])
+               if pad else rows)
+        act = np.zeros(S, dtype=bool)
+        act[:rows.size] = True
+        _DISPATCHES[0] += 1
+        res = fn(pb.delta[sel], pb.s[sel], b, np.float64(0.0),
+                 pb.prefix[sel], pb.order[sel].astype(np.int64), p_fix[sel],
+                 lo[sel], hi[sel], act)
+        for name, val in zip(names, res):
+            out[name][rows] = np.asarray(val)[:rows.size]
+    return out

@@ -102,9 +102,15 @@ class FleetMetrics:
         return self.requests / self.solve_wall
 
     def latency_percentile(self, q: float) -> float:
+        """Percentile over the per-request latency samples.  An EMPTY sample
+        set returns NaN, not 0.0 — a 0 would read as "instant replans" in the
+        BENCH rows and sail through the gate's floors; NaN is unambiguous and
+        :meth:`bench_rows` turns it into an explicit 0-sample row that
+        ``bench_gate.py`` rejects.  A singleton sample is fine (every
+        percentile is that sample)."""
         if not self.latencies:
-            return 0.0
-        return float(np.percentile(np.asarray(self.latencies), q))
+            return float("nan")
+        return float(np.percentile(np.asarray(self.latencies, dtype=float), q))
 
     def mean_churn(self) -> float:
         if not self.churns:
@@ -123,6 +129,7 @@ class FleetMetrics:
             "warm_hits": self.warm_hits,
             "dedup_hit_rate": self.dedup_hit_rate(),
             "replans_per_sec": self.replans_per_sec(),
+            "latency_samples": len(self.latencies),
             "p50_latency_us": self.latency_percentile(50) * 1e6,
             "p99_latency_us": self.latency_percentile(99) * 1e6,
             "mean_churn": self.mean_churn(),
@@ -149,22 +156,36 @@ class FleetMetrics:
         }
 
     def bench_rows(self, suffix: str = "", extra: Optional[dict] = None) -> list:
-        """BENCH_planner.json rows (name, us_per_call, derived, extra)."""
+        """BENCH_planner.json rows (name, us_per_call, derived, extra).
+
+        A run that recorded ZERO per-request latency samples (e.g. a --quick
+        trace whose every tick deduped away) emits an explicit 0-sample
+        latency row with ``None`` percentiles instead of fake zeros or JSON
+        NaNs — ``bench_gate.py`` fails on it, so an empty measurement can
+        never pass as a fast one."""
         s = self.summary()
         tag = f"_{suffix}" if suffix else ""
         shared = dict(s)
         if extra:
             shared.update(extra)
+        n_lat = s["latency_samples"]
+        finite = lambda x: float(x) if np.isfinite(x) else None
+        p50, p99 = finite(s["p50_latency_us"]), finite(s["p99_latency_us"])
+        shared["p50_latency_us"] = p50
+        shared["p99_latency_us"] = p99
+        lat_derived = (f"p50={p50:.0f}us p99={p99:.0f}us "
+                       f"({n_lat} samples)" if n_lat
+                       else "NO SAMPLES — latency unmeasured")
         return [
             (f"fleet_replan_throughput{tag}",
              1e6 / s["replans_per_sec"] if s["replans_per_sec"] else None,
              f"{s['replans_per_sec']:.0f} replans/s over {s['requests']} "
              f"requests in {s['ticks']} ticks",
              shared),
-            (f"fleet_replan_latency{tag}", s["p50_latency_us"],
-             f"p50={s['p50_latency_us']:.0f}us p99={s['p99_latency_us']:.0f}us",
-             {"p50_latency_us": s["p50_latency_us"],
-              "p99_latency_us": s["p99_latency_us"]}),
+            (f"fleet_replan_latency{tag}", p50, lat_derived,
+             {"p50_latency_us": p50,
+              "p99_latency_us": p99,
+              "latency_samples": n_lat}),
             (f"fleet_replan_dedup{tag}", None,
              f"hit-rate {s['dedup_hit_rate']:.3f} "
              f"({s['requests']} requests -> {s['solves']} solves, "

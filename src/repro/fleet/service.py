@@ -94,7 +94,7 @@ from .telemetry import (PodCountChange, PodFailure, StageDrift, StageTimings,
 
 #: Engines ``batched_min_period`` accepts; validated up front so a typo fails
 #: at construction, not deep inside the first tick's solve.
-KNOWN_BACKENDS = ("numpy", "jax", "pallas", "fused")
+KNOWN_BACKENDS = ("numpy", "jax", "pallas", "fused", "sharded")
 
 #: Default LRU bound on the cross-tick plan cache.  Far above the distinct
 #: canonical problems of the standard traces (so the default-config hit-rate

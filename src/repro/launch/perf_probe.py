@@ -9,6 +9,12 @@ with HLO op_name attribution — the 'profile' of the dry-run methodology.
 
     PYTHONPATH=src python -m repro.launch.perf_probe --arch mixtral-8x7b \\
         --shape train_4k [--multi-pod] [--top 12] [--set use_pallas=True]
+
+The measured profile no longer dead-ends at stdout: :func:`probe_to_workload`
+/ :func:`probe_to_request` convert a probe's output into a planner
+``Workload`` / ``PlanRequest`` (flops/bytes/seconds normalization documented
+there), so the pipeline planner can place the PROBED model rather than the
+purely analytic one.
 """
 
 import argparse
@@ -153,7 +159,68 @@ def probe(arch: str, shape_name: str, multi_pod: bool = False,
     print(f"-- top dots ({sum(d[0] for d in dots)/1e12:.0f} TF total):")
     for d in dots[:max(top // 2, 6)]:
         print(f"  {d[0]/1e12:8.1f}TF x{d[1]:5.0f} {d[2]}")
-    return {"terms": terms, "res": res, "temp_gb": mem.temp_size_in_bytes / 1e9}
+    return {"terms": terms, "res": res,
+            "temp_gb": mem.temp_size_in_bytes / 1e9,
+            "devices": int(mesh.devices.size)}
+
+
+def probe_to_workload(probe_out: dict, arch: str, shape_name: str,
+                      smoke: bool = False, devices: int = None):
+    """Calibrate the analytic per-layer pipeline workload with a probe's
+    MEASURED totals — the bridge from a measured profile to the planner.
+
+    Units (the normalization contract, so planner outputs line up with the
+    probe's roofline terms):
+
+    - probe ``terms`` are SECONDS (per-device quantities over per-chip peak
+      rates);
+    - workload ``w`` is FLOPS per stage, ``delta`` is BYTES per boundary;
+    - :func:`repro.core.tpu_pod_platform` speeds are FLOPS/SECOND and
+      bandwidth BYTES/SECOND —
+
+    so every period/latency the planner reports on the returned workload is
+    in SECONDS, directly comparable to ``max(terms.values())``.
+
+    ``res["dot_flops"]`` / ``res["collective_bytes"]`` are PER-DEVICE
+    numbers from the partitioned HLO; they are scaled by the probe mesh's
+    device count (recorded in ``probe_out["devices"]``) back to global
+    totals, then spread over the analytic per-layer profile
+    (:func:`repro.models.registry.lm_workload`), preserving its relative
+    stage shape (encoder/decoder and hybrid-attention asymmetries) while
+    pinning the totals to what the compiled program actually does.
+    """
+    from repro.configs import get_config, get_smoke_config
+    from repro.core import make_workload
+    from repro.models.common import SHAPES
+    from repro.models.registry import lm_workload
+
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    base = lm_workload(cfg, SHAPES[shape_name])
+    devices = devices if devices is not None else int(probe_out.get("devices", 1))
+    res = probe_out["res"]
+    flops_global = float(res["dot_flops"]) * devices
+    coll_global = float(res["collective_bytes"]) * devices
+    w_total = float(base.w.sum())
+    d_total = float(base.delta.sum())
+    flop_scale = flops_global / w_total if w_total and flops_global else 1.0
+    comm_scale = coll_global / d_total if d_total and coll_global else 1.0
+    return make_workload(base.w * flop_scale, base.delta * comm_scale,
+                         name=f"{cfg.arch_id}-probed")
+
+
+def probe_to_request(probe_out: dict, arch: str, shape_name: str, pods: int,
+                     objective=None, smoke: bool = False,
+                     devices: int = None):
+    """A ready-to-solve :class:`repro.core.PlanRequest` for the probed cell:
+    the measured-calibrated workload of :func:`probe_to_workload` over a
+    ``pods``-pod TPU platform (same second/flop/byte normalization, so the
+    planned period is in seconds)."""
+    from repro.core import Objective, PlanRequest, tpu_pod_platform
+
+    wl = probe_to_workload(probe_out, arch, shape_name, smoke=smoke,
+                           devices=devices)
+    return PlanRequest(wl, tpu_pod_platform(pods),
+                       objective or Objective("period"))
 
 
 def main() -> None:

@@ -27,6 +27,10 @@ Three engines produce identical outputs (asserted by tests/test_batched.py):
     instead of O(iterations), which is what lets campaigns run
     device-resident and unlocks the large-grid (n in {80, 160}, p = 1000)
     and many-seed replication sweeps.
+  - ``engine="sharded"``: the fused campaign as one ``shard_map`` SPMD
+    program per row-chunk with the stacked-instance axis sharded across
+    every device (:mod:`repro.core.sharded`) — a whole replication study
+    scales out while staying bit-identical to the fused column.
   - ``engine="scalar"``: the per-instance reference path (one Python loop per
     instance/bound), kept as the behavioral reference in the same spirit as
     ``heuristics.reference_mode``.
@@ -64,7 +68,7 @@ N_PROCS_LARGE = (1000,)
 # sim.generators.FAMILY_SETS; every campaign entry point here takes any
 # family mix sharing (n, p).
 
-ENGINES = ("batched", "fused", "scalar", "auto")
+ENGINES = ("batched", "fused", "sharded", "scalar", "auto")
 
 # Measured engine-crossover table (2-core CPU reference box, warm jits; the
 # README's engine-selection section reproduces it).  Scalar never wins a
@@ -108,9 +112,9 @@ def _resolve_engine(engine: str, n: int, p: int) -> str:
 
 def _campaign_backend(engine: str, backend: str) -> str:
     """Map the (engine, backend) pair onto the lockstep runner's backend
-    string: the fused engine ignores the kernels-only backend knob."""
-    if engine == "fused":
-        return "fused"
+    string: the fused/sharded engines ignore the kernels-only backend knob."""
+    if engine in ("fused", "sharded"):
+        return engine
     return backend
 
 
@@ -154,7 +158,7 @@ def run_experiment(
     latency_mults = np.linspace(1.0, 3.0, n_bounds)      # x optimal latency
 
     engine = _resolve_engine(engine, n, p)
-    if engine in ("batched", "fused"):
+    if engine in ("batched", "fused", "sharded"):
         return run_campaign([exp], n, p, n_pairs=n_pairs, n_bounds=n_bounds,
                             seed0=seed0, h4_iters=h4_iters,
                             include_h4=include_h4,
@@ -374,7 +378,7 @@ def failure_thresholds(
     exps = list(exps)
     out: dict = {exp: {c: {} for c in ["H1", "H2", "H3", "H4", "H5", "H6"]}
                  for exp in exps}
-    if engine in ("batched", "fused", "auto"):
+    if engine in ("batched", "fused", "sharded", "auto"):
         # one stacked pass per n across ALL experiment families; "auto"
         # resolves per n (each n is its own campaign point)
         seeds = [seed0 + k for k in range(n_pairs)]

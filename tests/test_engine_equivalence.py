@@ -6,9 +6,12 @@ in ``repro.sim.EXPERIMENTS`` (the paper's E1-E4 and the image-processing
 study's I1-I4 — plus anything added via ``register_experiment``, which these
 tests pick up automatically) and both paper processor counts, the scalar
 per-instance path, the numpy lockstep engine, the ``backend="jax"`` kernels,
-the fully-fused span-bucketed ``backend="fused"`` engine, and the
-``backend="pallas"`` split-scoring kernels (interpret mode on CPU) must
-produce EXACTLY the same floats (==, not approx) for:
+the fully-fused span-bucketed ``backend="fused"`` engine, the
+``backend="pallas"`` split-scoring kernels (interpret mode on CPU), and the
+``backend="sharded"`` shard_map SPMD engine (degenerate one-device mesh
+here; the multi-device case runs in test_engine_properties via a
+forced-host-device subprocess) must produce EXACTLY the same floats
+(==, not approx) for:
 
   - H1-H4 split trajectories (the campaign sweep primitive),
   - the H4 binary search (including the fused ``lax.scan`` bisection),
@@ -40,7 +43,7 @@ def _jax_backends():
         import jax  # noqa: F401
     except Exception:  # pragma: no cover - jax is baked into the image
         return ()
-    return ("jax", "fused", "pallas")
+    return ("jax", "fused", "pallas", "sharded")
 
 
 ENGINE_BACKENDS = ("numpy",) + _jax_backends()
@@ -112,7 +115,8 @@ def test_fixed_latency_all_engines_identical(exp, p):
 def test_campaign_harness_engines_identical(exp):
     """The whole experiment harness (curves + thresholds + feasibility
     fractions) is byte-identical across engines, image families included."""
-    engines = ("scalar", "batched") + (("fused",) if _jax_backends() else ())
+    engines = (("scalar", "batched")
+               + (("fused", "sharded") if _jax_backends() else ()))
     outs = [summarize_experiment(run_experiment(exp, 8, 10, n_pairs=4,
                                                 n_bounds=4, engine=e))
             for e in engines]

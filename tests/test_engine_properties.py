@@ -225,6 +225,67 @@ def test_bucket_padding_lanes_inert():
         assert got == ref, code
 
 
+def test_sharded_nonmultiple_batch_pads_inertly():
+    """``backend="sharded"`` pads the stacked batch up to a device multiple
+    with inert (never-active) rows; EVERY batch size — including sizes not
+    divisible by the mesh — must match the fused engine exactly, with no
+    phantom rows in the output."""
+    pytest.importorskip("jax")
+    pairs = [_fixed_shape_instance(np.random.default_rng(s))
+             for s in range(5)]
+    for B in (1, 2, 3, 5):
+        batch = pairs[:B]
+        for code in ("H1", "H2", "H3", "H4"):
+            ref = batched_trajectories(code, batch, backend="fused")
+            got = batched_trajectories(code, batch, backend="sharded")
+            assert got == ref, (code, B)
+            assert len(got) == B, (code, B)
+
+
+def test_sharded_multidevice_bit_identical():
+    """Under 8 FORCED host devices a 13-row batch (not a multiple of 8,
+    so the engine pads 3 inert rows onto the last shard) through
+    ``backend="sharded"`` equals the numpy reference exactly — run in a
+    subprocess because the forced device count must be set before jax
+    initializes its backend."""
+    pytest.importorskip("jax")
+    import os
+    import pathlib
+    import subprocess
+    import sys
+
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    child = (
+        "import jax\n"
+        "assert len(jax.devices()) == 8, jax.devices()\n"
+        "import numpy as np\n"
+        "from repro.core.batched import batched_min_period, "
+        "batched_trajectories\n"
+        "from repro.sim import gen_instance_batch\n"
+        "batch = gen_instance_batch('I2', 9, 7, range(500, 513))\n"
+        "assert len(batch) == 13\n"
+        "for code in ('H1', 'H2', 'H3'):\n"
+        "    ref = batched_trajectories(code, batch, backend='numpy')\n"
+        "    got = batched_trajectories(code, batch, backend='sharded')\n"
+        "    assert got == ref, code\n"
+        "ref = batched_min_period(batch, backend='numpy')\n"
+        "got = batched_min_period(batch, backend='sharded')\n"
+        "for a, b in zip(got, ref):\n"
+        "    assert (a.mapping == b.mapping and a.period == b.period\n"
+        "            and a.latency == b.latency and a.splits == b.splits\n"
+        "            and a.name == b.name)\n"
+        "print('SHARDED_OK')\n"
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(repo / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    out = subprocess.run([sys.executable, "-c", child], capture_output=True,
+                         text=True, env=env, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "SHARDED_OK" in out.stdout
+
+
 # ---------------------------------------------------------------------------
 # Reliability / replication invariants (the sequel's consensus model)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,98 @@
+"""The perf-probe -> planner bridge.
+
+``repro.launch.perf_probe.probe`` measures a lowered model cell (per-device
+dot flops, bytes, collective bytes — and roofline terms in seconds); the
+adapter must turn that into a planner ``Workload``/``PlanRequest`` with the
+documented normalization: w in FLOPS, delta in BYTES, pod speeds in FLOPS/s
+and bandwidth in BYTES/s — so planned periods come out in SECONDS, the same
+unit as the probe's roofline terms.  These tests drive the adapter with a
+synthetic probe dict (the real probe lowers a full model across a forced
+512-device mesh — far too heavy for tier-1)."""
+
+import os
+
+# keep perf_probe's import-time default (512 forced host devices, meant for
+# the CLI probe) from leaking into this test process's jax backend
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import numpy as np
+import pytest
+
+from repro.launch.perf_probe import probe_to_request, probe_to_workload
+
+ARCH, SHAPE = "qwen3-4b", "decode_32k"
+
+
+def _base_workload():
+    from repro.configs import get_smoke_config
+    from repro.models.common import SHAPES
+    from repro.models.registry import lm_workload
+
+    return lm_workload(get_smoke_config(ARCH), SHAPES[SHAPE])
+
+
+def _probe_out(base, devices=8, flop_factor=2.0, comm_factor=3.0):
+    """A synthetic probe dict whose PER-DEVICE totals are the analytic
+    totals scaled by the given factors and split across ``devices``."""
+    return {
+        "terms": {"compute": 0.1, "memory": 0.2, "collective": 0.05},
+        "res": {
+            "dot_flops": flop_factor * float(base.w.sum()) / devices,
+            "bytes_accessed": 1e9,
+            "collective_bytes": comm_factor * float(base.delta.sum()) / devices,
+        },
+        "temp_gb": 1.0,
+        "devices": devices,
+    }
+
+
+def test_probe_to_workload_calibrates_totals_preserving_shape():
+    base = _base_workload()
+    wl = probe_to_workload(_probe_out(base), ARCH, SHAPE, smoke=True)
+    # totals pinned to the measured (global) numbers ...
+    assert wl.w.sum() == pytest.approx(2.0 * base.w.sum())
+    assert wl.delta.sum() == pytest.approx(3.0 * base.delta.sum())
+    # ... while the relative per-stage profile is the analytic one
+    assert np.allclose(wl.w, base.w * 2.0)
+    assert np.allclose(wl.delta, base.delta * 3.0)
+    assert wl.n == base.n
+
+
+def test_probe_to_workload_per_device_scaling():
+    """The HLO numbers are per-device: the same measured totals reported
+    from meshes of different sizes must yield proportionally different
+    global workloads."""
+    base = _base_workload()
+    wl8 = probe_to_workload(_probe_out(base, devices=8), ARCH, SHAPE,
+                            smoke=True)
+    out = _probe_out(base, devices=8)
+    out["devices"] = 16
+    wl16 = probe_to_workload(out, ARCH, SHAPE, smoke=True)
+    assert np.allclose(wl16.w, 2.0 * wl8.w)
+
+
+def test_probe_to_workload_zero_collectives_keeps_analytic_delta():
+    """A cell with no measured collectives (single-device lowering) must not
+    zero out the boundary bytes — the analytic activation sizes stand."""
+    base = _base_workload()
+    out = _probe_out(base)
+    out["res"]["collective_bytes"] = 0.0
+    wl = probe_to_workload(out, ARCH, SHAPE, smoke=True)
+    assert np.allclose(wl.delta, base.delta)
+
+
+def test_probe_to_request_plans_in_seconds():
+    """End to end: the adapter's PlanRequest solves, and the planned period
+    lands in seconds — no worse than serializing the measured workload on
+    the fastest single pod (the planner's trivial fallback)."""
+    from repro.core import period, plan_request
+    from repro.core.metrics import single_processor_mapping
+
+    base = _base_workload()
+    req = probe_to_request(_probe_out(base), ARCH, SHAPE, pods=4, smoke=True)
+    report = plan_request(req)
+    assert report.feasible
+    serial_s = period(req.workload, req.platform,
+                      single_processor_mapping(req.workload,
+                                               req.platform.fastest()))
+    assert 0.0 < report.plan.period <= serial_s

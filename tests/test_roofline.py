@@ -1,0 +1,66 @@
+"""Roofline analysis regressions.
+
+The chip count of every dry-run record must derive from the record's own
+mesh tag (or device count) — the bug this pins down was ``analyze_record``
+hardcoding ``chips = 256`` for the literal name ``"pod16x16"``, which made
+every OTHER mesh's global-flops and usefulness numbers silently wrong.
+Also smoke-checks :func:`roofline.analyze_kernels`, the path that puts the
+Pallas split-score kernels on the roofline from real XLA cost analysis.
+"""
+
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "benchmarks"))
+
+import roofline  # noqa: E402
+
+
+def test_mesh_chips_derived_from_tag():
+    assert roofline.mesh_chips("pod16x16") == 256
+    assert roofline.mesh_chips("pod2x16x16") == 512
+    assert roofline.mesh_chips("4x8") == 32
+    assert roofline.mesh_chips("pod64") == 64
+    # no dims in the tag: fall back to the record's device count, then 1
+    assert roofline.mesh_chips("local", 8) == 8
+    assert roofline.mesh_chips("", 4) == 4
+    assert roofline.mesh_chips(None, None) == 1
+
+
+def _record(mesh, devices=None):
+    rec = {"arch": "tpu", "shape": "s", "mesh": mesh, "model_flops": 4e9,
+           "hlo": {"dot_flops": 1e9, "bytes_accessed": 1e9,
+                   "collective_bytes": 0.0}}
+    if devices is not None:
+        rec["devices"] = devices
+    return rec
+
+
+@pytest.mark.parametrize("mesh,devices,chips", [
+    ("pod16x16", None, 256),
+    ("pod4x4", None, 16),       # the hardcode would have said 256
+    ("2x16x16", None, 512),
+    ("local", 8, 8),
+])
+def test_analyze_record_chips_from_record(mesh, devices, chips):
+    out = roofline.analyze_record(_record(mesh, devices))
+    assert out["hlo_flops_global"] == pytest.approx(1e9 * chips)
+    assert out["useful_ratio"] == pytest.approx(4e9 / (1e9 * chips))
+
+
+def test_analyze_kernels_real_cost_analysis():
+    """The kernel roofline rows come from XLA's cost analysis of the program
+    that actually runs: nonzero flops/bytes, a positive step-time bound, and
+    a real measured time for both split-score kernels."""
+    pytest.importorskip("jax")
+    rows = roofline.analyze_kernels(rows_a=8, n_stages=8, repeats=1)
+    assert [r["shape"] for r in rows] == ["score2", "score3"]
+    for r in rows:
+        assert r["dominant"] != "FAILED", r
+        assert r["flops"] > 0 and r["bytes"] > 0, r
+        assert r["intensity"] > 0, r
+        assert r["bound_s"] > 0 and r["measured_s"] > 0, r
+        assert 0 < r["roofline_frac"] <= 1.0, r
