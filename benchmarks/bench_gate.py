@@ -22,7 +22,11 @@ string; this gate turns those into hard CI failures:
      floor and a replans/sec floor on the standard trace; the
      ``fleet_recovery_*`` rows must show bit-identical crash-restart
      recovery (digest match, zero invalid publishes, zero quarantines on a
-     clean trace) with WAL replay bounded by the snapshot cadence.
+     clean trace) with WAL replay bounded by the snapshot cadence; the
+     ``fleet_remote_*`` rows must show subprocess workers digest-identical
+     to inline under injected mid-solve SIGKILLs, restarts bounded by the
+     injected-fault count, and a wedged SIGTERM-ignoring worker reaped by
+     SIGKILL within the solve-timeout budget.
   6. **Cross-run regression** (optional ``--baseline``) — when a baseline
      BENCH_planner.json of the SAME ``_meta.mode`` is given, warm fused
      rows must not regress more than ``--tolerance`` (default 1.6x, absorbing
@@ -62,6 +66,9 @@ REQUIRED_PREFIXES = (
     "fleet_chaos_recovery",
     "fleet_recovery_restart",
     "fleet_recovery_digest",
+    "fleet_remote_throughput",
+    "fleet_remote_restarts",
+    "fleet_remote_digest",
     "tri_criteria_",
 )
 
@@ -101,6 +108,13 @@ FLEET_MAX_RESTORE_SECONDS = 10.0
 # tri-criteria knee: never choose a LESS reliable plan than the bi-criteria
 # portfolio on the same instance (tiny negative tolerance for float noise)
 TRI_CRITERIA_GAIN_FLOOR = -1e-9
+
+# process-isolated workers: subprocess replans/sec floor.  Crossing the
+# process boundary costs JSON framing + pipe hops + injected-kill restarts,
+# so the floor is far below the in-process one (measured ~270 full / ~27
+# quick replans/s locally — quick amortizes worker spawns over far fewer
+# requests); it trips on a wedged transport, not on runner speed.
+FLEET_REMOTE_REPLANS_PER_SEC_FLOOR = 5.0
 
 
 def _fail(msgs: list, msg: str) -> None:
@@ -237,6 +251,48 @@ def check(bench: dict, baseline: dict = None, tolerance: float = 1.6,
                 _fail(fails, f"{k}: total_restore_wall_s={wall!r} exceeds "
                              f"{FLEET_MAX_RESTORE_SECONDS}s bound")
 
+    # 5e. process-isolated workers: kill-based preemption is a correctness
+    # contract — subprocess digests bit-identical to inline, zero invalid
+    # publishes, every restart attributable to an injected fault, and the
+    # wedge probe reaped within its timeout budget
+    for k, v in rows.items():
+        if k.startswith("fleet_remote_digest"):
+            if not v.get("digest_match"):
+                _fail(fails, f"{k}: subprocess fleet digest does not match "
+                             "the inline run — the wire codecs are not "
+                             "bit-identical")
+            if v.get("invalid_published") != 0:
+                _fail(fails, f"{k}: invalid_published="
+                             f"{v.get('invalid_published')!r} under injected "
+                             "worker kills (must be 0)")
+            if v.get("reaped_within_timeout") is not True:
+                _fail(fails, f"{k}: reaped_within_timeout="
+                             f"{v.get('reaped_within_timeout')!r} "
+                             f"(wall {v.get('reap_wall_s')!r}s, budget "
+                             f"{v.get('reap_budget_s')!r}s, rc "
+                             f"{v.get('wedge_returncode')!r}) — a wedged "
+                             "SIGTERM-ignoring worker was not SIGKILLed "
+                             "within the solve timeout")
+        if k.startswith("fleet_remote_restarts"):
+            restarts, ceiling = v.get("worker_restarts"), v.get("restart_ceiling")
+            if restarts is None or ceiling is None or restarts > ceiling:
+                _fail(fails, f"{k}: worker_restarts={restarts!r} exceeds the "
+                             f"injected-fault ceiling {ceiling!r} — restarts "
+                             "not attributable to injected chaos")
+            if not v.get("kills"):
+                _fail(fails, f"{k}: kills={v.get('kills')!r} — the remote "
+                             "run injected no mid-solve SIGKILLs, so the "
+                             "preemption contract went unexercised")
+            if restarts is not None and not restarts:
+                _fail(fails, f"{k}: worker_restarts=0 with injected kills — "
+                             "dead workers were never detected/replaced")
+        if k.startswith("fleet_remote_throughput"):
+            rps = v.get("replans_per_sec")
+            if rps is None or rps < FLEET_REMOTE_REPLANS_PER_SEC_FLOOR:
+                _fail(fails, f"{k}: replans_per_sec={rps!r} below floor "
+                             f"{FLEET_REMOTE_REPLANS_PER_SEC_FLOOR} — "
+                             "subprocess transport wedged")
+
     # 5c. tri-criteria knee must not lose reliability vs the bi-criteria pick
     for k, v in rows.items():
         if k.startswith("tri_criteria_") and "min_reliability_gain" in v:
@@ -299,7 +355,9 @@ def main() -> int:
                                     "quarantined_problems",
                                     "min_reliability_gain",
                                     "devices", "scaling_efficiency",
-                                    "vs_fused")
+                                    "vs_fused",
+                                    "worker_restarts", "restart_ceiling",
+                                    "kills", "reaped_within_timeout")
                   if f in v}
         if extras:
             print(f"  {k}: {extras}")

@@ -26,13 +26,25 @@ the restore wall time, the WAL replay length, and — the gated contract —
 whether the survivor's ``fleet_digest()`` is bit-identical to an
 uninterrupted run with zero invalid published ticks and zero quarantines.
 
+With ``--remote`` the same standard chaos trace is served by
+**process-isolated subprocess workers** (:class:`repro.fleet.SubprocessWorker`
+over the CRC-framed stdio transport) with seeded SIGKILLs injected mid-solve
+by :class:`repro.fleet.TransportChaos`, plus a separate wedge probe: a worker
+that ignores SIGTERM is handed a 30s in-band hang and must be reaped by the
+supervisor's SIGTERM→SIGKILL escalation within the configured solve timeout.
+The ``fleet_remote_*`` rows record throughput over the process boundary, the
+restart accounting (every restart must be attributable to an injected fault),
+and the gated contract: subprocess ``fleet_digest()`` bit-identical to the
+inline run, ``invalid_published == 0``, and ``reaped_within_timeout``.
+
 Unlike ``planner_bench.py`` (which regenerates BENCH_planner.json wholesale),
 this script MERGES its rows into the existing file so the two benchmarks can
 run independently; ``benchmarks/bench_gate.py`` requires the rows and gates
 the dedup and throughput floors.
 
     PYTHONPATH=src python benchmarks/fleet_bench.py [--quick] [--chaos]
-                                                    [--recovery] [--backend B]
+                                                    [--recovery] [--remote]
+                                                    [--backend B]
 """
 
 from __future__ import annotations
@@ -49,8 +61,8 @@ BENCH_JSON = REPO_ROOT / "BENCH_planner.json"
 
 from repro.core import sample_failures  # noqa: E402
 from repro.fleet import (ChaosSpec, Journal, ReplanService,  # noqa: E402
-                         crash_restart_run, gen_burst_trace, inject_chaos,
-                         make_fleet)
+                         TransportChaos, crash_restart_run, gen_burst_trace,
+                         inject_chaos, make_fleet, subprocess_supervisor)
 
 # The standard trace: every number fixed so the measured dedup hit-rate and
 # throughput are comparable across PRs (bench_gate floors assume this shape).
@@ -69,6 +81,13 @@ CHAOS = dict(chaos_seed=77, fail_seed=5, reliability_floor=0.98)
 # crash lands mid-snapshot-interval, one right after a cadence snapshot) and
 # snapshots every 8 ticks — so the gated max WAL replay length is <= 8.
 RECOVERY = dict(snapshot_every=8, crash_fracs=(1 / 3, 2 / 3))
+# The remote run: subprocess workers under seeded mid-solve SIGKILLs (every
+# second dispatch on average, capped), a generous solve timeout so the only
+# timeouts are injected ones, and a wedge probe whose reap budget is
+# timeout + term_grace + scheduler slack.
+REMOTE = dict(workers=2, kill_prob=0.5, kill_seed=1, max_kills=6,
+              solve_timeout=60.0, wedge_timeout=0.75, term_grace=0.2,
+              reap_slack=2.0)
 
 
 def _with_failures(pairs, seed: int) -> list:
@@ -100,14 +119,7 @@ def run(quick: bool = False, backend: str = "numpy") -> list:
 
 def run_chaos(quick: bool = False, backend: str = "numpy") -> list:
     cfg = QUICK if quick else STANDARD
-    pairs, groups = make_fleet(cfg["n_groups"], cfg["replicas"], cfg["n"],
-                               cfg["p"], seed=cfg["fleet_seed"])
-    pairs = _with_failures(pairs, CHAOS["fail_seed"])
-    trace = gen_burst_trace(groups, cfg["num_ticks"], seed=cfg["trace_seed"],
-                            n_stages=cfg["n"], initial_pods=cfg["p"],
-                            burst_prob=cfg["burst_prob"])
-    trace = inject_chaos(trace, groups, ChaosSpec(),
-                         seed=CHAOS["chaos_seed"], initial_pods=cfg["p"])
+    pairs, trace = _chaos_trace(cfg)
     svc = ReplanService(pairs, backend=backend,
                         reliability_floor=CHAOS["reliability_floor"])
     metrics = svc.run_trace(trace)
@@ -120,14 +132,7 @@ def run_chaos(quick: bool = False, backend: str = "numpy") -> list:
 
 def run_recovery(quick: bool = False, backend: str = "numpy") -> list:
     cfg = QUICK if quick else STANDARD
-    pairs, groups = make_fleet(cfg["n_groups"], cfg["replicas"], cfg["n"],
-                               cfg["p"], seed=cfg["fleet_seed"])
-    pairs = _with_failures(pairs, CHAOS["fail_seed"])
-    trace = gen_burst_trace(groups, cfg["num_ticks"], seed=cfg["trace_seed"],
-                            n_stages=cfg["n"], initial_pods=cfg["p"],
-                            burst_prob=cfg["burst_prob"])
-    trace = inject_chaos(trace, groups, ChaosSpec(),
-                         seed=CHAOS["chaos_seed"], initial_pods=cfg["p"])
+    pairs, trace = _chaos_trace(cfg)
     svc_kwargs = dict(backend=backend,
                       reliability_floor=CHAOS["reliability_floor"])
     ref = ReplanService(pairs, **svc_kwargs)
@@ -164,6 +169,122 @@ def run_recovery(quick: bool = False, backend: str = "numpy") -> list:
     ]
 
 
+def _chaos_trace(cfg):
+    pairs, groups = make_fleet(cfg["n_groups"], cfg["replicas"], cfg["n"],
+                               cfg["p"], seed=cfg["fleet_seed"])
+    pairs = _with_failures(pairs, CHAOS["fail_seed"])
+    trace = gen_burst_trace(groups, cfg["num_ticks"], seed=cfg["trace_seed"],
+                            n_stages=cfg["n"], initial_pods=cfg["p"],
+                            burst_prob=cfg["burst_prob"])
+    return pairs, inject_chaos(trace, groups, ChaosSpec(),
+                               seed=CHAOS["chaos_seed"],
+                               initial_pods=cfg["p"])
+
+
+def _wedge_probe(backend: str) -> dict:
+    """Hand a SIGTERM-ignoring worker a 30s in-band hang and time the
+    supervisor's SIGTERM→SIGKILL reap.  Returns the measured reap wall, the
+    budget it must beat, and whether the kernel kill actually landed."""
+    import time as _time
+
+    import numpy as np
+
+    from repro.core.batched import ProblemBatch
+    from repro.fleet import WorkerFailed
+
+    rng = np.random.default_rng(0)
+    pb = ProblemBatch.from_arrays(
+        rng.uniform(0.5, 2.0, (2, 8)), rng.uniform(0.1, 1.0, (2, 9)),
+        np.sort(rng.uniform(0.5, 2.0, (2, 4)))[:, ::-1].copy(), 10.0)
+    chaos = TransportChaos(wedge_prob=1.0, wedge_seconds=30.0, max_faults=1,
+                           seed=5)
+    sup = subprocess_supervisor(
+        backend=backend, workers=1, timeout=REMOTE["wedge_timeout"],
+        chaos=chaos, max_attempts=1, term_grace=REMOTE["term_grace"],
+        ignore_sigterm=True)
+    wedged = sup.pool[0]
+    t0 = _time.perf_counter()
+    try:
+        sup.solve(pb)
+        raise RuntimeError("wedge probe: the 30s hang was not injected")
+    except WorkerFailed:
+        wall = _time.perf_counter() - t0
+    sup.close()
+    budget = (REMOTE["wedge_timeout"] + REMOTE["term_grace"]
+              + REMOTE["reap_slack"])
+    return {"reap_wall_s": wall, "reap_budget_s": budget,
+            "wedge_timeout_s": REMOTE["wedge_timeout"],
+            "term_grace_s": REMOTE["term_grace"],
+            "wedge_returncode": wedged._proc.returncode,
+            "sigkills": sup.stats.sigkills,
+            "reaped_within_timeout": bool(
+                wall <= budget and wedged._proc.returncode == -9
+                and sup.stats.timeouts == 1)}
+
+
+def run_remote(quick: bool = False, backend: str = "numpy") -> list:
+    cfg = QUICK if quick else STANDARD
+    pairs, trace = _chaos_trace(cfg)
+    svc_kwargs = dict(backend=backend,
+                      reliability_floor=CHAOS["reliability_floor"])
+    ref = ReplanService(pairs, **svc_kwargs)
+    ref.run_trace(trace)
+
+    chaos = TransportChaos(kill_prob=REMOTE["kill_prob"],
+                           max_faults=REMOTE["max_kills"],
+                           seed=REMOTE["kill_seed"])
+    svc = ReplanService(pairs, **svc_kwargs)
+    svc.supervisor = subprocess_supervisor(
+        backend=backend, workers=REMOTE["workers"],
+        timeout=REMOTE["solve_timeout"], chaos=chaos, max_attempts=3,
+        backoff_base=0.0)
+    svc._sync_acct_baselines()
+    metrics = svc.run_trace(trace)
+    svc.supervisor.close()
+
+    match = svc.fleet_digest() == ref.fleet_digest()
+    reap = _wedge_probe(backend)
+    sup_stats = svc.supervisor.stats.as_dict()
+    shared = {"backend": backend, "fleet_size": len(pairs),
+              "workers": REMOTE["workers"], "kill_prob": REMOTE["kill_prob"],
+              "solve_timeout_s": REMOTE["solve_timeout"]}
+    s = metrics.summary()
+    return [
+        ("fleet_remote_throughput",
+         1e6 / s["replans_per_sec"] if s["replans_per_sec"] else None,
+         f"{s['replans_per_sec']:.0f} replans/s over {s['requests']} requests "
+         f"in {s['ticks']} ticks across the process boundary "
+         f"({sup_stats['dispatches']} dispatches)",
+         dict(shared, replans_per_sec=s["replans_per_sec"],
+              requests=s["requests"], ticks=s["ticks"],
+              dispatches=sup_stats["dispatches"])),
+        ("fleet_remote_restarts", None,
+         f"{metrics.worker_restarts} worker restarts for "
+         f"{chaos.total_faults()} injected faults "
+         f"({chaos.counts.get('kill', 0)} kills), "
+         f"{metrics.worker_timeouts} timeouts, "
+         f"{sup_stats['sigkills']} sigkill escalations",
+         dict(shared, worker_restarts=metrics.worker_restarts,
+              restart_ceiling=chaos.total_faults(),
+              injected=dict(chaos.counts),
+              kills=chaos.counts.get("kill", 0),
+              worker_timeouts=metrics.worker_timeouts,
+              solve_retries=metrics.solve_retries,
+              sigkills=sup_stats["sigkills"],
+              fallback_solves=metrics.fallback_solves)),
+        ("fleet_remote_digest", None,
+         f"subprocess fleet digest "
+         f"{'matches' if match else 'MISMATCHES'} the inline run "
+         f"({metrics.invalid_published} invalid published); wedged worker "
+         f"reaped in {reap['reap_wall_s']:.2f}s "
+         f"(budget {reap['reap_budget_s']:.2f}s, "
+         f"rc {reap['wedge_returncode']})",
+         dict(shared, digest_match=bool(match), digest=svc.fleet_digest(),
+              ref_digest=ref.fleet_digest(),
+              invalid_published=metrics.invalid_published, **reap)),
+    ]
+
+
 def merge_bench_json(rows, path: pathlib.Path = BENCH_JSON,
                      mode: str = "full") -> None:
     """Merge rows into the existing BENCH json (planner_bench owns the file
@@ -188,9 +309,14 @@ def main() -> None:
     ap.add_argument("--recovery", action="store_true",
                     help="crash/restart the journaled controller mid-trace "
                          "and emit fleet_recovery_* durability rows instead")
+    ap.add_argument("--remote", action="store_true",
+                    help="serve the chaos trace with subprocess workers "
+                         "under injected SIGKILLs and emit fleet_remote_* "
+                         "process-isolation rows instead")
     ap.add_argument("--backend", default="numpy")
     args = ap.parse_args()
-    runner = (run_recovery if args.recovery
+    runner = (run_remote if args.remote
+              else run_recovery if args.recovery
               else run_chaos if args.chaos else run)
     rows = runner(quick=args.quick, backend=args.backend)
     for name, us, derived, _ in rows:

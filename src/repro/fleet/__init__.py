@@ -30,6 +30,11 @@ Modules:
     ``ReplanService.restore``
   - :mod:`repro.fleet.supervision` — the controller/worker split: supervised
     solve workers with heartbeats, timeouts, backoff retries, and restarts
+  - :mod:`repro.fleet.transport`  — CRC-framed stdio wire protocol for
+    process-isolated workers, plus :class:`TransportChaos` wire-fault
+    injection
+  - :mod:`repro.fleet.worker_main` — the ``python -m repro.fleet.worker_main``
+    subprocess entrypoint driven by :class:`SubprocessWorker`
 """
 
 from .telemetry import (PodCountChange, PodFailure, StageDrift, StageTimings,
@@ -38,8 +43,11 @@ from .telemetry import (PodCountChange, PodFailure, StageDrift, StageTimings,
 from .signatures import (Signature, canonicalize, remap_alloc, signature,
                          span_bucket)
 from .journal import Journal, JournalError
-from .supervision import (InlineWorker, Supervisor, ThreadWorker,
-                          WorkerFailed, WorkerTimeout)
+from .transport import (FrameError, FrameReader, TransportChaos, encode_frame)
+from .supervision import (InlineWorker, SubprocessWorker, Supervisor,
+                          ThreadWorker, WorkerCrash, WorkerFailed,
+                          WorkerSolveError, WorkerTimeout,
+                          subprocess_supervisor)
 from .service import InstanceState, ReplanService
 from .metrics import FleetMetrics
 from .chaos import ChaosSpec, SimulatedCrash, crash_restart_run, inject_chaos
@@ -50,8 +58,10 @@ __all__ = [
     "event_to_wire", "event_from_wire",
     "Signature", "signature", "canonicalize", "remap_alloc", "span_bucket",
     "Journal", "JournalError",
-    "Supervisor", "InlineWorker", "ThreadWorker",
-    "WorkerFailed", "WorkerTimeout",
+    "Supervisor", "InlineWorker", "ThreadWorker", "SubprocessWorker",
+    "subprocess_supervisor",
+    "WorkerFailed", "WorkerTimeout", "WorkerCrash", "WorkerSolveError",
+    "FrameError", "FrameReader", "TransportChaos", "encode_frame",
     "ReplanService", "InstanceState",
     "FleetMetrics",
     "ChaosSpec", "inject_chaos", "SimulatedCrash", "crash_restart_run",

@@ -17,7 +17,13 @@ drift.  This module composes the unplanned kind on top of any ``Trace``:
     chosen ticks and restarts it from its journal, asserting the
     crash-safety contract end to end: the survivor finishes the trace with
     a ``fleet_digest()`` bit-identical to an uninterrupted run and zero
-    invalid published ticks.
+    invalid published ticks;
+  - **worker/transport faults** — :class:`TransportChaos` (defined in
+    :mod:`repro.fleet.transport`, re-exported here) attacks the subprocess
+    worker plane: dead-on-arrival spawns, SIGKILL mid-solve, in-band wedges,
+    and drop/corrupt/truncate/delay on the reply wire.  Telemetry chaos asks
+    "do bad *inputs* break the plan?"; transport chaos asks "do bad
+    *executors* break the controller?".
 
 Everything is driven by one seeded ``numpy`` Generator: ``inject_chaos`` is a
 pure function of (trace, groups, spec, seed), so a chaos trace replays
@@ -35,6 +41,7 @@ from typing import Sequence
 import numpy as np
 
 from .telemetry import PodCountChange, PodFailure, Trace
+from .transport import TransportChaos  # noqa: F401  (re-exported)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -57,6 +57,7 @@ class FleetMetrics:
     quarantined_problems: int = 0  # canonical problems quarantined
     solve_retries: int = 0         # supervisor retry attempts (with backoff)
     worker_restarts: int = 0       # workers replaced (timeout / stale heartbeat)
+    worker_timeouts: int = 0       # hung solves reaped/abandoned on deadline
     cache_evictions: int = 0       # plan-cache LRU evictions (cap pressure)
 
     def record_tick(self, *, requests: int, solves: int, warm_hits: int,
@@ -66,7 +67,8 @@ class FleetMetrics:
                     recoveries=(), invalid_published: int = 0,
                     quarantined_requests: int = 0, quarantine_strikes: int = 0,
                     quarantined_problems: int = 0, solve_retries: int = 0,
-                    worker_restarts: int = 0, cache_evictions: int = 0) -> None:
+                    worker_restarts: int = 0, worker_timeouts: int = 0,
+                    cache_evictions: int = 0) -> None:
         self.ticks += 1
         self.requests += requests
         self.solves += solves
@@ -88,6 +90,7 @@ class FleetMetrics:
         self.quarantined_problems += quarantined_problems
         self.solve_retries += solve_retries
         self.worker_restarts += worker_restarts
+        self.worker_timeouts += worker_timeouts
         self.cache_evictions += cache_evictions
 
     # -- aggregates -----------------------------------------------------------
@@ -152,6 +155,7 @@ class FleetMetrics:
             "quarantined_problems": self.quarantined_problems,
             "solve_retries": self.solve_retries,
             "worker_restarts": self.worker_restarts,
+            "worker_timeouts": self.worker_timeouts,
             "cache_evictions": self.cache_evictions,
         }
 

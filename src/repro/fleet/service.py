@@ -254,6 +254,7 @@ class ReplanService:
         per-tick metrics record deltas against these baselines."""
         self._seen_retries = self.supervisor.stats.retries
         self._seen_restarts = self.supervisor.stats.restarts
+        self._seen_timeouts = self.supervisor.stats.timeouts
         self._seen_evictions = self.plan_cache.evictions
 
     def _solve_group(self, pb: ProblemBatch) -> list:
@@ -499,6 +500,7 @@ class ReplanService:
         invalid = sum(not _plan_valid(st) for st in self.states)
         retries = self.supervisor.stats.retries - self._seen_retries
         restarts = self.supervisor.stats.restarts - self._seen_restarts
+        timeouts = self.supervisor.stats.timeouts - self._seen_timeouts
         evictions = self.plan_cache.evictions - self._seen_evictions
         self.metrics.record_tick(requests=requests, solves=solves,
                                  warm_hits=warm_hits, events=len(events),
@@ -513,6 +515,7 @@ class ReplanService:
                                  quarantined_problems=self._tick_quarantined,
                                  solve_retries=retries,
                                  worker_restarts=restarts,
+                                 worker_timeouts=timeouts,
                                  cache_evictions=evictions)
         self._sync_acct_baselines()
         self.tick_count += 1

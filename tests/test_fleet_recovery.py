@@ -9,15 +9,18 @@ torn-tail recovery, snapshot cadence/compaction, supervisor retry/restart
 semantics, and poison-problem quarantine.
 """
 
+import time
+
 import pytest
 
 import repro.fleet.service as svc_mod
 from repro.fleet import (ChaosSpec, InlineWorker, Journal, JournalError,
                          PodCountChange, ReplanService, SimulatedCrash,
-                         StageDrift, Supervisor, ThreadWorker, WorkerFailed,
+                         StageDrift, SubprocessWorker, Supervisor,
+                         ThreadWorker, TransportChaos, WorkerFailed,
                          WorkerTimeout, crash_restart_run, event_from_wire,
                          event_to_wire, gen_burst_trace, inject_chaos,
-                         make_fleet)
+                         make_fleet, subprocess_supervisor)
 from repro.fleet.journal import decode_record, encode_record
 
 
@@ -320,6 +323,176 @@ def test_service_results_identical_under_thread_workers():
     svc.run_trace(trace)
     assert svc.fleet_digest() == ref.fleet_digest()
     svc.supervisor.close()
+
+
+def test_supervisor_timeout_with_inline_worker_is_rejected():
+    """Deadline protection over a synchronous worker is fictional — the
+    misconfiguration must fail at construction, not silently no-op."""
+    import functools
+    with pytest.raises(ValueError, match="preempt"):
+        Supervisor(lambda b: b, timeout=1.0)
+    with pytest.raises(ValueError, match="preempt"):
+        Supervisor(lambda b: b, timeout=1.0,
+                   worker_cls=functools.partial(InlineWorker))
+    # No timeout, or a preemptable transport: fine.
+    Supervisor(lambda b: b)
+    Supervisor(lambda b: b, worker_cls=ThreadWorker, timeout=1.0).close()
+
+
+def test_supervisor_counts_timeouts_separately_from_failures():
+    def hang(batch):
+        time.sleep(0.5)
+        return ["late"]
+
+    sup = Supervisor(hang, worker_cls=ThreadWorker, max_attempts=2,
+                     timeout=0.05, backoff_base=0, sleep=lambda s: None)
+    with pytest.raises(WorkerFailed):
+        sup.solve("pb")
+    assert sup.stats.timeouts == 2 and sup.stats.failures == 0
+    # Abandoned (unkillable) threads are surfaced, not silently leaked.
+    sup.close()
+    assert sup.stats.leaked_threads == 2
+
+
+def test_thread_worker_close_cancels_queued_work():
+    ran = []
+
+    def slow(batch):
+        time.sleep(0.3)
+        ran.append(batch)
+        return [batch]
+
+    w = ThreadWorker(slow)
+    first = w._ex.submit(w._run, "running")
+    queued = w._ex.submit(w._run, "queued")
+    w.close()   # shutdown(cancel_futures=True): queued work must NOT run
+    assert queued.cancelled()
+    first.result(timeout=5)
+    assert ran == ["running"]
+
+
+# ---------------------------------------------------------------------------
+# SubprocessWorker: real process isolation, kill-based preemption
+# ---------------------------------------------------------------------------
+
+def _batch(seed=0, rows=3, n=8, p=4):
+    import numpy as np
+    from repro.core.batched import ProblemBatch
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 2.0, size=(rows, n))
+    delta = rng.uniform(0.1, 1.0, size=(rows, n + 1))
+    s = np.sort(rng.uniform(0.5, 2.0, size=(rows, p)))[:, ::-1].copy()
+    return ProblemBatch.from_arrays(w, delta, s, 10.0)
+
+
+def _inline_reference(pb):
+    from repro.core.batched import batched_min_period
+    return batched_min_period(pb, "numpy")
+
+
+@pytest.mark.slow
+def test_subprocess_worker_is_bit_identical_to_inline():
+    pb = _batch(seed=21)
+    sup = subprocess_supervisor(workers=1, timeout=60.0)
+    try:
+        assert sup.solve(pb) == _inline_reference(pb)
+    finally:
+        sup.close()
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("fault,expect_timeout", [
+    ({"kill_prob": 1.0}, False),        # SIGKILL after the request is sent
+    ({"doa_prob": 1.0}, False),         # dead before the first heartbeat
+    ({"corrupt_prob": 1.0}, False),     # reply frame fails CRC -> poisoned
+    ({"truncate_prob": 1.0}, None),     # stalled/desynced reply
+])
+def test_subprocess_fault_matrix_recovers_with_one_restart(fault,
+                                                           expect_timeout):
+    """Each injected wire fault costs exactly one worker restart and the
+    retried solve still matches the inline run bit-for-bit."""
+    pb = _batch(seed=22)
+    chaos = TransportChaos(max_faults=1, seed=13, **fault)
+    sup = subprocess_supervisor(workers=1, timeout=2.0, chaos=chaos,
+                                max_attempts=3, backoff_base=0.0,
+                                term_grace=0.2)
+    try:
+        assert sup.solve(pb) == _inline_reference(pb)
+        assert chaos.total_faults() == 1
+        assert sup.stats.restarts == 1
+        if expect_timeout is True:
+            assert sup.stats.timeouts >= 1
+        elif expect_timeout is False:
+            assert sup.stats.failures >= 1
+    finally:
+        sup.close()
+
+
+@pytest.mark.slow
+def test_wedged_solve_is_reaped_by_sigkill_within_timeout():
+    """The preemption guarantee: a wedged worker that IGNORES SIGTERM is
+    killed by the kernel within timeout + term_grace, and the hang is
+    accounted as a timeout (not a failure)."""
+    pb = _batch(seed=23)
+    chaos = TransportChaos(wedge_prob=1.0, wedge_seconds=30.0, max_faults=1,
+                           seed=5)
+    timeout, grace = 0.75, 0.2
+    sup = subprocess_supervisor(workers=1, timeout=timeout, chaos=chaos,
+                                max_attempts=1, term_grace=grace,
+                                ignore_sigterm=True)
+    wedged = sup.pool[0]
+    t0 = time.perf_counter()
+    with pytest.raises(WorkerFailed) as ei:
+        sup.solve(pb)
+    wall = time.perf_counter() - t0
+    sup.close()
+    assert isinstance(ei.value.__cause__, WorkerTimeout)
+    assert wall < timeout + grace + 2.0   # reaped, not waited out (30s wedge)
+    assert wedged._proc.returncode == -9  # SIGTERM ignored -> SIGKILL won
+    assert wedged.sigkills == 1
+    assert sup.stats.timeouts == 1 and sup.stats.failures == 0
+    assert sup.stats.sigkills == 1
+
+
+@pytest.mark.slow
+def test_dead_worker_detected_by_alive_and_replaced():
+    sup = subprocess_supervisor(workers=1, timeout=60.0)
+    try:
+        victim = sup.pool[0]
+        victim._proc.kill()
+        victim._proc.wait()
+        assert not victim.alive(None)
+        pb = _batch(seed=24)
+        assert sup.solve(pb) == _inline_reference(pb)   # replaced pre-dispatch
+        assert sup.stats.restarts == 1
+        assert sup.pool[0] is not victim
+    finally:
+        sup.close()
+
+
+@pytest.mark.slow
+def test_service_digest_identical_under_subprocess_workers_with_kills():
+    """The tentpole contract at service level: repeated SIGKILLs mid-solve
+    leave the published fleet state bit-identical to the inline run, with
+    zero invalid published ticks and every restart attributable to an
+    injected fault."""
+    pairs, trace = _small_fleet()
+    ref = ReplanService(pairs)
+    ref.run_trace(trace)
+
+    chaos = TransportChaos(kill_prob=0.5, max_faults=4, seed=1)
+    svc = ReplanService(pairs)
+    svc.supervisor = subprocess_supervisor(workers=2, timeout=60.0,
+                                           chaos=chaos, max_attempts=3,
+                                           backoff_base=0.0)
+    svc._sync_acct_baselines()
+    svc.run_trace(trace)
+    svc.supervisor.close()
+
+    assert svc.fleet_digest() == ref.fleet_digest()
+    assert svc.metrics.invalid_published == 0
+    assert chaos.counts.get("kill", 0) >= 1          # chaos actually fired
+    assert 1 <= svc.metrics.worker_restarts <= chaos.total_faults()
 
 
 # ---------------------------------------------------------------------------

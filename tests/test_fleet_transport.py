@@ -1,0 +1,248 @@
+"""Wire-protocol tests: frame codec integrity matrix + chaos determinism.
+
+Mirrors the journal CRC matrix (tests/test_fleet_recovery.py) at the frame
+layer: every corruption class — flipped payload byte, bad magic, oversize
+length field, torn frame — must be *detected* (FrameError or "incomplete"),
+never silently absorbed, and the solve/result codecs must round-trip
+bit-exactly so subprocess workers are digest-equivalent to inline ones.
+"""
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.batched import ProblemBatch, batched_min_period
+from repro.fleet.transport import (HEADER_BYTES, MAGIC, MAX_FRAME_BYTES,
+                                   FrameError, FrameReader, TransportChaos,
+                                   decode_results, decode_solve, encode_frame,
+                                   encode_results, encode_solve)
+
+
+def _batch(seed=0, rows=3, n=8, p=4):
+    rng = np.random.default_rng(seed)
+    w = rng.uniform(0.5, 2.0, size=(rows, n))
+    delta = rng.uniform(0.1, 1.0, size=(rows, n + 1))
+    s = np.sort(rng.uniform(0.5, 2.0, size=(rows, p)))[:, ::-1].copy()
+    return ProblemBatch.from_arrays(w, delta, s, 10.0)
+
+
+# ---------------------------------------------------------------------------
+# Frame codec round trip
+# ---------------------------------------------------------------------------
+
+def test_frame_round_trip():
+    reader = FrameReader()
+    payloads = [["hello", {"pid": 1, "backend": "numpy"}],
+                ["solve", {"id": 7, "w": [[1.5, 2.25]]}],
+                ["bye", {}]]
+    for p in payloads:
+        reader.feed(encode_frame(p))
+    assert [reader.next_frame() for _ in payloads] == payloads
+    assert reader.next_frame() is None
+    assert reader.buffered == 0
+
+
+def test_frame_incremental_feed_one_byte_at_a_time():
+    payload = ["result", {"id": 3, "results": [{"x": 0.1 + 0.2}]}]
+    wire = encode_frame(payload)
+    reader = FrameReader()
+    for i, b in enumerate(wire):
+        assert reader.next_frame() is None or i == len(wire)
+        reader.feed(bytes([b]))
+    assert reader.next_frame() == payload
+
+
+def test_frame_exact_float_round_trip():
+    # Shortest-repr JSON floats round-trip float64 exactly — the property
+    # the digest-identity contract rests on.
+    vals = [0.1, 1 / 3, np.nextafter(1.0, 2.0), 1e-308, 12345.6789e300]
+    payload = ["solve", {"id": 1, "w": vals}]
+    reader = FrameReader()
+    reader.feed(encode_frame(payload))
+    got = reader.next_frame()[1]["w"]
+    assert all(a == b for a, b in zip(got, vals))
+
+
+def test_frame_payload_is_canonical_json():
+    wire = encode_frame(["solve", {"b": 1, "a": 2}])
+    body = wire[HEADER_BYTES:]
+    assert body == json.dumps(json.loads(body), separators=(",", ":"),
+                              sort_keys=True).encode()
+
+
+# ---------------------------------------------------------------------------
+# Corruption matrix — every fault detected, none absorbed
+# ---------------------------------------------------------------------------
+
+def _wire(payload=None):
+    return encode_frame(payload or ["solve", {"id": 1, "w": [1.0, 2.0]}])
+
+
+def test_flipped_payload_byte_trips_crc():
+    wire = bytearray(_wire())
+    wire[HEADER_BYTES + 3] ^= 0x01
+    reader = FrameReader()
+    reader.feed(bytes(wire))
+    with pytest.raises(FrameError, match="CRC"):
+        reader.next_frame()
+
+
+def test_flipped_crc_field_trips_crc():
+    wire = bytearray(_wire())
+    wire[HEADER_BYTES - 1] ^= 0xFF
+    reader = FrameReader()
+    reader.feed(bytes(wire))
+    with pytest.raises(FrameError, match="CRC"):
+        reader.next_frame()
+
+
+def test_bad_magic_detected():
+    wire = bytearray(_wire())
+    wire[0] ^= 0xFF
+    reader = FrameReader()
+    reader.feed(bytes(wire))
+    with pytest.raises(FrameError, match="magic"):
+        reader.next_frame()
+
+
+def test_oversize_length_field_fails_fast():
+    # A corrupted length field must not leave the reader waiting on
+    # gigabytes that will never arrive.
+    import struct
+    hdr = struct.pack("<2sII", MAGIC, MAX_FRAME_BYTES + 1, 0)
+    reader = FrameReader()
+    reader.feed(hdr)
+    with pytest.raises(FrameError, match="ceiling"):
+        reader.next_frame()
+
+
+def test_short_header_and_torn_payload_are_incomplete_not_errors():
+    wire = _wire()
+    reader = FrameReader()
+    reader.feed(wire[:HEADER_BYTES - 2])   # torn header
+    assert reader.next_frame() is None
+    reader.feed(wire[HEADER_BYTES - 2:len(wire) - 3])   # torn payload
+    assert reader.next_frame() is None
+    reader.feed(wire[len(wire) - 3:])      # completion drains it
+    assert reader.next_frame() is not None
+
+
+def test_valid_json_but_wrong_shape_rejected():
+    for bad in [{"kind": "x"}, ["only-kind"], [1, {}], "str", [["a"], {}]]:
+        reader = FrameReader()
+        reader.feed(encode_frame(bad) if bad != "str"
+                    else encode_frame("str"))
+        with pytest.raises(FrameError, match="kind"):
+            reader.next_frame()
+
+
+def test_no_resync_after_poison():
+    # A good frame appended after a corrupt one must NOT be recovered:
+    # poisoned stream means replaced worker, not best-effort resync.
+    bad = bytearray(_wire())
+    bad[0] ^= 0xFF
+    reader = FrameReader()
+    reader.feed(bytes(bad) + _wire(["bye", {}]))
+    with pytest.raises(FrameError):
+        reader.next_frame()
+
+
+# ---------------------------------------------------------------------------
+# Solve / result codecs — bit-exact round trip
+# ---------------------------------------------------------------------------
+
+def test_solve_codec_rebuilds_batch_bit_identically():
+    pb = _batch(seed=3)
+    reader = FrameReader()
+    reader.feed(encode_frame(encode_solve(9, pb)))
+    kind, body = reader.next_frame()
+    assert kind == "solve" and body["id"] == 9
+    pb2 = decode_solve(body)
+    for name in ("w", "delta", "s", "prefix"):
+        a, b = getattr(pb, name), getattr(pb2, name)
+        assert a.dtype == b.dtype and np.array_equal(a, b)
+    assert pb.b == pb2.b
+    assert np.array_equal(pb.order, pb2.order)
+
+
+def test_result_codec_round_trips_solutions_exactly():
+    pb = _batch(seed=4)
+    results = batched_min_period(pb, "numpy")
+    reader = FrameReader()
+    reader.feed(encode_frame(encode_results(2, results)))
+    kind, body = reader.next_frame()
+    assert kind == "result" and body["id"] == 2
+    assert decode_results(body) == results
+
+
+# ---------------------------------------------------------------------------
+# TransportChaos
+# ---------------------------------------------------------------------------
+
+def test_chaos_zero_probabilities_is_identity():
+    chaos = TransportChaos(seed=0)
+    chunk = bytes(range(256))
+    assert chaos.mangle_chunk(chunk) == chunk
+    assert not chaos.spawn_dead_on_arrival()
+    assert not chaos.kill_mid_solve()
+    assert not chaos.wedge_solve()
+    assert chaos.total_faults() == 0
+
+
+def test_chaos_is_seed_deterministic():
+    def run(seed):
+        chaos = TransportChaos(kill_prob=0.3, corrupt_prob=0.3,
+                               drop_prob=0.2, seed=seed)
+        out = []
+        for i in range(50):
+            out.append(chaos.kill_mid_solve())
+            out.append(chaos.mangle_chunk(bytes([i]) * 64))
+        return out, dict(chaos.counts)
+
+    a, ca = run(7)
+    b, cb = run(7)
+    c, cc = run(8)
+    assert a == b and ca == cb
+    assert a != c
+
+
+def test_chaos_max_faults_caps_total_injections():
+    chaos = TransportChaos(kill_prob=1.0, corrupt_prob=1.0, max_faults=3,
+                           seed=0)
+    for _ in range(20):
+        chaos.kill_mid_solve()
+        chaos.mangle_chunk(b"xyzw")
+    assert chaos.total_faults() == 3
+
+
+def test_chaos_corrupt_flips_exactly_one_byte():
+    chaos = TransportChaos(corrupt_prob=1.0, max_faults=1, seed=5)
+    chunk = bytes(64)
+    mangled = chaos.mangle_chunk(chunk)
+    assert mangled is not None and len(mangled) == 64
+    assert sum(a != b for a, b in zip(chunk, mangled)) == 1
+
+
+def test_chaos_truncate_shortens_drop_removes():
+    chaos = TransportChaos(truncate_prob=1.0, max_faults=1, seed=6)
+    chunk = bytes(64)
+    out = chaos.mangle_chunk(chunk)
+    assert out is not None and 1 <= len(out) < 64
+    chaos = TransportChaos(drop_prob=1.0, max_faults=1, seed=6)
+    assert chaos.mangle_chunk(chunk) is None
+    assert chaos.mangle_chunk(chunk) == chunk   # capped: second passes clean
+
+
+def test_chaos_rejects_bad_probabilities():
+    with pytest.raises(ValueError):
+        TransportChaos(kill_prob=1.5)
+    with pytest.raises(ValueError):
+        TransportChaos(drop_prob=-0.1)
+    with pytest.raises(ValueError):
+        TransportChaos(max_faults=-1)
+
+
+def test_oversize_payload_refused_at_encode():
+    with pytest.raises(FrameError, match="ceiling"):
+        encode_frame(["solve", {"blob": "x" * (MAX_FRAME_BYTES + 16)}])
